@@ -1,0 +1,30 @@
+"""Shared benchmark plumbing: ``name,us_per_call,derived`` CSV rows."""
+import os
+import sys
+import time
+
+import jax
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+FAST = bool(int(os.environ.get("BENCH_FAST", "0")))
+
+
+def emit(name: str, us: float, **derived):
+    d = ";".join(f"{k}={v}" for k, v in derived.items())
+    print(f"{name},{us:.2f},{d}", flush=True)
+
+
+def timeit(fn, *args, trials: int = 3, warmup: int = 1) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    best = float("inf")
+    for _ in range(trials):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def header(title: str):
+    print(f"# --- {title} ---", flush=True)

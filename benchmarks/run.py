@@ -1,0 +1,45 @@
+"""Benchmark harness: one module per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run``          (full)
+``BENCH_FAST=1 PYTHONPATH=src python -m benchmarks.run``  (CI-scale)
+
+Every row prints ``name,us_per_call,derived`` CSV.
+"""
+import sys
+import traceback
+
+from benchmarks import (bench_burst, bench_conv, bench_database,
+                        bench_latency, bench_num_kernels, bench_outstanding,
+                        bench_random, bench_roofline, bench_stride,
+                        bench_unit_size)
+
+MODULES = [
+    ("latency (Table 2 / Fig 6)", bench_latency),
+    ("outstanding (Fig 5 / Table 5)", bench_outstanding),
+    ("unit size (Fig 7)", bench_unit_size),
+    ("stride (Figs 8-9)", bench_stride),
+    ("burst (Fig 10 / Tables 3-4)", bench_burst),
+    ("num kernels (Table 6)", bench_num_kernels),
+    ("random (Tables 7-8)", bench_random),
+    ("database (Table 9)", bench_database),
+    ("convolution (Table 10)", bench_conv),
+    ("roofline (EXPERIMENTS §Roofline)", bench_roofline),
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failures = 0
+    for title, mod in MODULES:
+        try:
+            mod.main()
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"# FAILED {title}", flush=True)
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""End-to-end driver: train a ~100M-class LM on learnable synthetic data.
+
+Defaults are sized for a CPU demo (a ~26M 8-layer model, 60 steps, visible
+loss decrease vs the log(branching) entropy floor).  ``--full`` trains the
+real mamba2-130m (the assigned ~100M arch) — same code path, more compute.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps N] [--full] [--arch X]
+"""
+import argparse
+import math
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+from repro.configs import ARCHS, LayerSpec, ModelConfig, ShapeCell, override
+from repro.dist import POLICIES
+from repro.models import RuntimeFlags, build
+from repro.optim import AdamWConfig, schedule
+from repro.train import TrainConfig, Trainer
+
+DEMO_100M = ModelConfig(
+    name="demo-24m", family="dense", num_layers=8, d_model=512, num_heads=8,
+    num_kv_heads=4, head_dim=64, d_ff=1536, vocab_size=1024,
+    layer_pattern=(LayerSpec(),), activation="swiglu", tie_embeddings=True,
+    param_dtype="float32", compute_dtype="float32")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--arch", default=None, choices=sorted(ARCHS))
+    ap.add_argument("--full", action="store_true",
+                    help="train the real mamba2-130m config")
+    ap.add_argument("--ckpt", default="/tmp/memroof_train_lm")
+    args = ap.parse_args()
+
+    if args.arch:
+        cfg = ARCHS[args.arch]
+    elif args.full:
+        cfg = override(ARCHS["mamba2-130m"], param_dtype="float32",
+                       compute_dtype="float32")
+    else:
+        cfg = DEMO_100M
+    total, _ = cfg.param_count()
+    print(f"training {cfg.name}: {total/1e6:.1f}M params, "
+          f"{args.steps} steps of {args.batch}x{args.seq} tokens")
+
+    cell = ShapeCell("train_demo", "train", args.seq, args.batch)
+    flags = RuntimeFlags(attn_impl="chunked", attn_bq=128, attn_bkv=128,
+                         loss_chunk=128, moe_impl="dense", remat="none")
+    bundle = build(cfg, flags)
+    n_dev = jax.device_count()
+    mesh = jax.make_mesh((n_dev, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    opt = AdamWConfig(lr=3e-3, weight_decay=0.01,
+                      schedule=schedule.warmup_cosine(10, args.steps))
+    tcfg = TrainConfig(steps=args.steps, ckpt_dir=args.ckpt,
+                       ckpt_every=max(10, args.steps // 3), log_every=5,
+                       data_kind="markov")
+    tr = Trainer(bundle, cell, mesh, POLICIES["fsdp_tp"], opt, tcfg)
+    with jax.set_mesh(mesh):
+        tr.run()
+
+    floor = math.log(4)  # markov branching entropy
+    first, last = tr.history[0], tr.history[-1]
+    print(f"\nloss: {first['loss']:.3f} (step {first['step']}) -> "
+          f"{last['loss']:.3f} (step {last['step']}); "
+          f"entropy floor ~{floor:.3f}, uniform ~{math.log(cfg.vocab_size):.2f}")
+    print(f"throughput: {last['tok_s']:.0f} tok/s on {n_dev} device(s)")
+    print(f"checkpoints under {args.ckpt}: resume with the same command")
+    assert last["loss"] < first["loss"], "loss did not decrease"
+
+
+if __name__ == "__main__":
+    main()

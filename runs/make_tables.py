@@ -1,0 +1,139 @@
+"""Emit EXPERIMENTS.md tables from runs/dryrun*.json."""
+import json
+import os
+import sys
+
+HERE = os.path.dirname(__file__)
+
+
+def load(name):
+    path = os.path.join(HERE, name)
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        return json.load(f)
+
+
+def dryrun_table(recs):
+    out = ["| arch × shape | mesh | chips | peak GiB/dev | fits 16G | collectives |",
+           "|---|---|---|---|---|---|"]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
+        cell = f"{r['arch']} × {r['shape']}"
+        if r.get("status") == "skip":
+            out.append(f"| {cell} | — | — | — | SKIP | {r['reason']} |")
+            continue
+        if r.get("status") != "ok":
+            out.append(f"| {cell} | — | — | — | FAIL | {r.get('error','')[:60]} |")
+            continue
+        for key, m in sorted(r["meshes"].items()):
+            colls = ",".join(sorted(m.get("collectives", {})))
+            fits = "✓" if m["peak_gib"] < 16 else f"✗ ({m['peak_gib']:.1f})"
+            out.append(
+                f"| {cell} | {key} | {m['chips']} | {m['peak_gib']:.2f} "
+                f"| {fits} | {colls} |")
+    return "\n".join(out)
+
+
+HBM_BW = 819e9
+
+
+def next_lever(r):
+    """One sentence: what moves the dominant term down (assignment req)."""
+    rf = r.get("roofline", {})
+    dom = rf.get("dominant")
+    kind = r.get("kind", "")
+    fi = rf.get("bytes_flash_inner", 0) / max(rf.get("hlo_bytes", 1), 1)
+    if dom == "memory":
+        if kind == "prefill" and fi > 0.2:
+            return (f"fuse attention blocks into the Pallas kernel "
+                    f"(flash_inner = {fi:.0%} of bytes, see frac kernel)")
+        if kind == "train":
+            return ("kernel-fuse attention + relax remat to 'dots' "
+                    "(recompute is the other big byte source)")
+        if kind == "decode":
+            return "int8 KV stream (opt preset) + larger decode batch to amortize"
+        return "larger contiguous tiles (burst) on the dominant stream"
+    if dom == "collective":
+        if kind == "train":
+            return ("overlap per-layer FSDP gathers behind compute "
+                    "(latency-hiding) + int8 grad reduction (dist.dp_shardmap)")
+        if kind == "decode":
+            return ("replicate small-model params across 'model' (TP off) "
+                    "to drop per-layer gathers")
+        return "reshard so the hot einsum contracts an unsharded dim"
+    return "increase arithmetic intensity (bigger microbatch per chip)"
+
+
+def roofline_table(recs):
+    """frac = useful-ideal / max(terms) (overlapped TPU model);
+    serial = / sum(terms); kernel = overlapped with the flash_inner bytes
+    (VMEM-resident in the Pallas deployment) removed from the memory term."""
+    out = ["| arch × shape | compute s | memory s | collective s | dominant "
+           "| MODEL/HLO flops | frac | frac serial | frac kernel | peak GiB "
+           "| next lever for the dominant term |",
+           "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
+        cell = f"{r['arch']} × {r['shape']}"
+        if r.get("status") == "skip":
+            out.append(f"| {cell} | — | — | — | skip: {r['reason'][:40]} "
+                       "| — | — | — | — | — | — |")
+            continue
+        rf = r.get("roofline")
+        if not rf:
+            continue
+        sp = r.get("meshes", {}).get("single_pod", {})
+        c, m, co = rf["compute_s"], rf["memory_s"], rf["collective_s"]
+        ideal = c * rf["useful_ratio"]
+        m_k = m - rf.get("bytes_flash_inner", 0.0) / HBM_BW
+        frac = ideal / max(c, m, co) if max(c, m, co) else 0.0
+        serial = ideal / (c + m + co) if (c + m + co) else 0.0
+        kern = ideal / max(c, m_k, co) if max(c, m_k, co) else 0.0
+        out.append(
+            f"| {cell} | {c:.3f} | {m:.3f} | {co:.3f} | **{rf['dominant']}** "
+            f"| {rf['useful_ratio']:.3f} | {frac:.3f} | {serial:.3f} "
+            f"| {kern:.3f} | {sp.get('peak_gib','—')} | {next_lever(r)} |")
+    return "\n".join(out)
+
+
+def compare_table(base, opt):
+    bmap = {(r["arch"], r["shape"]): r for r in base if r.get("status") == "ok"}
+    out = ["| cell | metric | baseline | optimized | Δ |", "|---|---|---|---|---|"]
+    for r in sorted(opt, key=lambda r: (r["arch"], r["shape"])):
+        if r.get("status") != "ok":
+            continue
+        b = bmap.get((r["arch"], r["shape"]))
+        if not b:
+            continue
+        cell = f"{r['arch']} × {r['shape']}"
+        for metric, get in [
+            ("peak GiB (1 pod)", lambda x: x["meshes"].get("single_pod", {}).get("peak_gib")),
+            ("peak GiB (2 pod)", lambda x: x["meshes"].get("multi_pod", {}).get("peak_gib")),
+            ("memory term s", lambda x: x.get("roofline", {}).get("memory_s")),
+            ("collective term s", lambda x: x.get("roofline", {}).get("collective_s")),
+            ("roofline frac", lambda x: x.get("roofline", {}).get("roofline_fraction")),
+        ]:
+            vb, vo = get(b), get(r)
+            if vb is None or vo is None or vb == 0:
+                continue
+            delta = (vo - vb) / abs(vb) * 100
+            if abs(delta) < 3 and "peak" not in metric:
+                continue
+            out.append(f"| {cell} | {metric} | {vb:.3f} | {vo:.3f} | {delta:+.0f}% |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    base = load("dryrun.json")
+    opt = load("dryrun_opt.json")
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if which in ("all", "dryrun"):
+        print("### baseline dry-run\n")
+        print(dryrun_table(base))
+    if which in ("all", "roofline"):
+        print("\n### baseline roofline\n")
+        print(roofline_table(base))
+        print("\n### optimized roofline\n")
+        print(roofline_table(opt))
+    if which in ("all", "compare"):
+        print("\n### baseline vs optimized\n")
+        print(compare_table(base, opt))

@@ -1,0 +1,6 @@
+"""The paper's contribution: memory-access-pattern characterization and
+optimization for the TPU memory hierarchy (see DESIGN.md §2)."""
+from repro.core.memmodel import TPUSpec, V5E, RooflineTerms, roofline  # noqa: F401
+from repro.core.patterns import ADVICE, Knobs, Pattern, SiteReport  # noqa: F401
+from repro.core import advisor, autotune, engines  # noqa: F401
+import repro.core.roofline as roofline_mod  # noqa: F401

@@ -1,0 +1,84 @@
+"""Knob search driven by the analytic memory model (paper §5 applied).
+
+Given a pattern + hardware spec + VMEM budget, pick the Pallas/BlockSpec
+parameters the model predicts best — the machine version of the paper's
+"choose the right optimization level that meets throughput while consuming
+as few resources as possible".
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Iterable, List, Optional, Tuple
+
+from repro.core.memmodel import TPUSpec, V5E, min_outstanding_for_peak, predict_bw, vmem_ok
+from repro.core.patterns import Knobs, Pattern
+
+
+@dataclass(frozen=True)
+class TunedResult:
+    knobs: Knobs
+    predicted_gbps: float
+    vmem_bytes: int
+    note: str = ""
+
+
+def tune_pattern(pattern: Pattern, spec: TPUSpec = V5E,
+                 vmem_budget_fraction: float = 0.5,
+                 unit_candidates: Iterable[int] = (256, 512, 1024, 2048, 4096),
+                 burst_candidates: Iterable[int] = tuple(
+                     2 ** i for i in range(12, 23)),
+                 outstanding_candidates: Iterable[int] = (1, 2, 3, 4, 8, 16, 32),
+                 ) -> TunedResult:
+    """Smallest-resource knobs within 2% of the best predicted bandwidth
+    (the paper's resource-throughput tradeoff, Tables 3-5)."""
+    best: List[Tuple[float, int, Knobs]] = []
+    for u in unit_candidates:
+        for b in burst_candidates:
+            if b < u:
+                continue
+            for no in outstanding_candidates:
+                k = Knobs(unit_bytes=u, burst_bytes=b, outstanding=no)
+                if not vmem_ok(k, spec, vmem_budget_fraction):
+                    continue
+                bw = predict_bw(pattern, k, spec)
+                best.append((bw, k.vmem_bytes(), k))
+    if not best:
+        raise ValueError("no feasible knobs under the VMEM budget")
+    top_bw = max(b[0] for b in best)
+    feasible = [b for b in best if b[0] >= 0.98 * top_bw]
+    bw, vmem, knobs = min(feasible, key=lambda t: t[1])
+    return TunedResult(knobs=knobs, predicted_gbps=bw / 1e9, vmem_bytes=vmem,
+                       note=f"NO*={min_outstanding_for_peak(knobs.burst_bytes, spec)}")
+
+
+def tune_attention_blocks(head_dim: int, kv_heads_per_device: int = 1,
+                          dtype_bytes: int = 2, spec: TPUSpec = V5E,
+                          vmem_budget_fraction: float = 0.4,
+                          candidates=(128, 256, 512, 1024, 2048, 4096),
+                          ) -> Tuple[int, int]:
+    """(bq, bkv) for the nest/flash tiling: maximize the kv burst under the
+    VMEM budget; q tile secondary (it is re-used across the whole kv stream).
+    VMEM per program ~= (bq*(d+4) + 2*bkv*d*NO) * bytes, NO=2."""
+    budget = spec.vmem_bytes * vmem_budget_fraction
+    best = (128, 128)
+    best_score = -1.0
+    for bq in candidates:
+        for bkv in candidates:
+            vmem = (bq * (head_dim + 4) * 4          # fp32 q + m/l/acc rows
+                    + 2 * bkv * head_dim * dtype_bytes * 2)
+            if vmem > budget:
+                continue
+            k = Knobs(unit_bytes=head_dim * dtype_bytes,
+                      burst_bytes=bkv * head_dim * dtype_bytes, outstanding=2)
+            score = predict_bw(Pattern.NEST, k, spec) * min(bq, bkv)
+            if score > best_score:
+                best_score, best = score, (bq, bkv)
+    return best
+
+
+def tune_ssd_chunk(d_inner: int, nheads: int, head_dim: int, dstate: int,
+                   candidates=(64, 128, 256, 512)) -> int:
+    """Chunk Q balancing intra-chunk (Q*H bytes/token) vs inter-chunk state
+    (H*P*N/Q bytes/token): optimum near sqrt(P*N)."""
+    target = (head_dim * dstate) ** 0.5
+    return min(candidates, key=lambda q: abs(q - target))

@@ -1,0 +1,185 @@
+"""The paper's two benchmarking engines as host-driven harnesses.
+
+Each engine runs the XLA-compiled reference op (timed — real relative curves
+on this host, the paper's qualitative claims) and reports the analytic TPU
+projection from ``core.memmodel`` next to it (the absolute numbers a v5e
+would see).  The Pallas kernels are the TPU-target implementations of the
+same engines; interpret-mode correctness is asserted in tests, and their
+BlockSpec parameters are exactly the knobs modeled here.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.memmodel import TPUSpec, V5E, achieved_bw, predict_bw, theoretical_bw
+from repro.core.patterns import Knobs, Pattern
+from repro.kernels import ops, ref
+
+
+@dataclass
+class Row:
+    name: str
+    pattern: str
+    bytes_moved: float
+    wall_s: float
+    gbps_measured: float
+    gbps_tpu_model: float
+    extras: dict = field(default_factory=dict)
+
+    def csv(self) -> str:
+        us = self.wall_s * 1e6
+        return (f"{self.name},{us:.2f},"
+                f"gbps_measured={self.gbps_measured:.3f};"
+                f"gbps_tpu_model={self.gbps_tpu_model:.3f};"
+                + ";".join(f"{k}={v}" for k, v in self.extras.items()))
+
+
+def _time(fn, *args, trials: int = 3, warmup: int = 1) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    best = float("inf")
+    for _ in range(trials):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+# ---------------------------------------------------------------------------
+# Latency engine (paper §3.1)
+# ---------------------------------------------------------------------------
+
+def latency_chase(n_entries: int = 1 << 16, steps: int = 1 << 14,
+                  seed: int = 0, spec: TPUSpec = V5E) -> Row:
+    """Dependent-load chain latency (ns/hop measured; T_l modeled)."""
+    table = ops.make_chain(n_entries, seed)
+    fn = jax.jit(lambda t: ref.pointer_chase(t, steps))
+    wall = _time(fn, table)
+    ns_per_hop = wall / steps * 1e9
+    unit = 4  # int32 payload
+    return Row(
+        name=f"chase_n{n_entries}", pattern=Pattern.CHASE.value,
+        bytes_moved=steps * unit, wall_s=wall,
+        gbps_measured=achieved_bw(steps * unit, wall) / 1e9,
+        gbps_tpu_model=predict_bw(Pattern.CHASE, Knobs(unit_bytes=unit)) / 1e9,
+        extras=dict(ns_per_hop=f"{ns_per_hop:.1f}",
+                    t_l_model_ns=f"{spec.dma_latency_s*1e9:.0f}"))
+
+
+def latency_by_region(n_regions: int = 8, entries_per_region: int = 1 << 14,
+                      steps: int = 1 << 12) -> List[Row]:
+    """Per-address-region chase (the paper's per-channel Table 2 analogue)."""
+    rows = []
+    for r in range(n_regions):
+        table = ops.make_chain(entries_per_region, seed=r)
+        fn = jax.jit(lambda t: ref.pointer_chase(t, steps))
+        wall = _time(fn, table)
+        rows.append(Row(
+            name=f"region_{r}", pattern=Pattern.CHASE.value,
+            bytes_moved=steps * 4, wall_s=wall,
+            gbps_measured=achieved_bw(steps * 4, wall) / 1e9,
+            gbps_tpu_model=predict_bw(Pattern.CHASE, Knobs(unit_bytes=4)) / 1e9,
+            extras=dict(ns_per_hop=f"{wall/steps*1e9:.1f}")))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Bandwidth engine (paper §3.2/§4.2)
+# ---------------------------------------------------------------------------
+
+def bw_sequential(rows: int = 4096, cols: int = 2048, dtype=jnp.float32,
+                  mode: str = "copy") -> Row:
+    x = jnp.ones((rows, cols), dtype)
+    fn = jax.jit(lambda a: ref.stream_copy(a, mode))
+    wall = _time(fn, x)
+    nbytes = x.size * x.dtype.itemsize * 2  # read + write
+    knobs = Knobs(unit_bytes=128 * x.dtype.itemsize,
+                  burst_bytes=cols * x.dtype.itemsize * 8)
+    return Row(
+        name=f"seq_{dtype.__name__ if hasattr(dtype,'__name__') else dtype}_{rows}x{cols}",
+        pattern=Pattern.SEQUENTIAL.value, bytes_moved=nbytes, wall_s=wall,
+        gbps_measured=achieved_bw(nbytes, wall) / 1e9,
+        gbps_tpu_model=predict_bw(Pattern.SEQUENTIAL, knobs) / 1e9,
+        extras=dict(theoretical_tpu_gbps=f"{theoretical_bw()/1e9:.0f}"))
+
+
+def bw_strided(rows: int, cols: int, stride: int, block_rows: int = 8,
+               dtype=jnp.float32) -> Row:
+    x = jnp.ones((rows, cols), dtype)
+    fn = jax.jit(lambda a: ref.strided_copy(a, block_rows=block_rows,
+                                            stride=stride))
+    wall = _time(fn, x)
+    nbytes = x.size * x.dtype.itemsize * 2
+    knobs = Knobs(unit_bytes=cols * x.dtype.itemsize * block_rows,
+                  stride=stride)
+    return Row(
+        name=f"stride_{stride}", pattern=Pattern.STRIDED.value,
+        bytes_moved=nbytes, wall_s=wall,
+        gbps_measured=achieved_bw(nbytes, wall) / 1e9,
+        gbps_tpu_model=predict_bw(Pattern.STRIDED, knobs) / 1e9,
+        extras=dict(block_rows=block_rows))
+
+
+def bw_random(n_rows: int = 1 << 15, cols: int = 128, n_idx: int = 1 << 14,
+              dtype=jnp.float32, generator: str = "lfsr") -> Row:
+    x = jnp.ones((n_rows, cols), dtype)
+
+    def make_idx(seed):
+        if generator == "lfsr":
+            return ops.lfsr_indices(n_idx, bits=24, seed=0xACE1 + seed) % n_rows
+        return jax.random.randint(jax.random.PRNGKey(seed), (n_idx,), 0, n_rows)
+
+    fn = jax.jit(ref.random_gather)
+    # fresh indices per trial: re-timing the same gather measures the cached
+    # working set, not memory (the paper's page-hit effect on the host)
+    jax.block_until_ready(fn(x, make_idx(0)))
+    walls = []
+    for t in range(1, 4):
+        idx = make_idx(t)
+        jax.block_until_ready(idx)
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(x, idx))
+        walls.append(time.perf_counter() - t0)
+    wall = min(walls)
+    idx = make_idx(1)
+    nbytes = n_idx * cols * x.dtype.itemsize * 2
+    knobs = Knobs(unit_bytes=cols * x.dtype.itemsize, outstanding=8)
+    return Row(
+        name=f"random_{generator}_row{cols*x.dtype.itemsize}B",
+        pattern=Pattern.RANDOM.value, bytes_moved=nbytes, wall_s=wall,
+        gbps_measured=achieved_bw(nbytes, wall) / 1e9,
+        gbps_tpu_model=predict_bw(Pattern.RANDOM, knobs) / 1e9)
+
+
+def bw_unit_size_sweep(units=(4, 16, 64, 256, 1024, 4096)) -> List[Row]:
+    """paper Fig. 7: throughput vs transaction width (row bytes)."""
+    rows = []
+    for u in units:
+        cols = max(1, u // 4)
+        r = bw_random(n_rows=1 << 13, cols=cols, n_idx=1 << 13,
+                      dtype=jnp.float32)
+        r.name = f"unit_{u}B"
+        r.extras["unit_bytes"] = u
+        rows.append(r)
+    return rows
+
+
+def bw_outstanding_sweep(depths=(1, 2, 4, 8, 16, 32, 64)) -> List[Row]:
+    """paper Fig. 5: modeled knee at NO* = ceil(T_l * BW / burst); measured
+    via chunked async dispatch width on CPU (relative signal only)."""
+    out = []
+    burst = 64 * 1024
+    for no in depths:
+        knobs = Knobs(burst_bytes=burst, outstanding=no)
+        out.append(Row(
+            name=f"outstanding_{no}", pattern=Pattern.SEQUENTIAL.value,
+            bytes_moved=0, wall_s=0.0, gbps_measured=float("nan"),
+            gbps_tpu_model=predict_bw(Pattern.SEQUENTIAL, knobs) / 1e9,
+            extras=dict(vmem_bytes=knobs.vmem_bytes())))
+    return out

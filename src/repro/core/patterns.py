@@ -1,0 +1,155 @@
+"""Canonical memory-access patterns and their optimization directions.
+
+This is the paper's §5/§6 taxonomy (rs_tra / rr_tra / r_acc / nest + the
+micro-patterns the engines sweep) re-grounded in the TPU memory hierarchy
+(HBM -> VMEM -> VREG).  ``core.advisor`` classifies a compiled program's
+memory ops into these patterns and emits the per-pattern guidance below;
+``core.autotune`` turns the guidance into concrete Pallas/BlockSpec knobs.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from enum import Enum
+from typing import Dict, Optional, Tuple
+
+
+class Pattern(str, Enum):
+    # micro patterns (engine-level, paper §3/§4)
+    SEQUENTIAL = "sequential"      # address-continuous stream (burstable)
+    STRIDED = "strided"            # constant stride > contiguous tile
+    RANDOM = "random"              # independent random indices (LFSR analogue)
+    CHASE = "chase"                # dependent loads (pointer chasing)
+    # application patterns (paper §6, database taxonomy)
+    RS_TRA = "rs_tra"              # repetitive sequential traversal (weight streaming)
+    RR_TRA = "rr_tra"              # repetitive random traversal
+    R_ACC = "r_acc"                # random access (embedding / expert gather)
+    NEST = "nest"                  # interleaved multi-cursor sequential (attention)
+
+
+@dataclass(frozen=True)
+class Knobs:
+    """The paper's optimization parameters, TPU-translated.
+
+    unit_bytes   — transaction width  (dtype bytes x lane-tile width)
+    burst_bytes  — contiguous DMA size (BlockSpec block bytes)
+    outstanding  — DMAs in flight (pipeline/multiple-buffering depth)
+    stride       — inter-tile stride in units of burst_bytes (1 = contiguous)
+    engines      — concurrent access engines (grid programs / shards)
+    """
+
+    unit_bytes: int = 2 * 128            # bf16 x one 128-lane vector
+    burst_bytes: int = 2 * 8 * 128 * 128  # a (8x128)x128 bf16 tile * 8
+    outstanding: int = 2                  # double buffering
+    stride: int = 1
+    engines: int = 1
+
+    def vmem_bytes(self) -> int:
+        """Buffering cost — the paper's BRAM column (Tables 3-5): buffers that
+        must be resident = burst x outstanding per engine."""
+        return self.burst_bytes * self.outstanding * self.engines
+
+
+@dataclass(frozen=True)
+class Advice:
+    """Optimization direction for one pattern (the paper's §5/§6 prose,
+    machine-readable)."""
+
+    pattern: Pattern
+    summary: str
+    knob_moves: Tuple[str, ...]
+    expected_bw_fraction: Tuple[float, float]  # (naive, optimized) of HBM peak
+
+
+ADVICE: Dict[Pattern, Advice] = {
+    Pattern.SEQUENTIAL: Advice(
+        Pattern.SEQUENTIAL,
+        "Stream with maximal contiguous tiles; saturates HBM once "
+        "burst*outstanding covers the DMA latency-bandwidth product.",
+        ("unit_bytes: widen to >=128 lanes * dtype",
+         "burst_bytes: grow until VMEM budget; diminishing past ~1MB",
+         "outstanding: 2-3 (double/triple buffer) suffices when bursts are large"),
+        (0.6, 0.95),
+    ),
+    Pattern.STRIDED: Advice(
+        Pattern.STRIDED,
+        "Throughput collapses ~1/stride once the stride exceeds the tile row; "
+        "fold the stride into the tile (transpose/relayout) or widen unit size "
+        "to amortize (paper Figs. 6/8/9).",
+        ("relayout: make the strided dim minor (stride -> 1)",
+         "unit_bytes: widen so each strided touch moves a full tile",
+         "outstanding: raise to cover per-touch latency"),
+        (0.05, 0.6),
+    ),
+    Pattern.RANDOM: Advice(
+        Pattern.RANDOM,
+        "Independent random indices pipeline but defeat bursts: bandwidth = "
+        "unit_bytes / latency * outstanding, two orders below sequential "
+        "(paper Table 8: 421 -> 5.8 GB/s).",
+        ("unit_bytes: the ONLY lever that scales throughput linearly",
+         "outstanding: raise until latency-covered (Eq. 4)",
+         "sort/bucket indices when semantics allow -> SEQUENTIAL"),
+        (0.005, 0.1),
+    ),
+    Pattern.CHASE: Advice(
+        Pattern.CHASE,
+        "Dependent loads serialize on full latency; no pipelining possible "
+        "(paper Table 8: 0.99 GB/s).  Restructure the data (block the linked "
+        "structure) or prefetch speculatively.",
+        ("restructure: turn chains into index arrays -> RANDOM",
+         "block: store next-pointers with payloads (unit_bytes up)"),
+        (0.001, 0.01),
+    ),
+    Pattern.RS_TRA: Advice(
+        Pattern.RS_TRA,
+        "Weight streaming: sequential traversal repeated every step; ideal "
+        "double-buffered; on multi-chip, FSDP all-gather is the 'burst'.",
+        ("burst_bytes: per-layer parameter shard",
+         "overlap: prefetch layer i+1 during layer i compute",
+         "address-mapping analogue: shard params so gathers are contiguous"),
+        (0.5, 0.9),
+    ),
+    Pattern.RR_TRA: Advice(
+        Pattern.RR_TRA,
+        "Repeated random traversal (shuffled epochs): randomness amortized by "
+        "large unit size (paper: unit-size dominates).",
+        ("unit_bytes: page-sized records", "prefetch one epoch ahead"),
+        (0.02, 0.3),
+    ),
+    Pattern.R_ACC: Advice(
+        Pattern.R_ACC,
+        "Pure random access (embedding rows, MoE expert pick): size the row to "
+        "the transaction; one-hot matmul converts gather -> RS_TRA when the "
+        "table is small relative to compute.",
+        ("unit_bytes: row width >= 512B",
+         "outstanding: batch the gathers (vectorized take)",
+         "convert: one-hot einsum when table fits the FLOP budget"),
+        (0.005, 0.15),
+    ),
+    Pattern.NEST: Advice(
+        Pattern.NEST,
+        "Interleaved multi-cursor sequential (attention q-blocks over kv "
+        "stream): block both cursors so the inner stream stays VMEM-resident "
+        "-- this is exactly flash-attention blocking; the paper's 'nest' row "
+        "hits full sequential bandwidth (Table 9: 421 GB/s).",
+        ("block: tile q and kv cursors (BlockSpec on both)",
+         "burst_bytes: kv tile sized to VMEM minus q/accumulator",
+         "outstanding: 2 on the kv stream"),
+        (0.3, 0.95),
+    ),
+}
+
+
+@dataclass
+class SiteReport:
+    """One classified load/store site (advisor output)."""
+
+    op_name: str
+    pattern: Pattern
+    bytes_moved: int
+    shape: Tuple[int, ...] = ()
+    detail: str = ""
+    advice: Optional[Advice] = None
+
+    def __post_init__(self):
+        if self.advice is None:
+            self.advice = ADVICE[self.pattern]

@@ -1,0 +1,6 @@
+"""Pallas TPU kernels: the paper's two benchmark engines (stream / strided /
+random-gather / pointer-chase) + the perf-critical compute kernels the
+framework itself uses (tiled matmul, flash attention = the paper's `nest`
+pattern blocked).  Every kernel has a jnp oracle in ref.py and is validated
+with interpret=True on CPU."""
+from repro.kernels import ops, ref  # noqa: F401

@@ -1,0 +1,54 @@
+"""Tiled MXU matmul (paper pattern: rs_tra — repeated sequential weight
+streaming; also the compute-roofline probe).
+
+Classic three-level blocking: grid (M/bm, N/bn, K/bk) with an f32 VMEM
+accumulator that persists across the innermost (K) grid dimension.  Block
+shapes are the paper's burst knob; MXU wants all of bm/bn/bk to be multiples
+of 128 (lane) / 8 (sublane).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mm_kernel(x_ref, y_ref, o_ref, acc_ref, *, n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def matmul(x: jax.Array, y: jax.Array, *, bm: int = 128, bn: int = 128,
+           bk: int = 128, interpret: bool = True) -> jax.Array:
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (x.shape, y.shape, bm, bn, bk)
+    n_k = k // bk
+    return pl.pallas_call(
+        functools.partial(_mm_kernel, n_k=n_k),
+        grid=(m // bm, n // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, y)

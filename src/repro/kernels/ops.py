@@ -1,0 +1,79 @@
+"""Jit'd dispatching wrappers: Pallas on TPU, interpret-mode Pallas or the jnp
+oracle elsewhere.  Models call these; benchmarks call the engines directly."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.kernels import decode_attention as _da
+from repro.kernels import flash_attention as _fa
+from repro.kernels import paged_attention as _pa
+from repro.kernels import matmul as _mm
+from repro.kernels import pointer_chase as _pc
+from repro.kernels import random_gather as _rg
+from repro.kernels import ref
+from repro.kernels import stream_copy as _sc
+from repro.kernels import strided_copy as _st
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _interp(interpret: Optional[bool]) -> bool:
+    return (not on_tpu()) if interpret is None else interpret
+
+
+def stream_copy(x, *, block_rows=256, block_cols=0, mode="copy", interpret=None):
+    return _sc.stream_copy(x, block_rows=block_rows, block_cols=block_cols,
+                           mode=mode, interpret=_interp(interpret))
+
+
+def strided_copy(x, *, block_rows=8, stride=1, interpret=None):
+    return _st.strided_copy(x, block_rows=block_rows, stride=stride,
+                            interpret=_interp(interpret))
+
+
+def random_gather(x, idx, *, interpret=None):
+    return _rg.random_gather(x, idx, interpret=_interp(interpret))
+
+
+def lfsr_indices(n, *, bits=24, seed=0xACE1):
+    return _rg.lfsr_indices(n, bits=bits, seed=seed)
+
+
+def pointer_chase(table, *, steps, interpret=None):
+    return _pc.pointer_chase(table, steps=steps, interpret=_interp(interpret))
+
+
+def make_chain(n, seed=0):
+    return _pc.make_chain(n, seed)
+
+
+def matmul(x, y, *, bm=128, bn=128, bk=128, interpret=None):
+    return _mm.matmul(x, y, bm=bm, bn=bn, bk=bk, interpret=_interp(interpret))
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, softcap=None,
+                    scale=None, bq=128, bkv=128, interpret=None):
+    return _fa.flash_attention(
+        q, k, v, causal=causal, window=window, softcap=softcap, scale=scale,
+        bq=bq, bkv=bkv, interpret=_interp(interpret))
+
+
+def decode_attention(q, k, v, valid_len, *, softcap=None, scale=None,
+                     bkv=512, interpret=None):
+    return _da.decode_attention(q, k, v, valid_len, softcap=softcap,
+                                scale=scale, bkv=bkv,
+                                interpret=_interp(interpret))
+
+
+def paged_attention(q, k_pages, v_pages, page_table, valid_len, *,
+                    scale=None, interpret=None):
+    return _pa.paged_attention(q, k_pages, v_pages, page_table, valid_len,
+                               scale=scale, interpret=_interp(interpret))
+
+
+# re-export oracles for tests/benches
+oracle = ref

@@ -1,0 +1,107 @@
+"""Paged-KV decode attention: block-table indirection inside the kernel.
+
+The serving-memory version of the paper's random-access engine: the KV cache
+lives in a global page pool (num_pages, page, Hkv, D) and each sequence owns
+a per-sequence page table — the kernel's BlockSpec index_map dereferences the
+scalar-prefetched table (``table[b, j]``), exactly the mechanism
+``random_gather`` benchmarks (r_acc over page-sized units: the advisor's
+"unit_bytes: row width >= 512B" guidance is why pages are >= 16 tokens).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(table_ref, vlen_ref, q_ref, kp_ref, vp_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, scale: float, page: int, n_pages: int,
+            hkv: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    bh = pl.program_id(0)
+    b = bh // hkv
+    valid = vlen_ref[b]
+
+    q = q_ref[0].astype(jnp.float32) * scale                 # (g, d)
+    k = kp_ref[0].astype(jnp.float32)                        # (page, d)
+    v = vp_ref[0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (g, page)
+    pos = j * page + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(pos < valid, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(p, v)
+    m_ref[...] = m_new
+
+    @pl.when(j == n_pages - 1)
+    def _flush():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                    page_table: jax.Array, valid_len: jax.Array, *,
+                    scale: Optional[float] = None,
+                    interpret: bool = True) -> jax.Array:
+    """q: (B, Hq, D); k/v_pages: (P, page, Hkv, D); page_table: (B, N) int32
+    (pool page id per logical page; unused entries may be any valid id —
+    they are masked by valid_len); valid_len: (B,) -> (B, Hq, D)."""
+    b, hq, d = q.shape
+    pool, page, hkv, _ = k_pages.shape
+    _, n_pages = page_table.shape
+    g = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+
+    qf = q.reshape(b * hkv, g, d)
+    # flatten pages per kv head: (P*Hkv, page, d)
+    kf = jnp.swapaxes(k_pages, 1, 2).reshape(pool * hkv, page, d)
+    vf = jnp.swapaxes(v_pages, 1, 2).reshape(pool * hkv, page, d)
+
+    def page_map(bh, j, table_ref, vlen_ref, hkv=hkv):
+        b_ = bh // hkv
+        h_ = bh % hkv
+        return (table_ref[b_, j] * hkv + h_, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b * hkv, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, g, d), lambda bh, j, t, vl: (bh, 0, 0)),
+            pl.BlockSpec((1, page, d),
+                         lambda bh, j, t, vl: page_map(bh, j, t, vl)),
+            pl.BlockSpec((1, page, d),
+                         lambda bh, j, t, vl: page_map(bh, j, t, vl)),
+        ],
+        out_specs=pl.BlockSpec((1, g, d), lambda bh, j, t, vl: (bh, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, page=page, n_pages=n_pages,
+                          hkv=hkv),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b * hkv, g, d), q.dtype),
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), valid_len.astype(jnp.int32), qf, kf, vf)
+    return out.reshape(b, hq, d)

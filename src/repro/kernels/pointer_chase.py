@@ -1,0 +1,64 @@
+"""Pointer-chase latency engine (paper §3.1, Alg. 5, Table 8).
+
+``addr = mem[addr]`` repeated I times: every load depends on the previous, so
+no pipelining is possible and throughput == unit_bytes / T_l — the paper's
+pure-latency measurement (0.99 GB/s on the U280).  The kernel keeps the whole
+chase table VMEM-resident (the paper's engine equally owns one channel); the
+host-level engine in ``core.engines`` runs the HBM-sized variant via XLA.
+
+The visited-index trace is written out (the paper's latency-data write-back
+module, Alg. 3) so the computation cannot be optimized away and can be
+verified against the ref oracle.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _chase_kernel(table_ref, out_ref, steps: int):
+    def body(i, addr):
+        nxt = table_ref[addr, 0]
+        out_ref[i, 0] = nxt
+        return nxt
+
+    jax.lax.fori_loop(0, steps, body, jnp.int32(0))
+
+
+@functools.partial(jax.jit, static_argnames=("steps", "interpret"))
+def pointer_chase(table: jax.Array, *, steps: int, interpret: bool = True) -> jax.Array:
+    """Follow the chain ``addr = table[addr]`` from 0 for ``steps`` hops.
+
+    ``table``: (n, 1) int32, a permutation cycle (see :func:`make_chain`).
+    Returns the (steps, 1) visited trace.
+    """
+    n, one = table.shape
+    assert one == 1
+    return pl.pallas_call(
+        functools.partial(_chase_kernel, steps=steps),
+        in_specs=[pl.BlockSpec((n, 1), lambda: (0, 0))],
+        out_specs=pl.BlockSpec((steps, 1), lambda: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((steps, 1), jnp.int32),
+        interpret=interpret,
+    )(table)
+
+
+def make_chain(n: int, seed: int = 0) -> jax.Array:
+    """A single-cycle random permutation chain (Sattolo), host-built like the
+    paper's host-initialized random linked list."""
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    perm = np.arange(n)
+    # Sattolo's algorithm -> one cycle covering all n entries
+    for i in range(n - 1, 0, -1):
+        j = rng.integers(0, i)
+        perm[i], perm[j] = perm[j], perm[i]
+    table = np.empty(n, dtype=np.int32)
+    # chain: next[perm[k]] = perm[k+1]
+    table[perm[:-1]] = perm[1:]
+    table[perm[-1]] = perm[0]
+    return jnp.asarray(table)[:, None]

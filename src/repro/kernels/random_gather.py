@@ -1,0 +1,67 @@
+"""Random-access engine (paper: Tables 7/8, Alg. 4 — LFSR random addresses).
+
+TPU-idiomatic random access: the index vector is *scalar-prefetched* so the
+BlockSpec index_map can DMA row ``idx[i]`` for grid step i — the same
+indirection mechanism paged-KV attention uses.  Unit size = row bytes; each
+touch is an independent transaction (pipelinable but burst-defeating).
+
+Also provides the LFSR generator itself (Galois form), matching the paper's
+on-board address generation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# maximal-length Galois LFSR taps
+_TAPS = {16: 0xB400, 24: 0xE10000, 32: 0xA3000000}
+
+
+@functools.partial(jax.jit, static_argnames=("n", "bits"))
+def lfsr_indices(n: int, *, bits: int = 24, seed: int = 0xACE1) -> jax.Array:
+    """n indices in [0, 2^min(bits,31)) from a Galois LFSR (paper Alg. 4).
+    Index space is capped at 2^31 so results stay valid int32 gather indices."""
+    taps = jnp.uint32(_TAPS[bits])
+
+    def step(state, _):
+        bit = state & 1
+        state = state >> 1
+        state = jnp.where(bit == 1, state ^ taps, state)
+        return state, state
+
+    _, out = jax.lax.scan(step, jnp.uint32(seed | 1), None, length=n)
+    return (out & jnp.uint32((1 << min(bits, 31)) - 1)).astype(jnp.int32)
+
+
+def _gather_kernel(idx_ref, x_ref, o_ref):
+    # idx_ref is scalar-prefetched; x_ref already points at row idx[i].
+    o_ref[...] = x_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def random_gather(x: jax.Array, idx: jax.Array, *, block_rows: int = 1,
+                  interpret: bool = True) -> jax.Array:
+    """out[i] = x[idx[i]] (row gather, 2D table).
+
+    ``block_rows`` rows share one transaction only when indices are
+    block-aligned; the default 1 models the paper's independent random
+    transactions (unit = one row).
+    """
+    rows, cols = x.shape
+    (n,) = idx.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n,),
+        in_specs=[pl.BlockSpec((block_rows, cols), lambda i, idx_ref: (idx_ref[i], 0))],
+        out_specs=pl.BlockSpec((block_rows, cols), lambda i, idx_ref: (i, 0)),
+    )
+    return pl.pallas_call(
+        _gather_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n * block_rows, cols), x.dtype),
+        interpret=interpret,
+    )(idx, x)

@@ -1,0 +1,95 @@
+"""Pure-jnp oracles for every kernel (the paper's RTL reference role)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def stream_copy(x: jax.Array, mode: str = "copy") -> jax.Array:
+    return x if mode == "copy" else x * 2
+
+
+def strided_copy(x: jax.Array, *, block_rows: int, stride: int) -> jax.Array:
+    rows, cols = x.shape
+    br = min(block_rows, rows)
+    nblocks = rows // br
+    idx = (jnp.arange(nblocks) * stride) % nblocks
+    return x.reshape(nblocks, br, cols)[idx].reshape(rows, cols)
+
+
+def random_gather(x: jax.Array, idx: jax.Array) -> jax.Array:
+    return x[idx]
+
+
+def pointer_chase(table: jax.Array, steps: int) -> jax.Array:
+    flat = table[:, 0]
+
+    def body(addr, _):
+        nxt = flat[addr]
+        return nxt, nxt
+
+    _, trace = jax.lax.scan(body, jnp.int32(0), None, length=steps)
+    return trace[:, None]
+
+
+def matmul(x: jax.Array, y: jax.Array) -> jax.Array:
+    return jnp.dot(x.astype(jnp.float32), y.astype(jnp.float32)).astype(x.dtype)
+
+
+def decode_attention(q, k, v, valid_len, *, softcap=None, scale=None):
+    """q: (B,Hq,D); k/v: (B,T,Hkv,D); valid_len (B,) -> (B,Hq,D)."""
+    b, hq, d = q.shape
+    _, t, hkv, _ = k.shape
+    g = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+    qg = q.reshape(b, hkv, g, d).astype(jnp.float32) * scale
+    s = jnp.einsum("bhgd,bthd->bhgt", qg, k.astype(jnp.float32))
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    mask = jnp.arange(t)[None, :] < valid_len[:, None]      # (B, T)
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgt,bthd->bhgd", p, v.astype(jnp.float32))
+    return o.reshape(b, hq, d).astype(q.dtype)
+
+
+def paged_attention(q, k_pages, v_pages, page_table, valid_len, *, scale=None):
+    """Gather pages into contiguous caches, then decode_attention."""
+    pool, page, hkv, d = k_pages.shape
+    k = k_pages[page_table]  # (B, N, page, Hkv, D)
+    v = v_pages[page_table]
+    b, n = page_table.shape
+    k = k.reshape(b, n * page, hkv, d)
+    v = v.reshape(b, n * page, hkv, d)
+    return decode_attention(q, k, v, valid_len, scale=scale)
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True, window: Optional[int] = None,
+              softcap: Optional[float] = None,
+              scale: Optional[float] = None) -> jax.Array:
+    """Naive masked-softmax attention; q (B,Hq,Sq,D), kv (B,Hkv,Skv,D)."""
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    g = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+    k = jnp.repeat(k, g, axis=1)
+    v = jnp.repeat(v, g, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32) * scale,
+                   k.astype(jnp.float32))
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    q_pos = jnp.arange(sq)[:, None] + (skv - sq)  # right-aligned (decode-safe)
+    k_pos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), dtype=bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window is not None:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,54 @@
+"""Sequential-stream engine (paper: sequential read/write, Figs. 7/10, Eq. 5/6).
+
+A grid-pipelined HBM->VMEM->HBM copy.  The BlockSpec block is the paper's
+*burst*: one contiguous DMA.  Pallas double-buffers grid inputs, so the
+in-flight count (the paper's *outstanding*) is the pipeline depth (>=2).
+Knobs swept by benchmarks: block_rows x block_cols (burst bytes) and dtype
+(unit size).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _copy_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def _rw_kernel(x_ref, o_ref, scale):
+    # read-modify-write variant: touches the same bytes but adds an op so the
+    # paper's T_o (Eq. 2) is non-zero.
+    o_ref[...] = x_ref[...] * scale
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "block_cols", "mode", "interpret"))
+def stream_copy(x: jax.Array, *, block_rows: int = 256, block_cols: int = 0,
+                mode: str = "copy", interpret: bool = True) -> jax.Array:
+    """Copy (or scale) a 2D array block-by-block.
+
+    ``block_rows*block_cols*itemsize`` is the burst size.  ``block_cols=0``
+    means full rows (maximally contiguous).
+    """
+    rows, cols = x.shape
+    bc = cols if block_cols in (0, None) else block_cols
+    br = min(block_rows, rows)
+    assert rows % br == 0 and cols % bc == 0, (x.shape, br, bc)
+    grid = (rows // br, cols // bc)
+    kern = _copy_kernel if mode == "copy" else functools.partial(_rw_kernel, scale=2)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[pl.BlockSpec((br, bc), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(x)
+
+
+def burst_bytes(x: jax.Array, block_rows: int, block_cols: int = 0) -> int:
+    bc = x.shape[1] if block_cols in (0, None) else block_cols
+    return min(block_rows, x.shape[0]) * bc * x.dtype.itemsize

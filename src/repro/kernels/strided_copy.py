@@ -1,0 +1,40 @@
+"""Strided-traversal engine (paper: Figs. 6/8/9, Alg. 6).
+
+Reads row-blocks at ``(i*stride) % num_blocks`` (the paper's
+``(ADDR + S) mod G`` work-group walk) and writes them back densely.  Stride 1
+degenerates to the sequential engine; larger strides defeat tile contiguity
+exactly like AXI bursts are defeated on the FPGA.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "stride", "interpret"))
+def strided_copy(x: jax.Array, *, block_rows: int = 8, stride: int = 1,
+                 interpret: bool = True) -> jax.Array:
+    """out[i] = x[(i*stride) % nblocks] block-rows at a time (2D input)."""
+    rows, cols = x.shape
+    br = min(block_rows, rows)
+    assert rows % br == 0
+    nblocks = rows // br
+
+    def in_map(i):
+        return ((i * stride) % nblocks, 0)
+
+    return pl.pallas_call(
+        _kernel,
+        grid=(nblocks,),
+        in_specs=[pl.BlockSpec((br, cols), in_map)],
+        out_specs=pl.BlockSpec((br, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(x)

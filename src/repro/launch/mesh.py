@@ -1,0 +1,24 @@
+"""Production mesh construction.
+
+A function (never a module-level constant) so importing this module never
+touches jax device state.  Single pod = (16, 16) v5e-256; multi-pod = 2 pods
+(512 chips) with a leading 'pod' axis carrying pure data parallelism across
+the inter-pod (DCN) boundary.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_test_mesh(data: int = 4, model: int = 2):
+    """CI-scale mesh over however many (fake) devices the host exposes."""
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)

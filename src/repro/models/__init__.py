@@ -1,0 +1,2 @@
+from repro.models.registry import ModelBundle, build  # noqa: F401
+from repro.models.transformer import RuntimeFlags  # noqa: F401

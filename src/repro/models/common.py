@@ -1,0 +1,157 @@
+"""Shared model components: norms, RoPE, embeddings, init helpers.
+
+Parameter trees are built through :class:`ParamBuilder`, which records a
+parallel tree of *logical axis names* for every tensor; ``repro.dist.sharding``
+maps logical axes -> mesh axes (with divisibility fallback).  Model code never
+mentions mesh axes directly.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# logical axis names
+BATCH, SEQ, EMBED, HEADS, KV_HEADS, HEAD_DIM, FF, VOCAB = (
+    "batch", "seq", "embed", "heads", "kv_heads", "head_dim", "ff", "vocab")
+EXPERT, LAYERS, STATE, CONV = "expert", "layers", "state", "conv"
+
+Sharder = Callable[[jax.Array, Tuple[Optional[str], ...]], jax.Array]
+
+
+def no_shard(x: jax.Array, axes) -> jax.Array:
+    return x
+
+
+class ParamBuilder:
+    """Collects (param, logical-axes) pairs under nested dict paths.
+
+    ``abstract=True`` builds ShapeDtypeStructs instead of arrays (zero
+    compute/memory) — how the dry-run gets 314B-parameter trees."""
+
+    def __init__(self, key: Optional[jax.Array], param_dtype, abstract: bool = False):
+        self.key = key
+        self.dtype = param_dtype
+        self.abstract = abstract
+        self.params: dict = {}
+        self.specs: dict = {}
+
+    def _split(self):
+        if self.abstract:
+            return None
+        self.key, sub = jax.random.split(self.key)
+        return sub
+
+    def _put(self, path: str, value, axes):
+        parts = path.split(".")
+        p, s = self.params, self.specs
+        for part in parts[:-1]:
+            p = p.setdefault(part, {})
+            s = s.setdefault(part, {})
+        p[parts[-1]] = value
+        s[parts[-1]] = tuple(axes)
+
+    def dense(self, path: str, shape: Sequence[int], axes: Sequence[Optional[str]],
+              scale: Optional[float] = None):
+        if self.abstract:
+            self._put(path, jax.ShapeDtypeStruct(tuple(shape), self.dtype), axes)
+            return
+        fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+        std = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+        w = (jax.random.truncated_normal(self._split(), -2, 2, shape, jnp.float32)
+             * std).astype(self.dtype)
+        self._put(path, w, axes)
+
+    def zeros(self, path: str, shape, axes):
+        if self.abstract:
+            self._put(path, jax.ShapeDtypeStruct(tuple(shape), self.dtype), axes)
+            return
+        self._put(path, jnp.zeros(shape, self.dtype), axes)
+
+    def ones(self, path: str, shape, axes):
+        if self.abstract:
+            self._put(path, jax.ShapeDtypeStruct(tuple(shape), self.dtype), axes)
+            return
+        self._put(path, jnp.ones(shape, self.dtype), axes)
+
+    def const(self, path: str, value, axes, dtype=None):
+        if self.abstract:
+            shape = jnp.shape(value)
+            self._put(path, jax.ShapeDtypeStruct(shape, dtype or self.dtype), axes)
+            return
+        self._put(path, jnp.asarray(value, dtype or self.dtype), axes)
+
+
+# ---------------------------------------------------------------------------
+# ops
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + weight.astype(jnp.float32))).astype(dt)
+
+
+def softcap(x: jax.Array, cap: Optional[float]) -> jax.Array:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding.  x: (B, S, H, D); positions: (B, S) int32."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freq  # (B, S, half)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array, bias: Optional[jax.Array] = None,
+                  state: Optional[jax.Array] = None) -> jax.Array:
+    """Depthwise causal conv.  x: (B, S, C); w: (K, C).  ``state``: (B, K-1, C)
+    trailing context from a previous segment (decode), else zero-padded."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[-1]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, S+K-1, C)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :] for i in range(k))
+    if bias is not None:
+        out = out + bias[None, None, :]
+    return out
+
+
+def conv_state_from(x: jax.Array, k: int, prev: Optional[jax.Array] = None) -> jax.Array:
+    """Trailing (K-1) inputs to carry as decode conv state."""
+    if prev is not None:
+        x = jnp.concatenate([prev, x], axis=1)
+    return x[:, -(k - 1):, :]
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: Optional[jax.Array] = None,
+                  z_loss: float = 0.0) -> jax.Array:
+    """Mean next-token CE in fp32.  labels -100 are ignored."""
+    logits = logits.astype(jnp.float32)
+    valid = labels >= 0
+    if mask is not None:
+        valid &= mask.astype(bool)
+    safe = jnp.where(valid, labels, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = (lse - ll) * valid
+    if z_loss:
+        nll = nll + z_loss * jnp.square(lse) * valid
+    denom = jnp.maximum(jnp.sum(valid), 1)
+    return jnp.sum(nll) / denom

@@ -1,0 +1,212 @@
+"""Encoder-decoder assembly (seamless-m4t family).
+
+Encoder: bidirectional self-attn + FFN over stubbed frame embeddings
+(B, S, d) — the modality frontend is precomputed per the assignment.
+Decoder: causal self-attn + cross-attn(encoder memory) + FFN.
+
+Decode caches: self-attn KV (ring-free, full length) + per-layer cross K/V
+computed once at prefill (the paper's `nest` with two independent cursors).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import mlp as mlp_mod
+from repro.models.attention import AttnParams
+from repro.models.common import (EMBED, HEADS, KV_HEADS, LAYERS, VOCAB,
+                                 ParamBuilder, cross_entropy, rms_norm, rope)
+from repro.models.transformer import RuntimeFlags, chunked_ce, compute_logits
+
+
+def _init_attn(b, path, cfg, stacked):
+    lead = (stacked,) if stacked else ()
+    la = (LAYERS,) if stacked else ()
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    b.dense(f"{path}.wq", lead + (d, cfg.num_heads * hd), la + (EMBED, HEADS))
+    b.dense(f"{path}.wk", lead + (d, cfg.num_kv_heads * hd), la + (EMBED, KV_HEADS))
+    b.dense(f"{path}.wv", lead + (d, cfg.num_kv_heads * hd), la + (EMBED, KV_HEADS))
+    b.dense(f"{path}.wo", lead + (cfg.num_heads * hd, d), la + (HEADS, EMBED))
+
+
+def init_params(cfg: ModelConfig, key, abstract: bool = False) -> Tuple[dict, dict]:
+    b = ParamBuilder(key, jnp.dtype(cfg.param_dtype), abstract=abstract)
+    d = cfg.d_model
+    ne, nd = cfg.num_encoder_layers, cfg.num_layers
+    b.dense("embed.tok", (cfg.vocab_size, d), (VOCAB, EMBED), scale=d ** -0.5)
+    b.zeros("enc.ln1", (ne, d), (LAYERS, EMBED))
+    _init_attn(b, "enc.attn", cfg, ne)
+    b.zeros("enc.ln2", (ne, d), (LAYERS, EMBED))
+    mlp_mod.init(b, "enc.mlp", d, cfg.d_ff, cfg.activation, ne)
+    b.zeros("enc_norm", (d,), (EMBED,))
+    b.zeros("dec.ln1", (nd, d), (LAYERS, EMBED))
+    _init_attn(b, "dec.self", cfg, nd)
+    b.zeros("dec.lnx", (nd, d), (LAYERS, EMBED))
+    _init_attn(b, "dec.cross", cfg, nd)
+    b.zeros("dec.ln2", (nd, d), (LAYERS, EMBED))
+    mlp_mod.init(b, "dec.mlp", d, cfg.d_ff, cfg.activation, nd)
+    b.zeros("final_norm", (d,), (EMBED,))
+    if not cfg.tie_embeddings:
+        b.dense("lm_head", (d, cfg.vocab_size), (EMBED, VOCAB))
+    return b.params, b.specs
+
+
+def _qkv(p, x, cfg, positions=None):
+    bsz, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"]).reshape(bsz, s, cfg.num_heads, hd)
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"]).reshape(bsz, s, cfg.num_kv_heads, hd)
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"]).reshape(bsz, s, cfg.num_kv_heads, hd)
+    if positions is not None:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _proj_out(p, o, cfg):
+    bsz, s = o.shape[:2]
+    o = o.reshape(bsz, s, cfg.num_heads * cfg.resolved_head_dim)
+    return jnp.einsum("bsh,hd->bsd", o, p["wo"])
+
+
+def encode(params, cfg: ModelConfig, flags: RuntimeFlags, frames: jax.Array):
+    """frames: (B, S, d) -> encoder memory (B, S, d)."""
+    ap = AttnParams(impl=flags.attn_impl, causal=False,
+                    bq=flags.attn_bq, bkv=flags.attn_bkv)
+    bsz, s, _ = frames.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (bsz, s))
+
+    def body(x, bp):
+        h = rms_norm(x, bp["ln1"])
+        q, k, v = _qkv(bp["attn"], h, cfg, positions)
+        x = x + _proj_out(bp["attn"], attn_mod.attention(q, k, v, ap), cfg)
+        h = rms_norm(x, bp["ln2"])
+        x = x + mlp_mod.apply(bp["mlp"], h, cfg.activation, flags.shd)
+        x = flags.shd(x, ("batch", "seq", "embed"))
+        return x, None
+
+    if flags.remat != "none":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable,
+            prevent_cse=False)
+    x = flags.shd(frames.astype(jnp.dtype(cfg.compute_dtype)),
+                  ("batch", "seq", "embed"))
+    x, _ = jax.lax.scan(body, x, params["enc"])
+    return rms_norm(x, params["enc_norm"])
+
+
+def _decoder(params, cfg, flags, x, memory=None, cache=None, pos=None,
+             mode="train"):
+    """x: (B, St, d) token embeddings.  memory: (B, Se, d) (train/prefill)."""
+    ap_self = AttnParams(impl=flags.attn_impl, causal=True,
+                         bq=flags.attn_bq, bkv=flags.attn_bkv)
+    ap_cross = AttnParams(impl=flags.attn_impl, causal=False,
+                          bq=flags.attn_bq, bkv=flags.attn_bkv)
+    bsz, st, _ = x.shape
+
+    if mode == "decode":
+        posv = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (bsz,))
+        positions = posv[:, None]
+    else:
+        posv = None
+        positions = jnp.broadcast_to(jnp.arange(st, dtype=jnp.int32)[None],
+                                     (bsz, st))
+
+    def body(carry, xs):
+        x = carry
+        bp, bc = xs
+        # --- causal self-attention (cached in decode) ---
+        h = rms_norm(x, bp["ln1"])
+        q, k, v = _qkv(bp["self"], h, cfg, positions)
+        if mode == "decode":
+            if jnp.ndim(pos) == 0:  # batch-uniform: DUS, SPMD-friendly
+                kc = jax.lax.dynamic_update_slice_in_dim(bc["k"], k, pos, 1)
+                vc = jax.lax.dynamic_update_slice_in_dim(bc["v"], v, pos, 1)
+            else:
+                bidx = jnp.arange(bsz)
+                kc = bc["k"].at[bidx, posv].set(k[:, 0])
+                vc = bc["v"].at[bidx, posv].set(v[:, 0])
+            o = attn_mod.naive_attention(q, kc, vc, ap_self, q_offset=posv,
+                                         kv_valid_len=posv + 1)
+            ck, cv = bc["ck"], bc["cv"]
+            new_c = dict(k=kc, v=vc, ck=ck, cv=cv)
+        else:
+            o = attn_mod.attention(q, k, v, ap_self)
+            ck, cv = _cross_kv(bp["cross"], memory, cfg)
+            new_c = dict(k=k, v=v, ck=ck, cv=cv) if mode == "prefill" else None
+        x = x + _proj_out(bp["self"], o, cfg)
+        # --- cross-attention over encoder memory ---
+        h = rms_norm(x, bp["lnx"])
+        hd = cfg.resolved_head_dim
+        qx = jnp.einsum("bsd,dh->bsh", h, bp["cross"]["wq"]).reshape(
+            bsz, st, cfg.num_heads, hd)
+        ox = attn_mod.attention(qx, ck, cv, ap_cross)
+        x = x + _proj_out(bp["cross"], ox, cfg)
+        # --- FFN ---
+        h = rms_norm(x, bp["ln2"])
+        x = x + mlp_mod.apply(bp["mlp"], h, cfg.activation, flags.shd)
+        x = flags.shd(x, ("batch", "seq", "embed"))
+        return x, new_c
+
+    if flags.remat != "none" and mode == "train":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable,
+            prevent_cse=False)
+    xs = (params["dec"], cache["dec"] if cache is not None else None)
+    x, new_cache = jax.lax.scan(body, x, xs)
+    x = rms_norm(x, params["final_norm"])
+    return x, (dict(dec=new_cache) if mode != "train" else None)
+
+
+def _cross_kv(p, memory, cfg):
+    bsz, se, _ = memory.shape
+    hd = cfg.resolved_head_dim
+    k = jnp.einsum("bsd,dh->bsh", memory, p["wk"]).reshape(
+        bsz, se, cfg.num_kv_heads, hd)
+    v = jnp.einsum("bsd,dh->bsh", memory, p["wv"]).reshape(
+        bsz, se, cfg.num_kv_heads, hd)
+    return k, v
+
+
+def _embed(params, cfg, tokens):
+    return jnp.take(params["embed"]["tok"], tokens, axis=0)
+
+
+def train_loss(params, cfg: ModelConfig, flags: RuntimeFlags, batch: dict):
+    memory = encode(params, cfg, flags, batch["frames"])
+    x = _embed(params, cfg, batch["dec_tokens"])
+    x, _ = _decoder(params, cfg, flags, x, memory=memory, mode="train")
+    loss = chunked_ce(params, cfg, x, batch["labels"], flags)
+    return loss, dict(ce=loss, aux=jnp.zeros((), jnp.float32))
+
+
+def prefill(params, cfg: ModelConfig, flags: RuntimeFlags, batch: dict):
+    memory = encode(params, cfg, flags, batch["frames"])
+    x = _embed(params, cfg, batch["dec_tokens"])
+    x, cache = _decoder(params, cfg, flags, x, memory=memory, mode="prefill")
+    last_logits = compute_logits(params, cfg, x[:, -1:])[:, 0]
+    return cache, last_logits
+
+
+def decode_step(params, cfg: ModelConfig, flags: RuntimeFlags, cache: dict,
+                tokens: jax.Array, pos: jax.Array):
+    x = _embed(params, cfg, tokens)
+    x, new_cache = _decoder(params, cfg, flags, x, cache=cache, pos=pos,
+                            mode="decode")
+    logits = compute_logits(params, cfg, x)[:, 0]
+    return logits, new_cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, enc_len: int) -> dict:
+    dtype = jnp.dtype(cfg.compute_dtype)
+    nd, hkv, hd = cfg.num_layers, cfg.num_kv_heads, cfg.resolved_head_dim
+    return dict(dec=dict(
+        k=jnp.zeros((nd, batch, max_len, hkv, hd), dtype),
+        v=jnp.zeros((nd, batch, max_len, hkv, hd), dtype),
+        ck=jnp.zeros((nd, batch, enc_len, hkv, hd), dtype),
+        cv=jnp.zeros((nd, batch, enc_len, hkv, hd), dtype),
+    ))

@@ -1,0 +1,39 @@
+"""Dense FFN: SwiGLU / GeGLU / plain-GELU variants."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import EMBED, FF, LAYERS, ParamBuilder, Sharder, no_shard
+
+_ACT = {
+    "swiglu": jax.nn.silu,
+    "geglu": lambda x: jax.nn.gelu(x, approximate=True),
+    "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+}
+
+
+def init(b: ParamBuilder, path: str, d: int, f: int, activation: str,
+         stacked: int = 0):
+    """stacked>0 prepends a LAYERS axis (scan-stacked params)."""
+    lead = (stacked,) if stacked else ()
+    lax_ = (LAYERS,) if stacked else ()
+    gated = activation in ("swiglu", "geglu")
+    if gated:
+        b.dense(f"{path}.w_gate", lead + (d, f), lax_ + (EMBED, FF))
+        b.dense(f"{path}.w_up", lead + (d, f), lax_ + (EMBED, FF))
+    else:
+        b.dense(f"{path}.w_up", lead + (d, f), lax_ + (EMBED, FF))
+    b.dense(f"{path}.w_down", lead + (f, d), lax_ + (FF, EMBED))
+
+
+def apply(p: dict, x: jax.Array, activation: str, shd: Sharder = no_shard) -> jax.Array:
+    act = _ACT[activation]
+    up = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+    if "w_gate" in p:
+        gate = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
+        h = act(gate) * up
+    else:
+        h = act(up)
+    h = shd(h, ("batch", None, "ff"))
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"])

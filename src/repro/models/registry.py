@@ -1,0 +1,110 @@
+"""ModelBundle: one uniform interface over all architecture families.
+
+``build(cfg, flags)`` returns a bundle exposing init / train_loss / prefill /
+decode_step plus the abstract input/param/cache specs the dry-run lowers with
+(ShapeDtypeStruct stand-ins, zero allocation).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import DECODE, PREFILL, TRAIN, ModelConfig, ShapeCell
+from repro.models import encdec, transformer
+from repro.models.transformer import RuntimeFlags
+
+
+@dataclass
+class ModelBundle:
+    cfg: ModelConfig
+    flags: RuntimeFlags
+
+    # ------------------------------------------------------------------
+    def init(self, key: jax.Array) -> dict:
+        params, _ = self._init_fn()(self.cfg, key)
+        return params
+
+    def abstract_params(self) -> Tuple[dict, dict]:
+        """(ShapeDtypeStruct tree, logical-axes tree) — no allocation."""
+        return self._init_fn()(self.cfg, None, abstract=True)
+
+    def _init_fn(self):
+        return encdec.init_params if self.cfg.enc_dec else transformer.init_params
+
+    # ------------------------------------------------------------------
+    def train_loss(self, params, batch):
+        if self.cfg.enc_dec:
+            return encdec.train_loss(params, self.cfg, self.flags, batch)
+        return transformer.train_loss(params, self.cfg, self.flags, batch)
+
+    def prefill(self, params, batch):
+        if self.cfg.enc_dec:
+            return encdec.prefill(params, self.cfg, self.flags, batch)
+        return transformer.prefill(params, self.cfg, self.flags, batch)
+
+    def decode_step(self, params, cache, tokens, pos):
+        if self.cfg.enc_dec:
+            return encdec.decode_step(params, self.cfg, self.flags, cache,
+                                      tokens, pos)
+        return transformer.decode_step(params, self.cfg, self.flags, cache,
+                                       tokens, pos)
+
+    # ------------------------------------------------------------------
+    # abstract specs for the dry-run
+    # ------------------------------------------------------------------
+    def input_specs(self, cell: ShapeCell) -> dict:
+        """ShapeDtypeStruct stand-ins for every data input of the cell."""
+        cfg = self.cfg
+        b = cell.global_batch
+        s = cell.seq_len
+        i32 = jnp.int32
+        cdt = jnp.dtype(cfg.compute_dtype)
+        if cfg.enc_dec:
+            if cell.kind == TRAIN or cell.kind == PREFILL:
+                d = dict(
+                    frames=jax.ShapeDtypeStruct((b, s, cfg.d_model), cdt),
+                    dec_tokens=jax.ShapeDtypeStruct((b, s), i32))
+                if cell.kind == TRAIN:
+                    d["labels"] = jax.ShapeDtypeStruct((b, s), i32)
+                return d
+            return dict(tokens=jax.ShapeDtypeStruct((b, 1), i32),
+                        pos=jax.ShapeDtypeStruct((), i32))
+        if cell.kind in (TRAIN, PREFILL):
+            d = {}
+            if cfg.frontend:
+                p = min(cfg.num_frontend_tokens, s // 2)
+                d["patch_embeds"] = jax.ShapeDtypeStruct((b, p, cfg.d_model), cdt)
+                d["tokens"] = jax.ShapeDtypeStruct((b, s - p), i32)
+            else:
+                d["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+            if cell.kind == TRAIN:
+                d["labels"] = jax.ShapeDtypeStruct((b, s), i32)
+            return d
+        return dict(tokens=jax.ShapeDtypeStruct((b, 1), i32),
+                    pos=jax.ShapeDtypeStruct((), i32))
+
+    def cache_specs(self, cell: ShapeCell):
+        """Abstract decode-cache tree for the cell (eval_shape, no alloc)."""
+        cfg = self.cfg
+        if cfg.enc_dec:
+            fn = lambda: encdec.init_cache(cfg, cell.global_batch, cell.seq_len,
+                                           cell.seq_len)
+        else:
+            fn = lambda: transformer.init_cache(cfg, cell.global_batch,
+                                                cell.seq_len,
+                                                self.flags.kv_dtype)
+        return jax.eval_shape(fn)
+
+    def init_cache(self, batch: int, max_len: int, enc_len: Optional[int] = None):
+        if self.cfg.enc_dec:
+            return encdec.init_cache(self.cfg, batch, max_len,
+                                     enc_len or max_len)
+        return transformer.init_cache(self.cfg, batch, max_len,
+                                      self.flags.kv_dtype)
+
+
+def build(cfg: ModelConfig, flags: Optional[RuntimeFlags] = None) -> ModelBundle:
+    return ModelBundle(cfg=cfg, flags=flags or RuntimeFlags())

@@ -1,0 +1,116 @@
+"""Griffin RG-LRU recurrent block [arXiv:2402.19427] (recurrentgemma).
+
+Block = two branches from the residual stream:
+  gate branch:      linear(d -> w) -> GeLU
+  recurrent branch: linear(d -> w) -> causal conv1d (K=4) -> RG-LRU
+merged:             (gate ⊙ lru_out) @ W_out
+
+RG-LRU (per channel):
+  r_t = sigmoid(BD_a(x_t));  i_t = sigmoid(BD_x(x_t))
+  log a_t = -c * softplus(Lambda) * r_t          (c = 8)
+  h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t ⊙ x_t)
+
+BD_* are block-diagonal linears (8 blocks) as in the reference model.  The
+sequence recurrence is a DAG-structured ``lax.associative_scan`` (exact
+cost_analysis, log-depth).  Decode is a single-step update.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import (CONV, EMBED, FF, LAYERS, ParamBuilder,
+                                 Sharder, causal_conv1d, conv_state_from,
+                                 no_shard)
+
+C_FACTOR = 8.0
+N_BLOCKS = 8
+
+
+def width(cfg: ModelConfig) -> int:
+    return cfg.lru_width or cfg.d_model
+
+
+def init(b: ParamBuilder, path: str, cfg: ModelConfig, stacked: int = 0):
+    d, w = cfg.d_model, width(cfg)
+    lead = (stacked,) if stacked else ()
+    la = (LAYERS,) if stacked else ()
+    b.dense(f"{path}.w_gate_in", lead + (d, w), la + (EMBED, FF))
+    b.dense(f"{path}.w_rec_in", lead + (d, w), la + (EMBED, FF))
+    b.dense(f"{path}.conv_w", lead + (4, w), la + (CONV, FF), scale=0.5)
+    b.zeros(f"{path}.conv_b", lead + (w,), la + (FF,))
+    blk = w // N_BLOCKS
+    b.dense(f"{path}.bd_a", lead + (N_BLOCKS, blk, blk), la + (None, FF, None))
+    b.zeros(f"{path}.bd_a_bias", lead + (w,), la + (FF,))
+    b.dense(f"{path}.bd_x", lead + (N_BLOCKS, blk, blk), la + (None, FF, None))
+    b.zeros(f"{path}.bd_x_bias", lead + (w,), la + (FF,))
+    # Lambda init so that a^c spans ~(0.9, 0.999) as in the paper
+    b.const(f"{path}.lam", jnp.full(lead + (w,), 0.66), la + (FF,))
+    b.dense(f"{path}.w_out", lead + (w, d), la + (FF, EMBED))
+
+
+class LRUState(NamedTuple):
+    h: jax.Array       # (B, w) fp32
+    conv: jax.Array    # (B, 3, w)
+
+
+def init_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> LRUState:
+    w = width(cfg)
+    return LRUState(h=jnp.zeros((batch, w), jnp.float32),
+                    conv=jnp.zeros((batch, 3, w), dtype))
+
+
+def _block_diag(x, wmat, bias):
+    """x: (..., w) with w = NB*blk; wmat: (NB, blk, blk)."""
+    nb, blk, _ = wmat.shape
+    xb = x.reshape(x.shape[:-1] + (nb, blk))
+    out = jnp.einsum("...nb,nbc->...nc", xb, wmat)
+    return out.reshape(x.shape) + bias
+
+
+def _gates(p, xr):
+    """returns (log_a, gated_input) both fp32; xr (..., w)."""
+    r = jax.nn.sigmoid(_block_diag(xr, p["bd_a"], p["bd_a_bias"]).astype(jnp.float32))
+    i = jax.nn.sigmoid(_block_diag(xr, p["bd_x"], p["bd_x_bias"]).astype(jnp.float32))
+    log_a = -C_FACTOR * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * xr.astype(jnp.float32))
+    return a, gated
+
+
+def forward(p, x, cfg: ModelConfig, shd: Sharder = no_shard,
+            return_state: bool = False):
+    """x: (B, S, d) -> (B, S, d)."""
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["w_gate_in"]))
+    xr = jnp.einsum("bsd,dw->bsw", x, p["w_rec_in"])
+    conv_state = conv_state_from(xr, 4)
+    xr = causal_conv1d(xr, p["conv_w"], p["conv_b"])
+    a, gated = _gates(p, xr)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, br + ar * bl
+
+    _, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    hlast = h[:, -1]
+    h = h.astype(x.dtype)
+    out = jnp.einsum("bsw,wd->bsd", gate * h, p["w_out"])
+    if return_state:
+        return out, LRUState(h=hlast.astype(jnp.float32), conv=conv_state)
+    return out
+
+
+def decode_step(p, x, st: LRUState, cfg: ModelConfig):
+    """x: (B, 1, d) -> (B, 1, d), new state."""
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["w_gate_in"]))
+    xr = jnp.einsum("bsd,dw->bsw", x, p["w_rec_in"])
+    new_conv = conv_state_from(xr, 4, prev=st.conv)
+    xr = causal_conv1d(xr, p["conv_w"], p["conv_b"], state=st.conv)
+    a, gated = _gates(p, xr)
+    h = a[:, 0] * st.h + gated[:, 0]
+    out = jnp.einsum("bsw,wd->bsd", gate * h[:, None].astype(x.dtype), p["w_out"])
+    return out, LRUState(h=h, conv=new_conv)

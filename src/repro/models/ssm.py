@@ -1,0 +1,168 @@
+"""Mamba-2 SSD (state-space duality) mixer [arXiv:2405.21060].
+
+Chunked algorithm (ngroups=1), following `ssd_minimal_discrete`:
+  - intra-chunk ("diagonal block"): the quadratic-attention dual inside each
+    Q-token chunk, with the decay matrix L[l,s] = exp(cum[l]-cum[s]), l>=s;
+  - inter-chunk: per-chunk terminal states combined with a DAG-structured
+    ``lax.associative_scan`` (no while loop -> exact cost_analysis and
+    log-depth on hardware).
+
+The chunk size is a paper-knob: it is the burst/tile size of the `nest`-like
+traversal (intra bytes/token ~ Q*H, state bytes/token ~ H*P*N/Q), and the
+hillclimb sweeps it.  Decode is a single recurrent state update.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import (CONV, EMBED, FF, HEADS, LAYERS, STATE,
+                                 ParamBuilder, Sharder, causal_conv1d,
+                                 conv_state_from, no_shard, rms_norm)
+
+
+def dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    d_in = cfg.ssm_expand * cfg.d_model
+    nheads = d_in // cfg.ssm_head_dim
+    return d_in, nheads, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def init(b: ParamBuilder, path: str, cfg: ModelConfig, stacked: int = 0):
+    d = cfg.d_model
+    d_in, h, p_, n = dims(cfg)
+    lead = (stacked,) if stacked else ()
+    la = (LAYERS,) if stacked else ()
+    proj_out = 2 * d_in + 2 * n + h
+    b.dense(f"{path}.w_in", lead + (d, proj_out), la + (EMBED, FF))
+    b.dense(f"{path}.conv_w", lead + (cfg.ssm_conv_width, d_in + 2 * n),
+            la + (CONV, FF), scale=0.5)
+    b.zeros(f"{path}.conv_b", lead + (d_in + 2 * n,), la + (FF,))
+    b.const(f"{path}.a_log", jnp.zeros(lead + (h,)), la + (HEADS,))
+    b.ones(f"{path}.d_skip", lead + (h,), la + (HEADS,))
+    b.zeros(f"{path}.dt_bias", lead + (h,), la + (HEADS,))
+    b.ones(f"{path}.norm", lead + (d_in,), la + (FF,))
+    b.dense(f"{path}.w_out", lead + (d_in, d), la + (FF, EMBED))
+
+
+def _split(p, x, cfg):
+    d_in, h, _, n = dims(cfg)
+    zxbcdt = jnp.einsum("bsd,dk->bsk", x, p["w_in"])
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in:2 * d_in + 2 * n]
+    dt = zxbcdt[..., 2 * d_in + 2 * n:]
+    return z, xbc, dt
+
+
+class SSDState(NamedTuple):
+    state: jax.Array   # (B, H, P, N) fp32
+    conv: jax.Array    # (B, K-1, d_in+2N)
+
+
+def init_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> SSDState:
+    d_in, h, p_, n = dims(cfg)
+    return SSDState(
+        state=jnp.zeros((batch, h, p_, n), jnp.float32),
+        conv=jnp.zeros((batch, cfg.ssm_conv_width - 1, d_in + 2 * n), dtype),
+    )
+
+
+def forward(p, x, cfg: ModelConfig, shd: Sharder = no_shard,
+            return_state: bool = False):
+    """x: (B, S, d) -> (B, S, d) [, SSDState].  S % chunk == 0."""
+    bsz, orig_s, _ = x.shape
+    d_in, h, hp, n = dims(cfg)
+    q = min(cfg.ssm_chunk, orig_s)
+    pad = (-orig_s) % q
+
+    z, xbc, dt = _split(p, x, cfg)
+    conv_state = conv_state_from(xbc, cfg.ssm_conv_width)
+    xbc = jax.nn.silu(causal_conv1d(xbc, p["conv_w"], p["conv_b"]))
+    if pad:
+        # identity-pad: dt is forced to 0 on padded steps (decay 1, input 0),
+        # so outputs and the final state are exact.
+        xbc = jnp.pad(xbc, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)),
+                     constant_values=-1e9)  # softplus(-1e9 + bias) == 0
+    s = orig_s + pad
+    nc = s // q
+    xs = xbc[..., :d_in].reshape(bsz, s, h, hp)
+    bmat = xbc[..., d_in:d_in + n]
+    cmat = xbc[..., d_in + n:]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    da = dt * a                                    # (B,S,H) log-decay
+    xdt = xs.astype(jnp.float32) * dt[..., None]   # discretized input
+
+    # chunk views
+    csh = lambda t, *rest: t.reshape(bsz, nc, q, *rest)
+    xc = csh(xdt, h, hp)
+    dac = csh(da, h)
+    bc = csh(bmat.astype(jnp.float32), n)
+    cc = csh(cmat.astype(jnp.float32), n)
+
+    cum = jnp.cumsum(dac, axis=2)                  # (B,C,Q,H)
+    # --- intra-chunk (quadratic dual) ---
+    scores = jnp.einsum("bcln,bcsn->bcls", cc, bc)
+    ldec = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])  # (B,C,Q,Q,H)
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    ldec = jnp.where(tri[None, None, :, :, None], ldec, 0.0)
+    y_diag = jnp.einsum("bcls,bclsh,bcshp->bclhp", scores, ldec, xc)
+
+    # --- per-chunk terminal states + associative prefix ---
+    decay_states = jnp.exp(cum[:, :, -1:, :] - cum)             # (B,C,Q,H)
+    states_loc = jnp.einsum("bcsn,bcsh,bcshp->bchpn", bc, decay_states, xc)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                     # (B,C,H)
+
+    def combine(left, right):
+        dl, sl = left
+        dr, sr = right
+        return dl * dr, sr + dr[..., None, None] * sl
+
+    dec_all, st_all = jax.lax.associative_scan(
+        combine, (chunk_decay, states_loc), axis=1)
+    prev = jnp.concatenate(
+        [jnp.zeros_like(st_all[:, :1]), st_all[:, :-1]], axis=1)
+
+    # --- off-diagonal (state-passing) ---
+    y_off = jnp.einsum("bcln,bchpn,bclh->bclhp", cc, prev, jnp.exp(cum))
+
+    y = (y_diag + y_off).reshape(bsz, s, h, hp)
+    y = y + p["d_skip"].astype(jnp.float32)[None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(bsz, s, d_in)[:, :orig_s].astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"] - 1.0)  # gated norm
+    out = jnp.einsum("bsk,kd->bsd", y, p["w_out"])
+    if return_state:
+        final = st_all[:, -1]                                   # (B,H,P,N)
+        return out, SSDState(state=final, conv=conv_state)
+    return out
+
+
+def decode_step(p, x, st: SSDState, cfg: ModelConfig):
+    """x: (B, 1, d) -> (B, 1, d), new state."""
+    bsz = x.shape[0]
+    d_in, h, hp, n = dims(cfg)
+    z, xbc, dt = _split(p, x, cfg)
+    new_conv = conv_state_from(xbc, cfg.ssm_conv_width, prev=st.conv)
+    xbc = jax.nn.silu(
+        causal_conv1d(xbc, p["conv_w"], p["conv_b"], state=st.conv))
+    xs = xbc[:, 0, :d_in].reshape(bsz, h, hp)
+    bvec = xbc[:, 0, d_in:d_in + n]
+    cvec = xbc[:, 0, d_in + n:]
+
+    dt = jax.nn.softplus(
+        dt[:, 0].astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    da = jnp.exp(dt * a)                                        # (B,H)
+    xdt = xs.astype(jnp.float32) * dt[..., None]
+    state = st.state * da[..., None, None] + jnp.einsum(
+        "bhp,bn->bhpn", xdt, bvec.astype(jnp.float32))
+    y = jnp.einsum("bn,bhpn->bhp", cvec.astype(jnp.float32), state)
+    y = y + p["d_skip"].astype(jnp.float32)[None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(bsz, 1, d_in).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"] - 1.0)
+    out = jnp.einsum("bsk,kd->bsd", y, p["w_out"])
+    return out, SSDState(state=state, conv=new_conv)

@@ -1,0 +1,469 @@
+"""Decoder-only LM assembly covering the dense / moe / ssm / hybrid / vlm
+families.
+
+Layer stacks are scanned: parameters for each *pattern position* are stacked
+on a leading LAYERS axis and ``lax.scan`` iterates pattern blocks (gemma2
+scans (local, global) pairs; recurrentgemma scans (rec, rec, attn) triples
+plus 2 unrolled remainder layers).  ``flags.unroll_layers`` switches to a
+python loop for roofline-mode compiles.
+
+Three modes: ``train`` (full seq, no cache), ``prefill`` (full seq ->
+cache), ``decode`` (one token, cache in/out).  Sliding-window layers keep
+ring-buffer caches of window length (this is what makes recurrentgemma's
+long_500k cell constant-memory).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ATTN, DENSE, MOE, NONE, RGLRU, SSD, LayerSpec, ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import mlp as mlp_mod
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import ssm as ssm_mod
+from repro.models.attention import AttnParams
+from repro.models.common import (EMBED, HEADS, KV_HEADS, LAYERS, VOCAB,
+                                 ParamBuilder, Sharder, cross_entropy,
+                                 no_shard, rms_norm, rope, softcap)
+
+
+@dataclass(frozen=True)
+class RuntimeFlags:
+    """Execution knobs (never affect math, except kv_dtype quantization)."""
+
+    attn_impl: str = "chunked"       # naive | chunked | pallas
+    attn_bq: int = 512
+    attn_bkv: int = 1024
+    moe_impl: str = "sorted"         # dense | sorted
+    moe_group: int = 1024
+    remat: str = "none"              # none | full | dots
+    unroll_layers: bool = False      # roofline mode
+    loss_chunk: int = 512
+    aux_loss_weight: float = 0.01
+    kv_dtype: str = "native"         # native | int8  (decode-cache quant:
+    #                                  the paper's unit-size lever on the KV
+    #                                  stream — halves cache bytes)
+    shd: Sharder = no_shard
+
+
+def _kv_quant(x):
+    """(B,S,H,D) -> (int8, per-token scale (B,S) f32)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=(2, 3))
+    scale = jnp.maximum(amax, 1e-6) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[:, :, None, None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _kv_dequant(q, scale, dtype):
+    return (q.astype(jnp.float32) * scale[:, :, None, None]).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_layer(b: ParamBuilder, path: str, spec: LayerSpec, cfg: ModelConfig,
+                stacked: int):
+    lead = (stacked,) if stacked else ()
+    la = (LAYERS,) if stacked else ()
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    b.zeros(f"{path}.ln1", lead + (d,), la + (EMBED,))
+    if spec.mixer == ATTN:
+        b.dense(f"{path}.attn.wq", lead + (d, cfg.num_heads * hd),
+                la + (EMBED, HEADS))
+        b.dense(f"{path}.attn.wk", lead + (d, cfg.num_kv_heads * hd),
+                la + (EMBED, KV_HEADS))
+        b.dense(f"{path}.attn.wv", lead + (d, cfg.num_kv_heads * hd),
+                la + (EMBED, KV_HEADS))
+        b.dense(f"{path}.attn.wo", lead + (cfg.num_heads * hd, d),
+                la + (HEADS, EMBED))
+    elif spec.mixer == SSD:
+        ssm_mod.init(b, f"{path}.ssd", cfg, stacked)
+    elif spec.mixer == RGLRU:
+        rglru_mod.init(b, f"{path}.rglru", cfg, stacked)
+    else:
+        raise ValueError(spec.mixer)
+    if spec.mlp == DENSE:
+        b.zeros(f"{path}.ln2", lead + (d,), la + (EMBED,))
+        mlp_mod.init(b, f"{path}.mlp", d, cfg.d_ff, cfg.activation, stacked)
+    elif spec.mlp == MOE:
+        b.zeros(f"{path}.ln2", lead + (d,), la + (EMBED,))
+        moe_mod.init(b, f"{path}.moe", d, cfg.d_ff, cfg.num_experts,
+                     cfg.activation, stacked)
+
+
+def init_params(cfg: ModelConfig, key: Optional[jax.Array],
+                abstract: bool = False) -> Tuple[dict, dict]:
+    b = ParamBuilder(key, jnp.dtype(cfg.param_dtype), abstract=abstract)
+    b.dense("embed.tok", (cfg.vocab_size, cfg.d_model), (VOCAB, EMBED),
+            scale=cfg.d_model ** -0.5)
+    nb = cfg.num_pattern_blocks
+    for j, spec in enumerate(cfg.layer_pattern):
+        _init_layer(b, f"blocks.p{j}", spec, cfg, nb)
+    for j, spec in enumerate(cfg.remainder_specs):
+        _init_layer(b, f"rem.r{j}", spec, cfg, 0)
+    b.zeros("final_norm", (cfg.d_model,), (EMBED,))
+    if not cfg.tie_embeddings:
+        b.dense("lm_head", (cfg.d_model, cfg.vocab_size), (EMBED, VOCAB))
+    return b.params, b.specs
+
+
+# ---------------------------------------------------------------------------
+# single-layer apply
+# ---------------------------------------------------------------------------
+
+def _attn_params(cfg: ModelConfig, spec: LayerSpec, flags: RuntimeFlags) -> AttnParams:
+    scale = (cfg.query_pre_attn_scalar ** -0.5
+             if cfg.query_pre_attn_scalar is not None
+             else cfg.resolved_head_dim ** -0.5)
+    return AttnParams(
+        impl=flags.attn_impl, causal=True, window=spec.sliding_window,
+        softcap=cfg.attn_logit_softcap, scale=scale,
+        bq=flags.attn_bq, bkv=flags.attn_bkv)
+
+
+def _apply_attn(p, x, cfg, spec, flags, mode, cache, pos):
+    bsz, s, d = x.shape
+    hd = cfg.resolved_head_dim
+    shd = flags.shd
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"]).reshape(bsz, s, cfg.num_heads, hd)
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"]).reshape(bsz, s, cfg.num_kv_heads, hd)
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"]).reshape(bsz, s, cfg.num_kv_heads, hd)
+    ap = _attn_params(cfg, spec, flags)
+
+    if mode == "decode":
+        # scalar pos (batch-uniform decode, the dry-run/throughput path) uses
+        # dynamic-update-slice — SPMD-friendly on seq-sharded caches; vector
+        # pos (continuous batching) uses per-slot scatter.
+        uniform = jnp.ndim(pos) == 0
+        posv = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (bsz,))
+        q = rope(q, posv[:, None], cfg.rope_theta)
+        k = rope(k, posv[:, None], cfg.rope_theta)
+
+        def _store(buf, val, idx):
+            if uniform:
+                return jax.lax.dynamic_update_slice_in_dim(buf, val, idx, 1)
+            return buf.at[jnp.arange(bsz), idx].set(val[:, 0])
+
+        def _store_scale(buf, val, idx):
+            if uniform:
+                return jax.lax.dynamic_update_slice(
+                    buf, val.astype(buf.dtype), (0, idx))
+            return buf.at[jnp.arange(bsz), idx].set(val[:, 0])
+
+        int8kv = flags.kv_dtype == "int8"
+        if int8kv:
+            kq, ks = _kv_quant(k)
+            vq, vs = _kv_quant(v)
+        else:
+            kq, ks, vq, vs = k, None, v, None
+
+        if spec.sliding_window is not None:
+            w = cache["k"].shape[1]
+            slot = (pos if uniform else posv) % w
+            kc = _store(cache["k"], kq, slot)
+            vc = _store(cache["v"], vq, slot)
+            kpos = _store_scale(
+                cache["kpos"],
+                jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1, 1),
+                                 (bsz, 1)), slot)
+            new_cache = dict(k=kc, v=vc, kpos=kpos)
+            if int8kv:
+                new_cache["k_scale"] = _store_scale(cache["k_scale"], ks, slot)
+                new_cache["v_scale"] = _store_scale(cache["v_scale"], vs, slot)
+                kc = _kv_dequant(kc, new_cache["k_scale"], k.dtype)
+                vc = _kv_dequant(vc, new_cache["v_scale"], v.dtype)
+            o = attn_mod.naive_attention(
+                q, kc, vc, ap, q_offset=posv, k_positions=kpos)
+        else:
+            idx = pos if uniform else posv
+            kc = _store(cache["k"], kq, idx)
+            vc = _store(cache["v"], vq, idx)
+            new_cache = dict(k=kc, v=vc)
+            if int8kv:
+                new_cache["k_scale"] = _store_scale(cache["k_scale"], ks, idx)
+                new_cache["v_scale"] = _store_scale(cache["v_scale"], vs, idx)
+                kc = _kv_dequant(kc, new_cache["k_scale"], k.dtype)
+                vc = _kv_dequant(vc, new_cache["v_scale"], v.dtype)
+            o = attn_mod.naive_attention(
+                q, kc, vc, ap, q_offset=posv, kv_valid_len=posv + 1)
+    else:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (bsz, s))
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        k = shd(k, ("batch", "seq", "kv_heads", None))
+        v = shd(v, ("batch", "seq", "kv_heads", None))
+        o = attn_mod.attention(q, k, v, ap)
+        new_cache = None
+        if mode == "prefill":
+            if spec.sliding_window is not None:
+                w = min(spec.sliding_window, s)
+                kw, vw = k[:, s - w:], v[:, s - w:]
+                new_cache = dict(
+                    kpos=jnp.broadcast_to(
+                        jnp.arange(s - w, s, dtype=jnp.int32)[None], (bsz, w)))
+            else:
+                kw, vw = k, v
+                new_cache = {}
+            if flags.kv_dtype == "int8":
+                new_cache["k"], new_cache["k_scale"] = _kv_quant(kw)
+                new_cache["v"], new_cache["v_scale"] = _kv_quant(vw)
+            else:
+                new_cache["k"], new_cache["v"] = kw, vw
+    o = o.reshape(bsz, s, cfg.num_heads * hd)
+    out = jnp.einsum("bsh,hd->bsd", o, p["wo"])
+    return out, new_cache
+
+
+def _apply_layer(p, x, cfg, spec, flags, mode, cache, pos):
+    """returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = rms_norm(x, p["ln1"])
+    if spec.mixer == ATTN:
+        mix, new_cache = _apply_attn(p["attn"], h, cfg, spec, flags, mode, cache, pos)
+    elif spec.mixer == SSD:
+        if mode == "decode":
+            mix, new_cache = ssm_mod.decode_step(p["ssd"], h, cache, cfg)
+        elif mode == "prefill":
+            mix, new_cache = ssm_mod.forward(p["ssd"], h, cfg, flags.shd,
+                                             return_state=True)
+        else:
+            mix, new_cache = ssm_mod.forward(p["ssd"], h, cfg, flags.shd), None
+    elif spec.mixer == RGLRU:
+        if mode == "decode":
+            mix, new_cache = rglru_mod.decode_step(p["rglru"], h, cache, cfg)
+        elif mode == "prefill":
+            mix, new_cache = rglru_mod.forward(p["rglru"], h, cfg, flags.shd,
+                                               return_state=True)
+        else:
+            mix, new_cache = rglru_mod.forward(p["rglru"], h, cfg, flags.shd), None
+    else:
+        raise ValueError(spec.mixer)
+    x = x + mix
+    x = flags.shd(x, ("batch", "seq", "embed"))
+
+    if spec.mlp == DENSE:
+        h = rms_norm(x, p["ln2"])
+        x = x + mlp_mod.apply(p["mlp"], h, cfg.activation, flags.shd)
+    elif spec.mlp == MOE:
+        h = rms_norm(x, p["ln2"])
+        out, aux = moe_mod.apply(
+            p["moe"], h, cfg.num_experts_per_tok, cfg.activation,
+            impl=flags.moe_impl, shd=flags.shd, group_size=flags.moe_group,
+            capacity_factor=cfg.moe_capacity_factor)
+        x = x + out
+    x = flags.shd(x, ("batch", "seq", "embed"))
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# stack
+# ---------------------------------------------------------------------------
+
+def _empty_cache_for(cfg, spec: LayerSpec, batch: int, max_len: int, dtype,
+                     kv_dtype: str = "native"):
+    hd = cfg.resolved_head_dim
+    if spec.mixer == ATTN:
+        kvd = jnp.int8 if kv_dtype == "int8" else dtype
+        t = (min(spec.sliding_window, max_len)
+             if spec.sliding_window is not None else max_len)
+        c = dict(k=jnp.zeros((batch, t, cfg.num_kv_heads, hd), kvd),
+                 v=jnp.zeros((batch, t, cfg.num_kv_heads, hd), kvd))
+        if spec.sliding_window is not None:
+            c["kpos"] = jnp.full((batch, t), -10**9, jnp.int32)
+        if kv_dtype == "int8":
+            c["k_scale"] = jnp.zeros((batch, t), jnp.float32)
+            c["v_scale"] = jnp.zeros((batch, t), jnp.float32)
+        return c
+    if spec.mixer == SSD:
+        return ssm_mod.init_state(cfg, batch, dtype)
+    if spec.mixer == RGLRU:
+        return rglru_mod.init_state(cfg, batch, dtype)
+    raise ValueError(spec.mixer)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               kv_dtype: str = "native") -> dict:
+    """Decode cache pytree: blocks stacked on LAYERS, remainder unstacked."""
+    dtype = jnp.dtype(cfg.compute_dtype)
+    nb = cfg.num_pattern_blocks
+
+    def stack(tree):
+        return jax.tree.map(lambda a: jnp.broadcast_to(a, (nb,) + a.shape), tree)
+
+    blocks = {f"p{j}": stack(_empty_cache_for(cfg, spec, batch, max_len,
+                                              dtype, kv_dtype))
+              for j, spec in enumerate(cfg.layer_pattern)}
+    rem = {f"r{j}": _empty_cache_for(cfg, spec, batch, max_len, dtype, kv_dtype)
+           for j, spec in enumerate(cfg.remainder_specs)}
+    return dict(blocks=blocks, rem=rem)
+
+
+def _scan_blocks(params, x, cfg, flags, mode, cache, pos):
+    """Apply the scanned pattern blocks + remainder layers."""
+    pattern = cfg.layer_pattern
+    aux0 = jnp.zeros((), jnp.float32)
+
+    def body(carry, xs):
+        x, aux = carry
+        bp, bc = xs
+        new_caches = {}
+        for j, spec in enumerate(pattern):
+            c_in = bc.get(f"p{j}") if bc is not None else None
+            x, c_out, a = _apply_layer(bp[f"p{j}"], x, cfg, spec, flags, mode,
+                                       c_in, pos)
+            aux = aux + a
+            new_caches[f"p{j}"] = c_out
+        ys = new_caches if mode != "train" else None
+        return (x, aux), ys
+
+    if flags.remat != "none" and mode == "train":
+        policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                  if flags.remat == "dots" else
+                  jax.checkpoint_policies.nothing_saveable)
+        body = jax.checkpoint(body, policy=policy, prevent_cse=False)
+
+    blocks_p = params["blocks"]
+    blocks_c = cache["blocks"] if cache is not None else None
+
+    if flags.unroll_layers:
+        carry = (x, aux0)
+        ys_list = []
+        for i in range(cfg.num_pattern_blocks):
+            bp = jax.tree.map(lambda a: a[i], blocks_p)
+            bc = (jax.tree.map(lambda a: a[i], blocks_c)
+                  if blocks_c is not None else None)
+            carry, ys = body(carry, (bp, bc))
+            ys_list.append(ys)
+        (x, aux) = carry
+        new_blocks_c = (jax.tree.map(lambda *a: jnp.stack(a), *ys_list)
+                        if mode != "train" else None)
+    else:
+        (x, aux), new_blocks_c = jax.lax.scan(
+            body, (x, aux0), (blocks_p, blocks_c))
+
+    new_rem = {}
+    for j, spec in enumerate(cfg.remainder_specs):
+        c_in = cache["rem"].get(f"r{j}") if cache is not None else None
+        apply = _apply_layer
+        if flags.remat != "none" and mode == "train":
+            # remainder layers need remat exactly like the scanned ones
+            apply = jax.checkpoint(
+                _apply_layer,
+                policy=jax.checkpoint_policies.nothing_saveable,
+                prevent_cse=False,
+                static_argnums=(2, 3, 4, 5, 7))
+        x, c_out, a = apply(params["rem"][f"r{j}"], x, cfg, spec, flags,
+                            mode, c_in, pos)
+        aux = aux + a
+        new_rem[f"r{j}"] = c_out
+    new_cache = (dict(blocks=new_blocks_c, rem=new_rem)
+                 if mode != "train" else None)
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# embedding / logits / losses
+# ---------------------------------------------------------------------------
+
+def embed_tokens(params, cfg: ModelConfig, tokens: jax.Array) -> jax.Array:
+    x = jnp.take(params["embed"]["tok"], tokens, axis=0)
+    if cfg.normalize_embedding:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    return x
+
+
+def _head_weight(params):
+    if "lm_head" in params:
+        return params["lm_head"]
+    return params["embed"]["tok"].T
+
+
+def compute_logits(params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    logits = jnp.einsum("bsd,dv->bsv", x, _head_weight(params))
+    return softcap(logits, cfg.final_logit_softcap)
+
+
+def chunked_ce(params, cfg, x, labels, flags: RuntimeFlags) -> jax.Array:
+    """Sequence-chunked CE so (B,S,V) logits are never materialized.
+    ``loss_chunk=0`` computes single-shot (roofline mode: no inner scan)."""
+    bsz, s, _ = x.shape
+    if flags.loss_chunk <= 0:
+        logits = compute_logits(params, cfg, x)
+        logits = flags.shd(logits, ("batch", "seq", "vocab"))
+        return cross_entropy(logits, labels)
+    c = min(flags.loss_chunk, s)
+    assert s % c == 0
+    n = s // c
+    xc = jnp.moveaxis(x.reshape(bsz, n, c, -1), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(bsz, n, c), 1, 0)
+
+    @functools.partial(jax.checkpoint,
+                       policy=jax.checkpoint_policies.nothing_saveable)
+    def step(carry, xs):
+        # checkpointed: without it the scan saves every (B, c, V) logits
+        # chunk for backward, defeating the whole point of chunking.
+        tot, cnt = carry
+        xb, lb = xs
+        logits = compute_logits(params, cfg, xb)
+        logits = flags.shd(logits, ("batch", "seq", "vocab"))
+        valid = (lb >= 0)
+        safe = jnp.where(valid, lb, 0)
+        lg = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        ll = jnp.take_along_axis(lg, safe[..., None], axis=-1)[..., 0]
+        tot = tot + jnp.sum((lse - ll) * valid)
+        cnt = cnt + jnp.sum(valid)
+        return (tot, cnt), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        step, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32)), (xc, lc))
+    return tot / jnp.maximum(cnt, 1)
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
+def forward(params, cfg: ModelConfig, flags: RuntimeFlags, tokens: jax.Array,
+            patch_embeds: Optional[jax.Array] = None, mode: str = "train",
+            cache: Optional[dict] = None, pos=None):
+    """tokens: (B, S_text); patch_embeds: (B, P, d) for vlm frontends."""
+    x = embed_tokens(params, cfg, tokens)
+    if patch_embeds is not None:
+        x = jnp.concatenate([patch_embeds.astype(x.dtype), x], axis=1)
+    x = flags.shd(x, ("batch", "seq", "embed"))
+    x, new_cache, aux = _scan_blocks(params, x, cfg, flags, mode, cache, pos)
+    x = rms_norm(x, params["final_norm"])
+    return x, new_cache, aux
+
+
+def train_loss(params, cfg: ModelConfig, flags: RuntimeFlags, batch: dict):
+    x, _, aux = forward(params, cfg, flags, batch["tokens"],
+                        batch.get("patch_embeds"), mode="train")
+    loss = chunked_ce(params, cfg, x, batch["labels"], flags)
+    return loss + flags.aux_loss_weight * aux, dict(ce=loss, aux=aux)
+
+
+def prefill(params, cfg: ModelConfig, flags: RuntimeFlags, batch: dict):
+    x, cache, _ = forward(params, cfg, flags, batch["tokens"],
+                          batch.get("patch_embeds"), mode="prefill")
+    last_logits = compute_logits(params, cfg, x[:, -1:])[:, 0]
+    return cache, last_logits
+
+
+def decode_step(params, cfg: ModelConfig, flags: RuntimeFlags, cache: dict,
+                tokens: jax.Array, pos: jax.Array):
+    """tokens: (B, 1); pos: scalar int32 (uniform across batch)."""
+    x, new_cache, _ = forward(params, cfg, flags, tokens, mode="decode",
+                              cache=cache, pos=pos)
+    logits = compute_logits(params, cfg, x)[:, 0]
+    return logits, new_cache

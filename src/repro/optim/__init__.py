@@ -1,0 +1,2 @@
+from repro.optim.adamw import AdamWConfig, AdamWState, init, update  # noqa: F401
+from repro.optim import compress, schedule  # noqa: F401

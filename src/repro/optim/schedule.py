@@ -1,0 +1,28 @@
+"""LR schedules (multiplicative factors on the peak LR)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(warmup: int, total: int, floor: float = 0.1):
+    def f(step):
+        s = step.astype(jnp.float32)
+        warm = s / jnp.maximum(warmup, 1)
+        prog = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(s < warmup, warm, cos)
+    return f
+
+
+def wsd(warmup: int, total: int, decay_frac: float = 0.1, floor: float = 0.05):
+    """warmup -> stable -> linear decay (the 'WSD' schedule)."""
+    decay_start = int(total * (1 - decay_frac))
+
+    def f(step):
+        s = step.astype(jnp.float32)
+        warm = s / jnp.maximum(warmup, 1)
+        dec = 1.0 - (1 - floor) * jnp.clip(
+            (s - decay_start) / jnp.maximum(total - decay_start, 1), 0.0, 1.0)
+        out = jnp.where(s < warmup, warm, 1.0)
+        return jnp.where(s > decay_start, dec, out)
+    return f

@@ -1,0 +1,2 @@
+from repro.serve.engine import Request, ServeEngine, ServeStats  # noqa: F401
+from repro.serve.kvcache import PagedKVCache  # noqa: F401

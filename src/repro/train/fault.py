@@ -1,0 +1,78 @@
+"""Fault tolerance: retry-with-restore, straggler detection, elastic remesh.
+
+Single-host simulation of the mechanisms a 1000-node run needs; every policy
+here is pure control-plane logic over the checkpoint manager and step timer,
+so it is mesh-size independent.
+"""
+from __future__ import annotations
+
+import logging
+import time
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional
+
+log = logging.getLogger("repro.fault")
+
+
+class PreemptionError(RuntimeError):
+    """Raised by tests / injected hooks to simulate a node loss."""
+
+
+@dataclass
+class StragglerMonitor:
+    """Flags steps slower than ``threshold`` x rolling median.
+
+    On real pods the mitigation is to exclude/replace the slow host and
+    re-shard (elastic path); here the hook is called so policies are
+    testable."""
+
+    window: int = 32
+    threshold: float = 3.0
+    on_straggler: Optional[Callable[[int, float, float], None]] = None
+    times: List[float] = field(default_factory=list)
+    flagged: List[int] = field(default_factory=list)
+
+    def record(self, step: int, seconds: float) -> bool:
+        self.times.append(seconds)
+        hist = self.times[-self.window:]
+        med = sorted(hist)[len(hist) // 2]
+        if len(hist) >= 5 and seconds > self.threshold * med:
+            self.flagged.append(step)
+            log.warning("straggler step %d: %.3fs vs median %.3fs", step,
+                        seconds, med)
+            if self.on_straggler:
+                self.on_straggler(step, seconds, med)
+            return True
+        return False
+
+
+@dataclass
+class FailureInjector:
+    """Deterministic failure injection for tests: raise at given steps."""
+
+    fail_at: tuple = ()
+    seen: set = field(default_factory=set)
+
+    def maybe_fail(self, step: int):
+        if step in self.fail_at and step not in self.seen:
+            self.seen.add(step)
+            raise PreemptionError(f"injected preemption at step {step}")
+
+
+def run_with_recovery(run_fn: Callable[[Optional[int]], int],
+                      max_failures: int = 3) -> int:
+    """``run_fn(resume_step)`` runs until completion or raises.  On failure we
+    restart from the latest checkpoint (run_fn re-reads it).  Returns the
+    final step."""
+    failures = 0
+    resume: Optional[int] = None
+    while True:
+        try:
+            return run_fn(resume)
+        except PreemptionError as e:   # noqa: PERF203
+            failures += 1
+            log.warning("recovering from failure %d: %s", failures, e)
+            if failures > max_failures:
+                raise
+            resume = -1  # sentinel: restore latest
+            time.sleep(0.01)

@@ -1,0 +1,140 @@
+"""Training loop: sharded step + data pipeline + checkpoint/restart +
+straggler monitoring, with exact resume (deterministic data keyed by step).
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from dataclasses import dataclass
+from typing import Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.dist import sharding as sh
+from repro.dist.steps import make_train_step
+from repro.models.registry import ModelBundle, build
+from repro.optim import adamw
+from repro.train.checkpoint import CheckpointManager
+from repro.train.fault import FailureInjector, StragglerMonitor
+
+log = logging.getLogger("repro.train")
+
+
+@dataclass
+class TrainConfig:
+    steps: int = 100
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    keep: int = 3
+    log_every: int = 10
+    seed: int = 0
+    data_kind: str = "uniform"     # uniform | markov
+    microbatches: int = 1
+
+
+class Trainer:
+    def __init__(self, bundle: ModelBundle, cell: ShapeCell, mesh,
+                 policy: sh.ShardingPolicy, opt_cfg: adamw.AdamWConfig,
+                 tcfg: TrainConfig,
+                 injector: Optional[FailureInjector] = None):
+        self.bundle = bundle
+        self.cell = cell
+        self.mesh = mesh
+        self.policy = policy
+        self.opt_cfg = opt_cfg
+        self.tcfg = tcfg
+        self.injector = injector
+        (self.step_fn, self.p_shard, self.o_shard,
+         self.batch_sharder) = make_train_step(
+            bundle, mesh, policy, opt_cfg, microbatches=tcfg.microbatches)
+        self.data = SyntheticLM(
+            bundle.cfg, cell, DataConfig(seed=tcfg.seed, kind=tcfg.data_kind))
+        self.ckpt = (CheckpointManager(tcfg.ckpt_dir, keep=tcfg.keep)
+                     if tcfg.ckpt_dir else None)
+        self.monitor = StragglerMonitor()
+        self.history: list = []
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _put_tree(tree, shardings):
+        flat, treedef = jax.tree.flatten(tree)
+        flat_s = treedef.flatten_up_to(shardings)
+        return jax.tree.unflatten(
+            treedef, [jax.device_put(x, s) for x, s in zip(flat, flat_s)])
+
+    def init_state(self, key=None):
+        key = jax.random.PRNGKey(self.tcfg.seed) if key is None else key
+        with jax.set_mesh(self.mesh):
+            params = self._put_tree(self.bundle.init(key), self.p_shard)
+            opt_state = self._put_tree(adamw.init(params), self.o_shard)
+        return params, opt_state, 0
+
+    def restore_state(self, step: Optional[int] = None):
+        abs_params, _ = self.bundle.abstract_params()
+        opt_abs = jax.eval_shape(adamw.init, abs_params)
+        tree_like = dict(params=abs_params, opt=opt_abs)
+        shardings = dict(params=self.p_shard, opt=self.o_shard)
+        restored = self.ckpt.restore(step, tree_like, shardings)
+        start = int(np.asarray(restored["opt"].step))
+        return restored["params"], restored["opt"], start
+
+    # ------------------------------------------------------------------
+    def run(self, resume: Optional[int] = None) -> int:
+        if resume is not None and self.ckpt and self.ckpt.latest_step() is not None:
+            params, opt_state, start = self.restore_state(
+                None if resume == -1 else resume)
+            log.info("restored at step %d", start)
+        else:
+            params, opt_state, start = self.init_state()
+        it = self.data.iterate(start)
+        step = start
+        for batch in it:
+            if step >= self.tcfg.steps:
+                break
+            if self.injector:
+                self.injector.maybe_fail(step)
+            t0 = time.perf_counter()
+            batch = self._put(batch)
+            params, opt_state, metrics = self.step_fn(params, opt_state, batch)
+            jax.block_until_ready(metrics["loss"])
+            dt = time.perf_counter() - t0
+            self.monitor.record(step, dt)
+            step += 1
+            if step % self.tcfg.log_every == 0 or step == self.tcfg.steps:
+                m = {k: float(np.asarray(v)) for k, v in metrics.items()}
+                m.update(step=step, sec=dt, tok_s=self.cell.tokens / dt)
+                self.history.append(m)
+                log.info("step %d loss %.4f (%.3fs)", step, m["loss"], dt)
+            if self.ckpt and (step % self.tcfg.ckpt_every == 0
+                              or step == self.tcfg.steps):
+                self.ckpt.save(step, dict(params=params, opt=opt_state))
+        if self.ckpt:
+            self.ckpt.wait()
+        self._final = (params, opt_state)
+        return step
+
+    def _put(self, batch):
+        abs_b = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), batch)
+        shard = self.batch_sharder(abs_b)
+        flat_b, treedef = jax.tree.flatten(batch)
+        flat_s = treedef.flatten_up_to(shard)
+        return jax.tree.unflatten(
+            treedef, [jax.device_put(b, s) for b, s in zip(flat_b, flat_s)])
+
+
+def quick_train(cfg: ModelConfig, cell: ShapeCell, mesh, steps: int = 5,
+                policy_name: str = "fsdp_tp", flags=None, **tkw):
+    """Convenience wrapper used by examples/tests."""
+    from repro.models.transformer import RuntimeFlags
+    bundle = build(cfg, flags or RuntimeFlags())
+    policy = sh.POLICIES[policy_name]
+    opt_cfg = adamw.AdamWConfig(lr=1e-3)
+    tcfg = TrainConfig(steps=steps, **tkw)
+    tr = Trainer(bundle, cell, mesh, policy, opt_cfg, tcfg)
+    tr.run()
+    return tr

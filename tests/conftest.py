@@ -1,0 +1,8 @@
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# NOTE: no XLA_FLAGS here on purpose — smoke tests run single-device.
+# Multi-device scenarios run in subprocesses (tests/test_multidevice.py)
+# that set --xla_force_host_platform_device_count themselves.

@@ -1,0 +1,112 @@
+"""Attention impl equivalence + flash custom-VJP gradient checks."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import (AttnParams, chunked_attention,
+                                    naive_attention, unrolled_attention)
+
+RNG = np.random.default_rng(7)
+
+
+def _qkv(b=2, sq=48, skv=48, hq=4, hkv=2, d=16):
+    return (jnp.asarray(RNG.standard_normal((b, sq, hq, d)), jnp.float32),
+            jnp.asarray(RNG.standard_normal((b, skv, hkv, d)), jnp.float32),
+            jnp.asarray(RNG.standard_normal((b, skv, hkv, d)), jnp.float32))
+
+
+CASES = [
+    ("causal", AttnParams(bq=16, bkv=16)),
+    ("window", AttnParams(bq=16, bkv=16, window=20)),
+    ("softcap", AttnParams(bq=16, bkv=16, softcap=8.0)),
+    ("noncausal", AttnParams(bq=16, bkv=16, causal=False)),
+    ("scale", AttnParams(bq=16, bkv=16, scale=0.05)),
+    ("bigblocks", AttnParams(bq=64, bkv=64)),
+]
+
+
+@pytest.mark.parametrize("name,p", CASES)
+@pytest.mark.parametrize("impl", [chunked_attention, unrolled_attention])
+def test_forward_matches_naive(name, p, impl):
+    q, k, v = _qkv()
+    got = impl(q, k, v, p)
+    want = naive_attention(q, k, v, p)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("sq,skv", [(33, 41), (17, 64), (48, 31)])
+def test_forward_odd_lengths(sq, skv):
+    p = AttnParams(bq=16, bkv=16, causal=False)
+    q, k, v = _qkv(sq=sq, skv=skv)
+    got = chunked_attention(q, k, v, p)
+    want = naive_attention(q, k, v, p)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("name,p", CASES)
+def test_flash_vjp_matches_naive_grads(name, p):
+    q, k, v = _qkv()
+    t = jnp.asarray(RNG.standard_normal(q.shape), jnp.float32)
+    f_c = lambda *a: jnp.sum(chunked_attention(*a, p) * t)
+    f_n = lambda *a: jnp.sum(naive_attention(*a, p) * t)
+    g_c = jax.grad(f_c, argnums=(0, 1, 2))(q, k, v)
+    g_n = jax.grad(f_n, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g_c, g_n):
+        np.testing.assert_allclose(a, b, rtol=2e-4, atol=2e-4)
+
+
+def test_flash_vjp_odd_lengths_grads():
+    p = AttnParams(bq=16, bkv=16)
+    q, k, v = _qkv(sq=33, skv=41)
+    t = jnp.asarray(RNG.standard_normal(q.shape), jnp.float32)
+    g_c = jax.grad(lambda *a: jnp.sum(chunked_attention(*a, p) * t),
+                   argnums=(0, 1, 2))(q, k, v)
+    g_n = jax.grad(lambda *a: jnp.sum(naive_attention(*a, p) * t),
+                   argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g_c, g_n):
+        np.testing.assert_allclose(a, b, rtol=2e-4, atol=2e-4)
+
+
+def test_decode_positions_and_ring_cache():
+    """naive with k_positions == masked ring-buffer semantics."""
+    p = AttnParams(window=8)
+    b, w, hkv, d = 2, 8, 2, 16
+    q = jnp.asarray(RNG.standard_normal((b, 1, 4, d)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((b, w, hkv, d)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((b, w, hkv, d)), jnp.float32)
+    # ring buffer holding positions 10..17 rotated, query at pos 17
+    k_pos = jnp.asarray(np.tile(np.array([16, 17, 10, 11, 12, 13, 14, 15]),
+                                (b, 1)), jnp.int32)
+    got = naive_attention(q, k, v, p, q_offset=jnp.full((b,), 17),
+                          k_positions=k_pos)
+    # reference: sort by position
+    order = np.argsort(np.asarray(k_pos[0]))
+    ks = k[:, order]
+    vs = v[:, order]
+    want = naive_attention(q, ks, vs, p, q_offset=jnp.full((b,), 17),
+                           k_positions=k_pos[:, order])
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+    # empty slots (pos < 0) are masked
+    k_pos_empty = k_pos.at[:, 2:].set(-10**9)
+    got2 = naive_attention(q, k, v, p, q_offset=jnp.full((b,), 17),
+                           k_positions=k_pos_empty)
+    want2 = naive_attention(q, k[:, :2], v[:, :2], p,
+                            q_offset=jnp.full((b,), 17),
+                            k_positions=k_pos[:, :2])
+    np.testing.assert_allclose(got2, want2, rtol=1e-5, atol=1e-5)
+
+
+def test_per_batch_positions():
+    p = AttnParams()
+    b, t, hkv, d = 3, 32, 2, 16
+    q = jnp.asarray(RNG.standard_normal((b, 1, 4, d)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((b, t, hkv, d)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((b, t, hkv, d)), jnp.float32)
+    pos = jnp.asarray([5, 17, 31], jnp.int32)
+    got = naive_attention(q, k, v, p, q_offset=pos, kv_valid_len=pos + 1)
+    for i in range(b):
+        want_i = naive_attention(q[i:i+1], k[i:i+1, :int(pos[i])+1],
+                                 v[i:i+1, :int(pos[i])+1], p,
+                                 q_offset=int(pos[i]))
+        np.testing.assert_allclose(got[i:i+1], want_i, rtol=1e-5, atol=1e-5)

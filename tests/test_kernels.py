@@ -1,0 +1,172 @@
+"""Per-kernel interpret-mode sweeps vs the ref.py jnp oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(42)
+
+
+def _arr(shape, dtype=jnp.float32):
+    x = RNG.standard_normal(shape)
+    if dtype == jnp.int8:
+        return jnp.asarray((x * 32).clip(-127, 127), jnp.int8)
+    return jnp.asarray(x, dtype)
+
+
+def _close(a, b, tol):
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("shape", [(128, 128), (256, 512), (64, 384)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int8])
+@pytest.mark.parametrize("block_rows", [8, 64])
+def test_stream_copy(shape, dtype, block_rows):
+    if shape[0] % block_rows:
+        pytest.skip("non-divisible")
+    x = _arr(shape, dtype)
+    _close(ops.stream_copy(x, block_rows=block_rows), ref.stream_copy(x), 0)
+
+
+@pytest.mark.parametrize("mode", ["copy", "rw"])
+def test_stream_modes(mode):
+    x = _arr((128, 256))
+    _close(ops.stream_copy(x, block_rows=32, mode=mode),
+           ref.stream_copy(x, mode), 0)
+
+
+@pytest.mark.parametrize("stride", [1, 2, 3, 7, 15])
+@pytest.mark.parametrize("block_rows", [4, 16])
+def test_strided(stride, block_rows):
+    x = _arr((256, 64))
+    _close(ops.strided_copy(x, block_rows=block_rows, stride=stride),
+           ref.strided_copy(x, block_rows=block_rows, stride=stride), 0)
+
+
+@pytest.mark.parametrize("n_idx", [16, 100])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gather(n_idx, dtype):
+    x = _arr((512, 128), dtype)
+    idx = ops.lfsr_indices(n_idx, bits=16) % 512
+    _close(ops.random_gather(x, idx), ref.random_gather(x, idx), 0)
+
+
+@pytest.mark.parametrize("n", [64, 256, 1000])
+def test_chase(n):
+    table = ops.make_chain(n, seed=n)
+    steps = min(2 * n, 300)
+    got = ops.pointer_chase(table, steps=steps)
+    _close(got, ref.pointer_chase(table, steps), 0)
+
+
+def test_chase_is_full_cycle():
+    n = 128
+    table = ops.make_chain(n, seed=1)
+    trace = np.asarray(ref.pointer_chase(table, n))[:, 0]
+    assert sorted(trace.tolist()) == list(range(n))  # visits every entry once
+
+
+@pytest.mark.parametrize("mnk", [(128, 128, 128), (256, 128, 384), (64, 256, 128)])
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 1e-4), (jnp.bfloat16, 2e-2)])
+@pytest.mark.parametrize("blocks", [(64, 64, 64), (128, 128, 128)])
+def test_matmul(mnk, dtype, tol, blocks):
+    m, k, n = mnk
+    bm, bn, bk = blocks
+    if m % min(bm, m) or n % min(bn, n) or k % min(bk, k):
+        pytest.skip("non-divisible")
+    x, y = _arr((m, k), dtype), _arr((k, n), dtype)
+    _close(ops.matmul(x, y, bm=bm, bn=bn, bk=bk), ref.matmul(x, y), tol)
+
+
+@pytest.mark.parametrize("hq,hkv", [(4, 4), (4, 2), (8, 1)])
+@pytest.mark.parametrize("opts", [
+    dict(),
+    dict(window=96),
+    dict(softcap=30.0),
+    dict(causal=False),
+    dict(window=64, softcap=20.0),
+])
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-4), (jnp.bfloat16, 3e-2)])
+def test_flash_attention(hq, hkv, opts, dtype, tol):
+    b, s, d = 2, 256, 64
+    q = _arr((b, hq, s, d), dtype)
+    k = _arr((b, hkv, s, d), dtype)
+    v = _arr((b, hkv, s, d), dtype)
+    got = ops.flash_attention(q, k, v, bq=64, bkv=64, **opts)
+    want = ref.attention(q, k, v, **opts)
+    _close(got, want, tol)
+
+
+def test_flash_attention_cross_lengths():
+    q = _arr((1, 2, 128, 32))
+    k = _arr((1, 2, 256, 32))
+    v = _arr((1, 2, 256, 32))
+    got = ops.flash_attention(q, k, v, causal=False, bq=64, bkv=64)
+    want = ref.attention(q, k, v, causal=False)
+    _close(got, want, 2e-4)
+
+
+def test_lfsr_properties():
+    idx = np.asarray(ops.lfsr_indices(4096, bits=16))
+    assert idx.min() >= 0 and idx.max() < (1 << 16)
+    # maximal-length LFSR: no repeats within the period
+    assert len(np.unique(idx)) == len(idx)
+
+
+@pytest.mark.parametrize("vlens", [[7, 130, 256], [1, 64, 255]])
+@pytest.mark.parametrize("hq,hkv", [(8, 2), (4, 4)])
+def test_decode_attention(vlens, hq, hkv):
+    b, t, d = 3, 256, 32
+    q = _arr((b, hq, d))
+    k = _arr((b, t, hkv, d))
+    v = _arr((b, t, hkv, d))
+    vlen = jnp.asarray(vlens, jnp.int32)
+    got = ops.decode_attention(q, k, v, vlen, bkv=64)
+    want = ref.decode_attention(q, k, v, vlen)
+    _close(got, want, 1e-4)
+
+
+def test_decode_attention_softcap():
+    b, t, hq, hkv, d = 2, 128, 4, 2, 16
+    q, k, v = _arr((b, hq, d)), _arr((b, t, hkv, d)), _arr((b, t, hkv, d))
+    vlen = jnp.asarray([50, 128], jnp.int32)
+    got = ops.decode_attention(q, k, v, vlen, bkv=32, softcap=10.0)
+    want = ref.decode_attention(q, k, v, vlen, softcap=10.0)
+    _close(got, want, 1e-4)
+
+
+def test_paged_attention_matches_contiguous():
+    from repro.serve.kvcache import PagedKVCache
+    b, t, hq, hkv, d = 3, 256, 8, 2, 32
+    q, k, v = _arr((b, hq, d)), _arr((b, t, hkv, d)), _arr((b, t, hkv, d))
+    vlen = jnp.asarray([7, 130, 256], jnp.int32)
+    pool = PagedKVCache(num_pages=32, page_size=32, num_kv_heads=hkv,
+                        head_dim=d)
+    for i in range(b):
+        pool.alloc(i)
+        pool.append(i, k[i, :int(vlen[i])], v[i, :int(vlen[i])])
+    table, vl = pool.batch_view([0, 1, 2])
+    got = ops.paged_attention(q, pool.k_pages, pool.v_pages, table, vl)
+    want = ref.decode_attention(q, k, v, vlen)
+    _close(got, want, 1e-4)
+    # oracle for the paged layout itself
+    _close(ref.paged_attention(q, pool.k_pages, pool.v_pages, table, vl),
+           want, 1e-4)
+
+
+def test_paged_pool_alloc_release():
+    from repro.serve.kvcache import PagedKVCache
+    pool = PagedKVCache(num_pages=4, page_size=8, num_kv_heads=1, head_dim=8)
+    pool.alloc(0)
+    pool.append(0, jnp.ones((20, 1, 8)), jnp.ones((20, 1, 8)))
+    assert pool.pages_in_use == 3 and pool.lengths[0] == 20
+    pool.alloc(1)
+    pool.append(1, jnp.ones((8, 1, 8)), jnp.ones((8, 1, 8)))
+    assert pool.pages_in_use == 4
+    with pytest.raises(MemoryError):
+        pool.append(1, jnp.ones((8, 1, 8)), jnp.ones((8, 1, 8)))
+    pool.release(0)
+    assert pool.pages_in_use == 1

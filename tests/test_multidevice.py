@@ -1,0 +1,23 @@
+"""Multi-device integration tests: each scenario runs in a subprocess with
+8 fake CPU devices (XLA_FLAGS is process-wide, so it must not leak into the
+single-device tests)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = os.path.join(os.path.dirname(__file__), "_md_scenarios.py")
+
+
+def _run(name, timeout=420):
+    r = subprocess.run([sys.executable, SCRIPT, name], capture_output=True,
+                       text=True, timeout=timeout)
+    assert r.returncode == 0, f"{name} failed:\n{r.stdout}\n{r.stderr}"
+    assert f"PASS {name}" in r.stdout
+
+
+@pytest.mark.parametrize("scenario", [
+    "sharded_train", "elastic_reshard", "dp_compression", "decode_sharded"])
+def test_multidevice(scenario):
+    _run(scenario)

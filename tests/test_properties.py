@@ -1,0 +1,198 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import memmodel
+from repro.core.patterns import Knobs, Pattern
+from repro.core.roofline import (CellCost, affine_extrapolate,
+                                 collective_stats, _shape_bytes)
+from repro.kernels import ops, ref
+from repro.optim import compress
+
+SET = settings(max_examples=40, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# memory model (paper equations)
+# ---------------------------------------------------------------------------
+
+@SET
+@given(no1=st.integers(1, 64), no2=st.integers(1, 64))
+def test_outstanding_monotone(no1, no2):
+    """More outstanding never slows the modeled stream (paper Fig. 5)."""
+    lo, hi = sorted((no1, no2))
+    k_lo = Knobs(outstanding=lo)
+    k_hi = Knobs(outstanding=hi)
+    assert (memmodel.predict_bw(Pattern.SEQUENTIAL, k_hi)
+            >= memmodel.predict_bw(Pattern.SEQUENTIAL, k_lo) - 1e-6)
+
+
+@SET
+@given(s1=st.integers(1, 64), s2=st.integers(1, 64))
+def test_stride_monotone(s1, s2):
+    """Larger stride never speeds the modeled traversal (paper Figs. 8/9)."""
+    lo, hi = sorted((s1, s2))
+    assert (memmodel.predict_bw(Pattern.STRIDED, Knobs(stride=hi))
+            <= memmodel.predict_bw(Pattern.STRIDED, Knobs(stride=lo)) + 1e-6)
+
+
+@SET
+@given(u1=st.integers(2, 12), u2=st.integers(2, 12))
+def test_unit_size_monotone_random(u1, u2):
+    """Random-access throughput grows with unit size (paper Fig. 7)."""
+    lo, hi = sorted((u1, u2))
+    assert (memmodel.predict_bw(Pattern.RANDOM, Knobs(unit_bytes=1 << hi))
+            >= memmodel.predict_bw(Pattern.RANDOM, Knobs(unit_bytes=1 << lo)) - 1e-6)
+
+
+@SET
+@given(b=st.integers(10, 24))
+def test_pattern_ordering(b):
+    """sequential >= random >= chase at any burst (paper Table 8)."""
+    k = Knobs(unit_bytes=256, burst_bytes=1 << b, outstanding=4)
+    seq = memmodel.predict_bw(Pattern.SEQUENTIAL, k)
+    rnd = memmodel.predict_bw(Pattern.RANDOM, k)
+    chs = memmodel.predict_bw(Pattern.CHASE, k)
+    assert seq >= rnd >= chs
+
+
+def test_outstanding_knee():
+    """Eq. 4: NO* covers the latency-bandwidth product."""
+    burst = 64 * 1024
+    no_star = memmodel.min_outstanding_for_peak(burst)
+    near_peak = memmodel.predict_bw(
+        Pattern.SEQUENTIAL, Knobs(burst_bytes=burst, outstanding=no_star))
+    assert near_peak >= 0.99 * memmodel.V5E.hbm_bw
+
+
+# ---------------------------------------------------------------------------
+# roofline extraction
+# ---------------------------------------------------------------------------
+
+@SET
+@given(base=st.floats(0, 1e12), slope=st.floats(0, 1e12),
+       nb=st.integers(3, 100))
+def test_affine_extrapolation_exact(base, slope, nb):
+    c = lambda n: CellCost(base + slope * n, 2 * base + slope * n,
+                           base + 2 * slope * n, slope * n, 0.0)
+    got = affine_extrapolate(c(1), c(2), 1, 2, nb)
+    want = c(nb)
+    for f in ("flops", "bytes_raw", "bytes_fused", "collective"):
+        np.testing.assert_allclose(getattr(got, f), getattr(want, f),
+                                   rtol=1e-6, atol=1e-3)
+
+
+def test_shape_bytes_parsing():
+    assert _shape_bytes("bf16[16,128]{1,0}") == 16 * 128 * 2
+    assert _shape_bytes("(f32[8,8], s32[4])") == 8 * 8 * 4 + 4 * 4
+    assert _shape_bytes("pred[]") == 1
+    assert _shape_bytes("%name.1") == 0
+
+
+def test_collective_stats_parsing():
+    hlo = """
+  %ag = bf16[32,128]{1,0} all-gather(%p0), replica_groups={{0,1,2,3}}, dimensions={0}
+  %ar = f32[64]{0} all-reduce(%x), replica_groups=[2,8]<=[16], to_apply=%add
+  %rs = f32[4,4]{1,0} reduce-scatter(%y), replica_groups={{0,1}}, dimensions={0}
+  %done = bf16[32,128]{1,0} all-gather-done(%ag2)
+"""
+    total, per = collective_stats(hlo)
+    ag = 32 * 128 * 2 * 3 / 4
+    ar = 2 * 64 * 4 * 7 / 8
+    rs = 4 * 4 * 4 * 1
+    assert per["all-gather"]["count"] == 1
+    assert per["all-reduce"]["count"] == 1
+    np.testing.assert_allclose(total, ag + ar + rs)
+
+
+# ---------------------------------------------------------------------------
+# LFSR / chase structures
+# ---------------------------------------------------------------------------
+
+@SET
+@given(n=st.integers(2, 400), seed=st.integers(0, 2**31 - 1))
+def test_chain_is_single_cycle(n, seed):
+    table = np.asarray(ops.make_chain(n, seed))[:, 0]
+    assert sorted(table.tolist()) == list(range(n))  # permutation
+    seen = set()
+    cur = 0
+    for _ in range(n):
+        assert cur not in seen
+        seen.add(cur)
+        cur = int(table[cur])
+    assert cur == 0 and len(seen) == n  # one full cycle
+
+
+@SET
+@given(n=st.integers(1, 2000), bits=st.sampled_from([16, 24, 32]),
+       seed=st.integers(1, 2**16 - 1))
+def test_lfsr_range(n, bits, seed):
+    idx = np.asarray(ops.lfsr_indices(n, bits=bits, seed=seed))
+    assert idx.shape == (n,)
+    assert idx.min() >= 0 and idx.max() < (1 << min(bits, 31))
+
+
+# ---------------------------------------------------------------------------
+# gradient compression
+# ---------------------------------------------------------------------------
+
+@SET
+@given(shape=st.sampled_from([(8,), (4, 16), (3, 5, 7)]),
+       seed=st.integers(0, 1000))
+def test_quantize_bounded_error(shape, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(shape), jnp.float32)
+    q, s = compress.quantize(x)
+    err = np.abs(np.asarray(compress.dequantize(q, s) - x))
+    amax = np.max(np.abs(np.asarray(x)), axis=tuple(range(1, len(shape))),
+                  keepdims=True) if len(shape) > 1 else np.max(np.abs(x))
+    assert np.all(err <= amax / 127.0 + 1e-6)
+
+
+def test_error_feedback_unbiased_over_steps():
+    """Sum of EF-compressed grads converges to sum of true grads."""
+    rng = np.random.default_rng(0)
+    err = jnp.zeros((32,), jnp.float32)
+    true_sum = np.zeros(32)
+    deq_sum = np.zeros(32)
+    for i in range(50):
+        g = jnp.asarray(rng.standard_normal(32) * (1 + i % 3), jnp.float32)
+        q, s, err = compress.ef_compress(g, err)
+        deq_sum += np.asarray(compress.dequantize(q, s))
+        true_sum += np.asarray(g)
+    # residual is bounded by one quantization step -> averages match
+    np.testing.assert_allclose(deq_sum + np.asarray(err), true_sum, rtol=1e-4,
+                               atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# sharding fallback
+# ---------------------------------------------------------------------------
+
+@SET
+@given(d0=st.integers(1, 64), d1=st.integers(1, 64))
+def test_spec_for_always_divides(d0, d1):
+    import jax
+    from jax.sharding import PartitionSpec
+    from repro.dist.sharding import PARAM_RULES_FSDP, spec_for
+    if jax.device_count() != 1:
+        pytest.skip("single-device test")
+
+    class FakeMesh:
+        shape = {"data": 4, "model": 2}
+
+    spec = spec_for((d0 * 8, d1 * 8), ("embed", "ff"), PARAM_RULES_FSDP,
+                    FakeMesh())
+    sizes = {"data": 4, "model": 2}
+    dims = (d0 * 8, d1 * 8)
+    for i, part in enumerate(spec):
+        if part is None:
+            continue
+        axes = part if isinstance(part, tuple) else (part,)
+        total = 1
+        for a in axes:
+            total *= sizes[a]
+        assert dims[i] % total == 0

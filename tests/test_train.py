@@ -1,0 +1,145 @@
+"""Trainer, checkpoint/restore, fault recovery — single-device versions.
+(Multi-device variants live in test_multidevice.py subprocesses.)"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, ShapeCell, smoke_config
+from repro.dist import POLICIES
+from repro.models import RuntimeFlags, build
+from repro.optim import AdamWConfig, adamw, schedule
+from repro.train import (CheckpointManager, FailureInjector, TrainConfig,
+                         Trainer, run_with_recovery)
+
+FLAGS = RuntimeFlags(attn_impl="chunked", attn_bq=16, attn_bkv=16,
+                     moe_impl="dense", loss_chunk=16)
+CELL = ShapeCell("smoke", "train", 32, 4)
+
+
+def _mesh():
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def _trainer(tmp, steps=4, arch="gemma-2b", injector=None, ckpt_every=2):
+    cfg = smoke_config(ARCHS[arch])
+    bundle = build(cfg, FLAGS)
+    return Trainer(bundle, CELL, _mesh(), POLICIES["fsdp_tp"],
+                   AdamWConfig(lr=1e-3),
+                   TrainConfig(steps=steps, ckpt_dir=tmp, ckpt_every=ckpt_every,
+                               log_every=1),
+                   injector=injector)
+
+
+def test_loss_decreases_on_fixed_batch():
+    tr = _trainer(None)
+    params, opt, _ = tr.init_state()
+    batch = tr._put(tr.data.batch_at(0))
+    losses = []
+    for _ in range(8):
+        params, opt, m = tr.step_fn(params, opt, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0], losses
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tr = _trainer(str(tmp_path), steps=4)
+    with jax.set_mesh(tr.mesh):
+        final = tr.run()
+    assert final == 4
+    params, opt = tr._final
+    restored_p, restored_o, step = tr.restore_state()
+    assert step == 4
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored_p)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_recovery_matches_uninterrupted_run(tmp_path):
+    """Deterministic data + exact restore => identical final params."""
+    a_dir, b_dir = str(tmp_path / "a"), str(tmp_path / "b")
+    tr_a = _trainer(a_dir, steps=6, ckpt_every=2)
+    with jax.set_mesh(tr_a.mesh):
+        tr_a.run()
+    p_ref, _ = tr_a._final
+
+    inj = FailureInjector(fail_at=(3, 5))
+    tr_b = _trainer(b_dir, steps=6, ckpt_every=2, injector=inj)
+
+    def run_fn(resume):
+        with jax.set_mesh(tr_b.mesh):
+            return tr_b.run(resume)
+
+    final = run_with_recovery(run_fn)
+    assert final == 6
+    p_rec, _ = tr_b._final
+    for a, b in zip(jax.tree.leaves(p_ref), jax.tree.leaves(p_rec)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=1e-6)
+
+
+def test_straggler_monitor_flags():
+    tr = _trainer(None)
+    for i in range(10):
+        tr.monitor.record(i, 0.1)
+    assert not tr.monitor.flagged
+    assert tr.monitor.record(10, 1.0)
+    assert tr.monitor.flagged == [10]
+
+
+def test_checkpoint_keep_k(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, dict(x=jnp.full((4,), s)))
+    assert mgr.all_steps() == [3, 4]
+    out = mgr.restore(None, dict(x=jnp.zeros((4,))))
+    np.testing.assert_array_equal(np.asarray(out["x"]), np.full((4,), 4.0))
+
+
+def test_adamw_decreases_quadratic():
+    w = dict(w=jnp.asarray([2.0, -3.0, 1.0]))
+    st = adamw.init(w)
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0, clip_norm=None)
+    for _ in range(60):
+        g = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(w)
+        w, st, _ = adamw.update(g, st, w, cfg)
+    assert float(jnp.max(jnp.abs(w["w"]))) < 0.2
+
+
+def test_schedules_shape():
+    f = schedule.warmup_cosine(10, 100)
+    s = jnp.asarray
+    assert float(f(s(0))) == 0.0
+    assert float(f(s(10))) == pytest.approx(1.0, abs=1e-3)
+    assert float(f(s(100))) == pytest.approx(0.1, abs=1e-2)
+    g = schedule.wsd(10, 100, decay_frac=0.2)
+    assert float(g(s(50))) == 1.0
+    assert float(g(s(100))) == pytest.approx(0.05, abs=1e-2)
+
+
+def test_microbatched_step_matches_full_batch():
+    """grad accumulation is numerically equivalent to the full-batch step."""
+    from repro.dist.steps import make_train_step
+    from repro.models import build as build_bundle
+    cfg = smoke_config(ARCHS["phi4-mini-3.8b"])
+    bundle = build_bundle(cfg, FLAGS)
+    mesh = _mesh()
+    outs = {}
+    for m in (1, 4):
+        step, p_sh, o_sh, bsh = make_train_step(
+            bundle, mesh, POLICIES["fsdp_tp"], AdamWConfig(lr=1e-3),
+            microbatches=m)
+        with jax.set_mesh(mesh):
+            params = bundle.init(jax.random.PRNGKey(0))
+            params = Trainer._put_tree(params, p_sh)
+            opt = Trainer._put_tree(adamw.init(params), o_sh)
+            tok = jax.random.randint(jax.random.PRNGKey(1), (8, 32), 0,
+                                     cfg.vocab_size)
+            new_p, _, metrics = step(params, opt, dict(tokens=tok, labels=tok))
+        outs[m] = (new_p, float(metrics["loss"]))
+    assert abs(outs[1][1] - outs[4][1]) < 1e-4
+    for a, b in zip(jax.tree.leaves(outs[1][0]), jax.tree.leaves(outs[4][0])):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=2e-3)

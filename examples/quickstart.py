@@ -27,8 +27,15 @@ def main():
         print("  " + row.csv())
 
     print("\n=== 2. per-pattern optimization directions (paper §5/§6) ===")
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    policy = POLICIES["fsdp_tp"]
+    n_eng = policy.engines(mesh)
+    print(f"  policy={policy.name}: {n_eng} access engine(s) on this mesh")
     reports = advisor.advise_model(ARCHS["gemma2-27b"],
-                                   SHAPES_BY_NAME["prefill_32k"])
+                                   SHAPES_BY_NAME["prefill_32k"],
+                                   engines=n_eng,
+                                   param_engines=policy.param_engines(mesh))
     print(advisor.render_report(reports))
 
     print("\n=== 3. autotuned knobs ===")
@@ -39,10 +46,8 @@ def main():
     cfg = smoke_config(ARCHS["gemma2-27b"])
     bundle = build(cfg, RuntimeFlags(attn_bq=16, attn_bkv=16, moe_impl="dense",
                                      loss_chunk=16))
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
     tr = Trainer(bundle, ShapeCell("quick", "train", 64, 4), mesh,
-                 POLICIES["fsdp_tp"], AdamWConfig(lr=1e-3),
+                 policy, AdamWConfig(lr=1e-3),
                  TrainConfig(steps=5, log_every=1, data_kind="markov"))
     with jax.set_mesh(mesh):
         tr.run()

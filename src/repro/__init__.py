@@ -4,3 +4,8 @@ Reproduction of "Optimizing Memory Performance of Xilinx FPGAs under Vitis"
 (CS.DC 2020), adapted to the TPU memory hierarchy.  See DESIGN.md.
 """
 __version__ = "1.0.0"
+
+from repro import compat as _compat
+
+_compat.install()
+del _compat

@@ -1,0 +1,64 @@
+"""Version shims so one codebase runs across jax releases.
+
+The sharding surface this repo codes against (``jax.set_mesh``,
+``jax.sharding.AxisType``, ``jax.make_mesh(..., axis_types=...)``) stabilized
+after jax 0.4.x.  On older jaxlib builds (the pinned CI/toolchain version is
+0.4.37) those names are absent, so :func:`install` backfills them with
+behavior-compatible equivalents:
+
+- ``jax.sharding.AxisType`` -> a placeholder enum (Auto/Explicit/Manual).
+  Pre-0.5 meshes have no per-axis type; every axis behaves as ``Auto``,
+  which is the only mode this repo uses.
+- ``jax.make_mesh`` -> wrapped to accept and drop ``axis_types``.
+- ``jax.set_mesh`` -> a context manager entering the ``Mesh`` context
+  (the ambient-mesh mechanism of that era; ``repro.dist`` always passes
+  explicit ``NamedSharding``s, so the ambient mesh only needs to exist).
+
+``install()`` is idempotent and a no-op on jax versions that already ship
+the real APIs.  It runs from ``repro/__init__`` so any ``import repro.*``
+guarantees the surface exists before model/test code touches it.
+"""
+from __future__ import annotations
+
+import contextlib
+import enum
+import functools
+import inspect
+
+import jax
+
+
+def _has_axis_types_kwarg() -> bool:
+    try:
+        return "axis_types" in inspect.signature(jax.make_mesh).parameters
+    except (TypeError, ValueError):
+        return True  # can't introspect -> assume modern jax
+
+
+def install() -> None:
+    if not hasattr(jax.sharding, "AxisType"):
+        class AxisType(enum.Enum):
+            Auto = "auto"
+            Explicit = "explicit"
+            Manual = "manual"
+
+        jax.sharding.AxisType = AxisType
+
+    if not _has_axis_types_kwarg():
+        _orig_make_mesh = jax.make_mesh
+
+        @functools.wraps(_orig_make_mesh)
+        def make_mesh(axis_shapes, axis_names, *, devices=None,
+                      axis_types=None):
+            del axis_types  # pre-0.5 meshes are implicitly Auto on every axis
+            return _orig_make_mesh(axis_shapes, axis_names, devices=devices)
+
+        jax.make_mesh = make_mesh
+
+    if not hasattr(jax, "set_mesh"):
+        @contextlib.contextmanager
+        def set_mesh(mesh):
+            with mesh:
+                yield mesh
+
+        jax.set_mesh = set_mesh

@@ -20,11 +20,24 @@ from repro.configs.base import ATTN, DECODE, MOE, RGLRU, SSD, ModelConfig, Shape
 from repro.core.patterns import ADVICE, Pattern, SiteReport
 
 
-def advise_model(cfg: ModelConfig, cell: ShapeCell) -> List[SiteReport]:
+def advise_model(cfg: ModelConfig, cell: ShapeCell, engines: int = 1,
+                 param_engines: int = None) -> List[SiteReport]:
+    """``engines`` is the parallel-access-engine count of the active
+    sharding policy on its mesh (``ShardingPolicy.engines(mesh)``, paper
+    Tables 3-5): traffic is reported *per engine*, i.e. per mesh shard,
+    since each shard streams its slice from its own HBM stack.
+
+    Batch-scaled sites (embedding, attention, states, routing) split across
+    all ``engines``; the weight stream splits only across ``param_engines``
+    (``ShardingPolicy.param_engines(mesh)`` — 1 for pure DP, where params
+    replicate and every shard streams the full model).  Defaults to
+    ``engines`` when unset."""
     reports: List[SiteReport] = []
     dt = 2  # bf16
     tokens = cell.tokens
     d = cfg.d_model
+    engines = max(1, engines)
+    param_engines = engines if param_engines is None else max(1, param_engines)
 
     # embedding gather: random row access into the (V, d) table
     reports.append(SiteReport(
@@ -82,6 +95,12 @@ def advise_model(cfg: ModelConfig, cell: ShapeCell) -> List[SiteReport]:
                             if r.pattern == Pattern.NEST),
             detail="decode re-reads the whole cache per token: pure "
                    "bandwidth; batch tokens to amortize (throughput mode)"))
+    if engines > 1 or param_engines > 1:
+        for r in reports:
+            n = param_engines if r.op_name == "params.stream" else engines
+            if n > 1:
+                r.bytes_moved = max(1, r.bytes_moved // n)
+                r.detail = f"[1/{n} engines] " + r.detail
     return reports
 
 

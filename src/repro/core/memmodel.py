@@ -111,6 +111,19 @@ def predict_bw(pattern: Pattern, knobs: Knobs, spec: TPUSpec = V5E) -> float:
     raise ValueError(pattern)
 
 
+def aggregate_bw(pattern: Pattern, knobs: Knobs, spec: TPUSpec = V5E) -> float:
+    """Multi-engine aggregate bytes/s (paper Tables 3-5 scaling).
+
+    The paper scales bandwidth by instantiating parallel access engines over
+    banked HBM; the TPU analogue is mesh shards, each streaming from its own
+    HBM stack, so the aggregate is linear in the engine count.  The engine
+    count should come from the active sharding policy's mesh shape
+    (``repro.dist.sharding.ShardingPolicy.engines``), not be hardcoded —
+    ``Knobs(engines=policy.engines(mesh))``.
+    """
+    return predict_bw(pattern, knobs, spec) * max(1, knobs.engines)
+
+
 def min_outstanding_for_peak(burst_bytes: int, spec: TPUSpec = V5E) -> int:
     """Knee of the paper's Fig. 5: NO* = ceil(T_l * BW / burst)."""
     import math

@@ -1,0 +1,14 @@
+"""Distribution layer: sharding policies, pjit step builders, shard_map DP.
+
+The TPU translation of the paper's parallel-access-engine lever: a
+:class:`~repro.dist.sharding.ShardingPolicy` maps the models' *logical* axis
+names onto mesh axes (with divisibility fallback), ``dist.steps`` builds
+pjit-sharded train/prefill/decode steps from a policy + mesh, and
+``dist.dp_shardmap`` is the explicit-collective data-parallel path with int8
+error-feedback gradient compression.  See docs/architecture.md.
+"""
+from repro.dist.sharding import (  # noqa: F401
+    ACT_RULES_SP, ACT_RULES_TP, BATCH_RULES, PARAM_RULES_FSDP, PARAM_RULES_TP,
+    POLICIES, ShardingPolicy, param_shardings, spec_for,
+)
+from repro.dist import sharding  # noqa: F401

@@ -1,0 +1,238 @@
+"""Logical-axis sharding: rules, specs, and the policy registry.
+
+This is the repo's translation of the paper's *parallel access engines*
+lever (Tables 3-5): on an FPGA, aggregate bandwidth comes from spreading
+independent engines over HBM banks; on a TPU mesh it comes from spreading
+shards over chips, each streaming from its own HBM stack.  Model code never
+names mesh axes — ``ParamBuilder`` records *logical* axis names per tensor
+(``repro.models.common``), and a :class:`ShardingPolicy` maps logical axes
+onto mesh axes here.
+
+The mapping is rule-driven with a divisibility fallback: a rule only fires
+when the dimension divides by the mesh-axis size and the mesh axis is not
+already consumed by an earlier dimension of the same tensor.  Anything
+unmatched stays replicated, so a policy written for the (16, 16) production
+mesh degrades gracefully to a (1, 1) CI mesh or an odd-sized smoke model.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# A rule maps one logical axis name -> one mesh axis or an ordered tuple of
+# mesh axes (e.g. batch -> ("pod", "data"): data parallelism spans the DCN
+# boundary and the intra-pod data axis).
+Rule = Tuple[str, Union[str, Tuple[str, ...]]]
+Rules = Tuple[Rule, ...]
+
+# ---------------------------------------------------------------------------
+# Rule tables
+# ---------------------------------------------------------------------------
+
+# FSDP x TP parameter layout: tensor parallelism (the "model" mesh axis)
+# splits the per-layer wide dims — heads / kv_heads / ff / experts / vocab —
+# and FSDP (the "data" mesh axis) additionally splits the embed dim, so every
+# large matrix is sharded twice and ZeRO-3-style optimizer sharding falls out
+# of the same layout (optimizer state mirrors the params, see dist.steps).
+PARAM_RULES_FSDP: Rules = (
+    ("heads", "model"),
+    ("kv_heads", "model"),
+    ("ff", "model"),
+    ("expert", "model"),
+    ("vocab", "model"),
+    ("embed", "data"),
+)
+
+# Pure tensor parallelism (params replicated across data, split across model).
+PARAM_RULES_TP: Rules = tuple(
+    (l, m) for l, m in PARAM_RULES_FSDP if l != "embed")
+
+# Activation rules.  Batch always spans the data-parallel axes; the wide
+# activation dims follow the TP split of the weights producing them.
+ACT_RULES_TP: Rules = (
+    ("batch", ("pod", "data")),
+    ("heads", "model"),
+    ("kv_heads", "model"),
+    ("ff", "model"),
+    ("expert", "model"),
+    ("vocab", "model"),
+)
+
+# Sequence parallelism: residual-stream activations are additionally split
+# along seq over the model axis (the norm/elementwise regions between
+# matmuls).  Because allocation walks tensor dims left-to-right, "seq" wins
+# the model axis on (batch, seq, embed) tensors while (batch, seq, heads, _)
+# attention tensors fall back to replicated seq — exactly the
+# all-gather/reduce-scatter boundary sequence parallelism introduces.
+ACT_RULES_SP: Rules = (("batch", ("pod", "data")), ("seq", "model")) + tuple(
+    r for r in ACT_RULES_TP if r[0] != "batch")
+
+# Data-parallel batch rule on its own (batch sharders, decode tokens).
+BATCH_RULES: Rules = (("batch", ("pod", "data")),)
+
+
+# ---------------------------------------------------------------------------
+# Spec construction
+# ---------------------------------------------------------------------------
+
+def _mesh_sizes(mesh) -> dict:
+    """{axis name: size} for a Mesh (or any object with a ``.shape`` map)."""
+    return dict(mesh.shape)
+
+
+def spec_for(shape: Sequence[int], axes: Sequence[Optional[str]],
+             rules: Rules, mesh) -> P:
+    """PartitionSpec for one tensor from its logical axes.
+
+    ``shape``/``axes`` are parallel (``axes`` entries may be None =
+    never sharded).  For each dimension, left to right, the first rule whose
+    logical name matches contributes its mesh axes; a mesh axis is used at
+    most once per tensor and only when the running product of assigned axis
+    sizes still divides the dimension.  Scalars yield ``P()``; unmatched
+    dims yield ``None`` (replicated).
+    """
+    sizes = _mesh_sizes(mesh)
+    rule_map = {}
+    for logical, mesh_axes in rules:
+        rule_map.setdefault(
+            logical,
+            (mesh_axes,) if isinstance(mesh_axes, str) else tuple(mesh_axes))
+    used: set = set()
+    parts = []
+    for dim, logical in zip(shape, axes):
+        assigned: Tuple[str, ...] = ()
+        total = 1
+        for axis in rule_map.get(logical, ()):
+            size = sizes.get(axis)
+            if size is None or axis in used:
+                continue
+            if dim % (total * size) != 0:
+                continue
+            assigned += (axis,)
+            total *= size
+        used.update(assigned)
+        if not assigned:
+            parts.append(None)
+        elif len(assigned) == 1:
+            parts.append(assigned[0])
+        else:
+            parts.append(assigned)
+    return P(*parts)
+
+
+def param_shardings(mesh, abs_params, specs, rules: Rules):
+    """NamedSharding tree matching ``abs_params``.
+
+    ``abs_params`` is the ShapeDtypeStruct tree from
+    ``ModelBundle.abstract_params()``; ``specs`` is its parallel tree of
+    logical-axes tuples (tuple leaves, hence the flatten_up_to dance).
+    """
+    flat_p, treedef = jax.tree.flatten(abs_params)
+    flat_ax = treedef.flatten_up_to(specs)
+    return jax.tree.unflatten(
+        treedef,
+        [NamedSharding(mesh, spec_for(p.shape, ax, rules, mesh))
+         for p, ax in zip(flat_p, flat_ax)])
+
+
+# ---------------------------------------------------------------------------
+# Policies
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ShardingPolicy:
+    """One named distribution strategy: how params, activations, and the
+    data batch map onto mesh axes, plus the paper-model bookkeeping
+    (how many parallel access engines the mesh provides)."""
+
+    name: str
+    param_rules: Rules
+    act_rules: Rules
+    batch_rules: Rules = BATCH_RULES
+    description: str = ""
+
+    # ------------------------------------------------------------------
+    def param_shardings(self, mesh, abs_params, specs):
+        return param_shardings(mesh, abs_params, specs, self.param_rules)
+
+    def sharder(self, mesh):
+        """A ``repro.models.common.Sharder``: (array, logical axes) -> array
+        constrained to this policy's activation layout.  Injected into
+        ``RuntimeFlags.shd`` by ``dist.steps`` so model code stays
+        mesh-agnostic."""
+        def shd(x, axes):
+            spec = spec_for(x.shape, axes, self.act_rules, mesh)
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, spec))
+        return shd
+
+    def batch_sharding(self, mesh, aval) -> NamedSharding:
+        """Sharding for one data-batch leaf: axis 0 is the global batch."""
+        axes = ("batch",) + (None,) * (aval.ndim - 1) if aval.ndim else ()
+        return NamedSharding(
+            mesh, spec_for(aval.shape, axes, self.batch_rules, mesh))
+
+    def batch_shardings(self, mesh, abs_batch):
+        return jax.tree.map(lambda a: self.batch_sharding(mesh, a), abs_batch)
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _axes_product(mesh, rules: Rules) -> int:
+        sizes = _mesh_sizes(mesh)
+        known = {a for _, axes in rules
+                 for a in ((axes,) if isinstance(axes, str) else axes)}
+        n = 1
+        for axis, size in sizes.items():
+            if axis in known:
+                n *= size
+        return max(1, n)
+
+    def engines(self, mesh) -> int:
+        """Parallel access engines this policy runs on ``mesh`` — the TPU
+        analogue of the paper's multi-engine knob (Tables 3-5): every mesh
+        shard streams from its own HBM stack, so aggregate bandwidth scales
+        with the product of the mesh axes the policy's rules name.
+
+        This is the analytic model's idealization: it assumes tensor dims
+        divide the mesh axes.  ``spec_for``'s divisibility fallback may
+        replicate odd-sized dims of a particular tensor, in which case that
+        tensor sees fewer effective engines than reported here."""
+        return self._axes_product(
+            mesh, self.param_rules + self.act_rules + self.batch_rules)
+
+    def param_engines(self, mesh) -> int:
+        """Shards each *parameter* is split across (1 for pure DP: params
+        replicate, so weight streaming is not divided among engines)."""
+        return self._axes_product(mesh, self.param_rules)
+
+    def data_engines(self, mesh) -> int:
+        """Shards the data batch is split across (the DP degree)."""
+        return self._axes_product(mesh, self.batch_rules)
+
+
+POLICIES = {
+    p.name: p
+    for p in (
+        ShardingPolicy(
+            name="dp", param_rules=(), act_rules=BATCH_RULES,
+            description="pure data parallelism: params/opt replicated, "
+                        "batch split over (pod, data)"),
+        ShardingPolicy(
+            name="tp", param_rules=PARAM_RULES_TP, act_rules=ACT_RULES_TP,
+            description="tensor parallelism only: wide dims over 'model', "
+                        "params replicated across 'data'"),
+        ShardingPolicy(
+            name="fsdp_tp", param_rules=PARAM_RULES_FSDP,
+            act_rules=ACT_RULES_TP,
+            description="FSDP over 'data' x TP over 'model' (the deployable "
+                        "default; optimizer state shards like params)"),
+        ShardingPolicy(
+            name="fsdp_tp_sp", param_rules=PARAM_RULES_FSDP,
+            act_rules=ACT_RULES_SP,
+            description="fsdp_tp + sequence-parallel residual activations "
+                        "(seq over 'model' between matmul regions)"),
+    )
+}

@@ -1,0 +1,181 @@
+"""pjit-sharded train / prefill / decode steps over a launch.mesh mesh.
+
+Each builder returns a jitted step plus the sharding trees callers use to
+place state (``Trainer._put_tree``, checkpoint restore, the dry-run's
+abstract lowering).  Layout is pinned with ``with_sharding_constraint``
+against explicit ``NamedSharding``s rather than jit in/out_shardings, so the
+same step lowers identically from committed arrays (training) and from bare
+``ShapeDtypeStruct``s (the dry-run compiles 314B-param trees this way).
+
+Gradient accumulation (``microbatches=m``) scans m equal slices of the
+batch and averages: with the synthetic LM's always-valid labels this is
+numerically the full-batch step (mean of per-slice means), which
+``tests/test_train.py::test_microbatched_step_matches_full_batch`` pins.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.dist.sharding import ShardingPolicy, spec_for
+from repro.optim import adamw
+
+
+def _with_policy_sharder(bundle, mesh, policy: ShardingPolicy):
+    """Rebind the bundle's RuntimeFlags.shd to this policy's activation
+    sharder so intra-model constraints follow the active policy."""
+    flags = dataclasses.replace(bundle.flags, shd=policy.sharder(mesh))
+    return dataclasses.replace(bundle, flags=flags)
+
+
+def _constrain(tree, shardings):
+    flat, treedef = jax.tree.flatten(tree)
+    flat_s = treedef.flatten_up_to(shardings)
+    return jax.tree.unflatten(
+        treedef,
+        [jax.lax.with_sharding_constraint(x, s)
+         for x, s in zip(flat, flat_s)])
+
+
+def _constrain_batch(batch, mesh, policy):
+    return jax.tree.map(
+        lambda x: jax.lax.with_sharding_constraint(
+            x, policy.batch_sharding(mesh, x)), batch)
+
+
+# ---------------------------------------------------------------------------
+# train
+# ---------------------------------------------------------------------------
+
+def make_train_step(bundle, mesh, policy: ShardingPolicy,
+                    opt_cfg: adamw.AdamWConfig, microbatches: int = 1):
+    """(step_fn, param_shardings, opt_shardings, batch_sharder).
+
+    ``step_fn(params, opt_state, batch) -> (params, opt_state, metrics)``.
+    Optimizer m/v shard exactly like the params (ZeRO-3 for free); the
+    scalar optimizer step stays replicated.  ``batch_sharder`` maps an
+    abstract batch tree to the policy's data-parallel shardings.
+    """
+    bundle = _with_policy_sharder(bundle, mesh, policy)
+    abs_params, specs = bundle.abstract_params()
+    p_shard = policy.param_shardings(mesh, abs_params, specs)
+    o_shard = adamw.AdamWState(
+        step=NamedSharding(mesh, P()), m=p_shard, v=p_shard)
+
+    def batch_sharder(abs_batch):
+        return policy.batch_shardings(mesh, abs_batch)
+
+    m = max(1, int(microbatches))
+
+    def grad_fn(params, batch):
+        (loss, aux), grads = jax.value_and_grad(
+            bundle.train_loss, has_aux=True)(params, batch)
+        return loss, aux, grads
+
+    def step(params, opt_state, batch):
+        params = _constrain(params, p_shard)
+        batch = _constrain_batch(batch, mesh, policy)
+        if m == 1:
+            loss, aux, grads = grad_fn(params, batch)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape((m, x.shape[0] // m) + x.shape[1:]),
+                batch)
+
+            def body(carry, mb):
+                loss_sum, aux_sum, gsum = carry
+                loss, aux, grads = grad_fn(params, mb)
+                gsum = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), gsum, grads)
+                aux_sum = jax.tree.map(lambda a, b: a + b, aux_sum, aux)
+                return (loss_sum + loss, aux_sum, gsum), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            mb0 = jax.tree.map(lambda x: x[0], micro)
+            aux_abs = jax.eval_shape(lambda p, b: grad_fn(p, b)[1],
+                                     params, mb0)
+            aux0 = jax.tree.map(
+                lambda s: jnp.zeros(s.shape, s.dtype), aux_abs)
+            (loss, aux, grads), _ = jax.lax.scan(
+                body, (jnp.zeros((), jnp.float32), aux0, zeros), micro)
+            loss = loss / m
+            aux = jax.tree.map(lambda a: a / m, aux)
+            grads = jax.tree.map(lambda g: g / m, grads)
+        grads = _constrain(grads, p_shard)
+        new_p, new_opt, om = adamw.update(grads, opt_state, params, opt_cfg)
+        new_p = _constrain(new_p, p_shard)
+        new_opt = adamw.AdamWState(step=new_opt.step,
+                                   m=_constrain(new_opt.m, p_shard),
+                                   v=_constrain(new_opt.v, p_shard))
+        metrics = dict(loss=loss, **aux, **om)
+        return new_p, new_opt, metrics
+
+    return jax.jit(step, donate_argnums=(0, 1)), p_shard, o_shard, batch_sharder
+
+
+# ---------------------------------------------------------------------------
+# prefill / decode
+# ---------------------------------------------------------------------------
+
+def _cache_shardings(mesh, cache_abs, policy: ShardingPolicy):
+    """Batch-dim data-parallel shardings for a decode-cache tree.
+
+    Stacked leaves (under ``blocks``/``dec``) carry a leading LAYERS axis
+    with batch at axis 1; remainder/encoder leaves carry batch at axis 0 —
+    the same layout contract the serve engine's slot scatter uses.  Only the
+    batch dim is sharded (KV length/heads stay local so the per-slot decode
+    scatter never crosses shards); non-divisible batches replicate.
+    """
+    def leaf(path, a):
+        names = [str(getattr(p, "key", getattr(p, "name", ""))) for p in path]
+        batch_ax = 1 if any(n in ("blocks", "dec") for n in names) else 0
+        axes = [None] * a.ndim
+        if a.ndim > batch_ax:
+            axes[batch_ax] = "batch"
+        return NamedSharding(
+            mesh, spec_for(a.shape, axes, policy.batch_rules, mesh))
+
+    return jax.tree_util.tree_map_with_path(leaf, cache_abs)
+
+
+def make_prefill_step(bundle, mesh, policy: ShardingPolicy, cell):
+    """(step, param_shardings); step(params, batch) -> (cache, last_logits)."""
+    bundle = _with_policy_sharder(bundle, mesh, policy)
+    abs_params, specs = bundle.abstract_params()
+    p_shard = policy.param_shardings(mesh, abs_params, specs)
+
+    def step(params, batch):
+        params = _constrain(params, p_shard)
+        batch = _constrain_batch(batch, mesh, policy)
+        return bundle.prefill(params, batch)
+
+    return jax.jit(step), p_shard
+
+
+def make_decode_step(bundle, mesh, policy: ShardingPolicy, cell):
+    """(step, param_shardings, cache_shardings).
+
+    ``step(params, cache, tokens, pos) -> (logits, cache)`` with the cache
+    donated (decode is the steady-state loop; the cache buffer is reused
+    in place).  ``pos`` may be a scalar (batch-uniform decode) or a per-slot
+    vector (continuous batching).
+    """
+    bundle = _with_policy_sharder(bundle, mesh, policy)
+    abs_params, specs = bundle.abstract_params()
+    p_shard = policy.param_shardings(mesh, abs_params, specs)
+    c_shard = _cache_shardings(mesh, bundle.cache_specs(cell), policy)
+
+    def step(params, cache, tokens, pos):
+        params = _constrain(params, p_shard)
+        cache = _constrain(cache, c_shard)
+        tokens = jax.lax.with_sharding_constraint(
+            tokens, policy.batch_sharding(mesh, tokens))
+        return bundle.decode_step(params, cache, tokens, pos)
+
+    return jax.jit(step, donate_argnums=(1,)), p_shard, c_shard

@@ -146,7 +146,7 @@ def run_cell(cfg: ModelConfig, cell: ShapeCell, *, pods: str, roofline: bool,
         _, per_coll = rl.collective_stats(compiled.as_text())
         key = "multi_pod" if mp else "single_pod"
         rec["meshes"][key] = dict(
-            chips=chips, compile_s=round(dt, 1),
+            chips=chips, engines=policy.engines(mesh), compile_s=round(dt, 1),
             peak_gib=round(mem.get("peak_bytes_per_device", 0) / 2**30, 3),
             arg_gib=round(mem.get("argument_size_in_bytes", 0) / 2**30, 3),
             temp_gib=round(mem.get("temp_size_in_bytes", 0) / 2**30, 3),
@@ -179,7 +179,7 @@ def run_cell(cfg: ModelConfig, cell: ShapeCell, *, pods: str, roofline: bool,
         mf = model_flops_per_chip(cfg, cell, chips)
         terms = rl.terms_from_cost(full, chips, mf)
         rec["roofline"] = dict(
-            chips=chips,
+            chips=chips, engines=policy.engines(mesh),
             hlo_flops=full.flops, hlo_bytes_raw=full.bytes_raw,
             hlo_bytes=full.bytes_fused,
             bytes_flash_inner=full.bytes_flash_inner,

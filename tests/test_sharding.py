@@ -1,0 +1,171 @@
+"""repro.dist.sharding unit tests: spec_for edge cases, policy registry,
+param_shardings trees.  Pure logic — no multi-device backend needed (uses a
+fake mesh object exposing only ``.shape``, like the property test)."""
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.dist import (ACT_RULES_SP, PARAM_RULES_FSDP, POLICIES,
+                        param_shardings, spec_for)
+
+
+class FakeMesh:
+    shape = {"data": 4, "model": 2}
+
+
+class FakeMultiPodMesh:
+    shape = {"pod": 2, "data": 4, "model": 2}
+
+
+MESH = FakeMesh()
+
+
+def test_spec_for_scalar_is_empty():
+    assert spec_for((), (), PARAM_RULES_FSDP, MESH) == P()
+
+
+def test_spec_for_unsharded_vector():
+    # a 1-D norm weight on the embed axis: divisible -> sharded over data
+    assert spec_for((64,), ("embed",), PARAM_RULES_FSDP, MESH) == P("data")
+
+
+def test_spec_for_axis_name_mismatch_replicates():
+    # logical names absent from the rules stay replicated
+    spec = spec_for((8, 8), ("layers", "state"), PARAM_RULES_FSDP, MESH)
+    assert spec == P(None, None)
+
+
+def test_spec_for_none_logical_axis_replicates():
+    spec = spec_for((16, 32), (None, "ff"), PARAM_RULES_FSDP, MESH)
+    assert spec == P(None, "model")
+
+
+def test_spec_for_no_matching_mesh_axis():
+    # rules naming mesh axes that don't exist on this mesh -> replicated
+    rules = (("embed", "zz_missing"),)
+    assert spec_for((64,), ("embed",), rules, MESH) == P(None)
+
+
+def test_spec_for_divisibility_fallback():
+    # 6 % 4 != 0 -> embed falls back to replicated; 6 % 2 == 0 -> ff shards
+    spec = spec_for((6, 6), ("embed", "ff"), PARAM_RULES_FSDP, MESH)
+    assert spec == P(None, "model")
+
+
+def test_spec_for_mesh_axis_used_once_per_tensor():
+    # both dims want "model"; the first (left-to-right) wins
+    spec = spec_for((8, 8), ("heads", "ff"), PARAM_RULES_FSDP, MESH)
+    assert spec == P("model", None)
+
+
+def test_spec_for_tuple_rule_spans_multiple_axes():
+    spec = spec_for((16, 32), ("batch", None),
+                    (("batch", ("pod", "data")),), FakeMultiPodMesh())
+    assert spec == P(("pod", "data"), None)
+
+
+def test_spec_for_tuple_rule_partial_divisibility():
+    # batch=4 divides pod(2) but then 4 % (2*4) != 0 -> only pod assigned
+    spec = spec_for((4, 8), ("batch", None),
+                    (("batch", ("pod", "data")),), FakeMultiPodMesh())
+    assert spec == P("pod", None)
+
+
+def test_sequence_parallel_rules_prefer_seq_over_heads():
+    # residual stream: seq takes the model axis...
+    assert spec_for((8, 32, 64), ("batch", "seq", "embed"),
+                    ACT_RULES_SP, MESH) == P("data", "model", None)
+    # ...so per-head tensors scanned later can't re-use it on heads
+    assert spec_for((8, 32, 4, 16), ("batch", "seq", "heads", None),
+                    ACT_RULES_SP, MESH) == P("data", "model", None, None)
+
+
+def test_policies_registry_complete():
+    assert {"dp", "tp", "fsdp_tp", "fsdp_tp_sp"} <= set(POLICIES)
+    for p in POLICIES.values():
+        assert p.name in POLICIES
+        assert isinstance(p.param_rules, tuple)
+    assert POLICIES["fsdp_tp"].param_rules == PARAM_RULES_FSDP
+
+
+def test_policy_engines_from_mesh_shape():
+    assert POLICIES["fsdp_tp"].engines(MESH) == 8
+    assert POLICIES["fsdp_tp"].engines(FakeMultiPodMesh()) == 16
+    # pure DP never uses the model axis -> it contributes no engines
+    assert POLICIES["dp"].engines(MESH) == 4
+
+
+def test_policy_param_and_data_engines():
+    # params replicate under dp -> weight streaming is not divided
+    assert POLICIES["dp"].param_engines(MESH) == 1
+    # tp shards params only over the model axis
+    assert POLICIES["tp"].param_engines(MESH) == 2
+    # fsdp_tp shards params over both axes
+    assert POLICIES["fsdp_tp"].param_engines(MESH) == 8
+    for name in ("dp", "tp", "fsdp_tp", "fsdp_tp_sp"):
+        assert POLICIES[name].data_engines(MESH) == 4
+        assert POLICIES[name].data_engines(FakeMultiPodMesh()) == 8
+
+
+def test_advise_model_per_site_engine_split():
+    from repro.configs import ARCHS, SHAPES_BY_NAME
+    from repro.core import advisor
+
+    cfg, cell = ARCHS["gemma-2b"], SHAPES_BY_NAME["train_4k"]
+    base = {r.op_name: r.bytes_moved
+            for r in advisor.advise_model(cfg, cell)}
+    split = {r.op_name: r.bytes_moved
+             for r in advisor.advise_model(cfg, cell, engines=8,
+                                           param_engines=1)}
+    # batch-scaled sites split 8 ways; the replicated weight stream doesn't
+    assert split["embedding.lookup"] == max(1, base["embedding.lookup"] // 8)
+    assert split["params.stream"] == base["params.stream"]
+
+
+def test_aggregate_bw_scales_with_policy_engines():
+    from repro.core.memmodel import V5E, aggregate_bw, predict_bw
+    from repro.core.patterns import Knobs, Pattern
+
+    base = Knobs(burst_bytes=1 << 20, outstanding=4)
+    per_engine = predict_bw(Pattern.SEQUENTIAL, base)
+    for mesh, want in ((FakeMesh(), 8), (FakeMultiPodMesh(), 16)):
+        n = POLICIES["fsdp_tp"].engines(mesh)
+        assert n == want
+        knobs = Knobs(burst_bytes=1 << 20, outstanding=4, engines=n)
+        # Tables 3-5: aggregate bandwidth is linear in the engine count
+        assert aggregate_bw(Pattern.SEQUENTIAL, knobs) == per_engine * n
+        assert aggregate_bw(Pattern.SEQUENTIAL, knobs) > V5E.hbm_bw
+
+
+def test_dp_shardmap_validates_mesh_and_err_shape():
+    import pytest
+    from repro.dist.dp_shardmap import (init_error_feedback,
+                                        make_dp_train_step)
+    from repro.optim import AdamWConfig, adamw
+
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    loss = lambda p, b: jnp.sum(p["w"] * b["x"])
+    with pytest.raises(ValueError, match="data axis"):
+        make_dp_train_step(
+            loss, jax.make_mesh((1,), ("batch",),
+                                axis_types=(jax.sharding.AxisType.Auto,)),
+            AdamWConfig())
+    params = dict(w=jnp.ones((4,)))
+    err = init_error_feedback(params, num_devices=2)  # wrong: mesh has 1
+    step = make_dp_train_step(loss, mesh, AdamWConfig(), compress_grads=True)
+    with pytest.raises(ValueError, match="residual"):
+        step(params, adamw.init(params), err, dict(x=jnp.ones((2, 4))))
+
+
+def test_param_shardings_tree_structure():
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    abs_params = dict(
+        emb=jax.ShapeDtypeStruct((256, 64), jnp.float32),
+        blk=dict(w=jax.ShapeDtypeStruct((2, 64, 128), jnp.float32)))
+    specs = dict(emb=("vocab", "embed"), blk=dict(w=("layers", "embed", "ff")))
+    sh = param_shardings(mesh, abs_params, specs, PARAM_RULES_FSDP)
+    assert set(sh) == {"emb", "blk"}
+    assert sh["emb"].spec == P("model", "data")
+    assert sh["blk"]["w"].spec == P(None, "data", "model")

@@ -1,0 +1,17 @@
+"""Thin shims over :mod:`repro.bench` (one module per paper table/figure).
+
+The implementations live in ``src/repro/bench/sweeps``; these modules only
+keep the historical ``python -m benchmarks.bench_*`` entry points alive.
+Prefer an installed package (``pip install -e .``) or ``PYTHONPATH=src``;
+as a last resort for a bare source checkout, fall back to the sibling
+``src/`` tree so ``python -m benchmarks.run`` works out of the box.
+"""
+import os
+import sys
+
+try:  # installed package or PYTHONPATH=src
+    import repro  # noqa: F401
+except ImportError:  # bare checkout: use the sibling src/ tree
+    _src = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "src")
+    sys.path.insert(0, os.path.abspath(_src))
+    import repro  # noqa: F401

@@ -1,38 +1,10 @@
-"""Paper Fig. 10 + Tables 3/4: burst size effect + buffer (BRAM/VMEM) cost.
-
-TPU analogue: BlockSpec block bytes per DMA.  Measured column uses the
-Pallas stream engine in interpret mode for CORRECTNESS of the block walk and
-XLA for timing; the VMEM column is the paper's BRAM column (grows with
-burst x outstanding while throughput saturates) — the resource-throughput
-tradeoff the paper highlights.
-"""
-import jax
-import jax.numpy as jnp
-
-from benchmarks.common import FAST, emit, header, timeit
-from repro.core.memmodel import predict_bw, vmem_ok
-from repro.core.patterns import Knobs, Pattern
-from repro.kernels import ops, ref
+"""Shim: paper artifact Fig 10 / Tables 3-4 — implementation in repro/bench/sweeps/burst.py."""
+import benchmarks  # noqa: F401  (src-tree fallback for bare checkouts)
+from benchmarks.common import run_shim
 
 
 def main():
-    header("burst size sweep (paper Fig. 10 / Tables 3-4)")
-    rows, cols = (1024, 512) if FAST else (4096, 1024)
-    x = jnp.ones((rows, cols), jnp.float32)
-    nbytes = x.size * 4 * 2
-    fn = jax.jit(ref.stream_copy)
-    wall = timeit(fn, x)  # XLA copy timing is block-independent
-    for block_rows in (2, 4, 8, 16, 32, 64, 128):
-        # correctness of the blocked walk (the Pallas engine)
-        got = ops.stream_copy(x[:256], block_rows=block_rows)
-        assert bool(jnp.all(got == x[:256]))
-        knobs = Knobs(burst_bytes=block_rows * cols * 4, outstanding=2)
-        emit(f"burst_{block_rows}rows", wall * 1e6,
-             burst_bytes=knobs.burst_bytes,
-             gbps_measured=f"{nbytes/wall/1e9:.3f}",
-             gbps_tpu_model=f"{predict_bw(Pattern.SEQUENTIAL, knobs)/1e9:.1f}",
-             vmem_bytes=knobs.vmem_bytes(),
-             fits_vmem=vmem_ok(knobs))
+    run_shim("burst")
 
 
 if __name__ == "__main__":

@@ -1,58 +1,10 @@
-"""Paper Table 10 + §6.1: 11x11 convolution over a 1920x1080 matrix.
-
-Rows mirror the paper's three implementations:
-  cpu       — naive numpy sliding-window (the paper's CPU row)
-  fused     — XLA conv (single wide engine; the paper's 2-channel FPGA row)
-  split     — 16-way row-partitioned conv (the paper's 32-channel row;
-              per-shard dispatch overhead vs parallelism)
-"""
-import numpy as np
-import jax
-import jax.numpy as jnp
-
-from benchmarks.common import FAST, emit, header, timeit
+"""Shim: paper artifact Table 10 — implementation in repro/bench/sweeps/conv.py."""
+import benchmarks  # noqa: F401  (src-tree fallback for bare checkouts)
+from benchmarks.common import run_shim
 
 
 def main():
-    header("convolution 11x11 on 1920x1080 (paper Table 10)")
-    H, W = (480, 270) if FAST else (1080, 1920)
-    K = 11
-    img = np.random.default_rng(0).standard_normal((H, W)).astype(np.float32)
-    ker = np.ones((K, K), np.float32) / (K * K)
-
-    # cpu: naive strided windows (small tile to keep runtime sane)
-    th, tw = (64, 64)
-    tile = img[:th + K - 1, :tw + K - 1]
-    import time
-    t0 = time.perf_counter()
-    out = np.zeros((th, tw), np.float32)
-    for i in range(K):
-        for j in range(K):
-            out += tile[i:i + th, j:j + tw] * ker[i, j]
-    cpu_wall = (time.perf_counter() - t0) * (H * W) / (th * tw)
-    emit("conv_cpu_naive", cpu_wall * 1e6,
-         gflops=f"{2*H*W*K*K/cpu_wall/1e9:.2f}", paper_cpu_s=0.06)
-
-    x = jnp.asarray(img)[None, :, :, None]
-    kk = jnp.asarray(ker)[:, :, None, None]
-    conv = jax.jit(lambda a, b: jax.lax.conv_general_dilated(
-        a, b, (1, 1), "VALID", dimension_numbers=("NHWC", "HWIO", "NHWC")))
-    wall = timeit(conv, x, kk)
-    emit("conv_xla_fused", wall * 1e6,
-         gflops=f"{2*H*W*K*K/wall/1e9:.2f}", paper_fpga2ch_s=2.04,
-         speedup_vs_cpu=f"{cpu_wall/wall:.1f}")
-
-    # split: 16 row-shards, separate dispatches (multi-kernel analogue)
-    shards = jnp.split(jnp.asarray(img), 8, axis=0)
-    pads = [jnp.pad(s, ((0, K - 1), (0, 0)))[None, :, :, None] for s in shards]
-    def run_split():
-        outs = [conv(p, kk) for p in pads]
-        return outs[-1]
-    run_split()
-    wall_s = timeit(run_split)
-    emit("conv_split_16", wall_s * 1e6,
-         gflops=f"{2*H*W*K*K/wall_s/1e9:.2f}", paper_fpga32ch_s=21.0,
-         note="per_shard_dispatch_overhead")
+    run_shim("conv")
 
 
 if __name__ == "__main__":

@@ -1,71 +1,10 @@
-"""Paper Table 9: database access patterns (rs_tra / rr_tra / r_acc / nest).
-
-Framework-level instantiations:
-  rs_tra — repeated sequential weight streaming (epoch re-reads)
-  rr_tra — repeated random traversal (shuffled epochs over the same table)
-  r_acc  — embedding-row gather
-  nest   — interleaved multi-cursor sequential = chunked attention
-"""
-import jax
-import jax.numpy as jnp
-
-from benchmarks.common import FAST, emit, header, timeit
-from repro.core.memmodel import predict_bw
-from repro.core.patterns import ADVICE, Knobs, Pattern
-from repro.kernels import ops, ref
-from repro.models.attention import AttnParams, chunked_attention
+"""Shim: paper artifact Table 9 — implementation in repro/bench/sweeps/database.py."""
+import benchmarks  # noqa: F401  (src-tree fallback for bare checkouts)
+from benchmarks.common import run_shim
 
 
 def main():
-    header("database patterns (paper Table 9)")
-    n, d = (1 << 12, 256) if FAST else (1 << 14, 512)
-    table = jnp.ones((n, d), jnp.float32)
-    nbytes = table.size * 4
-
-    # rs_tra: stream the table repeatedly (3 epochs)
-    fn = jax.jit(lambda t: sum(jnp.sum(t * (i + 1)) for i in range(3)))
-    wall = timeit(fn, table)
-    emit("rs_tra", wall * 1e6,
-         gbps_measured=f"{3*nbytes/wall/1e9:.2f}",
-         gbps_tpu_model=f"{predict_bw(Pattern.RS_TRA, Knobs())/1e9:.1f}",
-         paper_u280_gbps=13.26,
-         advice=ADVICE[Pattern.RS_TRA].knob_moves[0])
-
-    # rr_tra: shuffled traversal each epoch
-    perm = jax.random.permutation(jax.random.PRNGKey(0), n)
-    fn = jax.jit(lambda t, p: jnp.sum(t[p]))
-    wall = timeit(fn, table, perm)
-    emit("rr_tra", wall * 1e6,
-         gbps_measured=f"{nbytes/wall/1e9:.2f}",
-         gbps_tpu_model=f"{predict_bw(Pattern.RR_TRA, Knobs(unit_bytes=d*4))/1e9:.2f}",
-         paper_u280_gbps=3.51,
-         advice=ADVICE[Pattern.RR_TRA].knob_moves[0])
-
-    # r_acc: sparse random row access (small working fraction)
-    idx = ops.lfsr_indices(n // 8, bits=24) % n
-    fn = jax.jit(lambda t, i: t[i])
-    wall = timeit(fn, table, idx)
-    moved = idx.shape[0] * d * 4 * 2
-    emit("r_acc", wall * 1e6,
-         gbps_measured=f"{moved/wall/1e9:.2f}",
-         gbps_tpu_model=f"{predict_bw(Pattern.R_ACC, Knobs(unit_bytes=d*4))/1e9:.2f}",
-         paper_u280_gbps=0.68,
-         advice=ADVICE[Pattern.R_ACC].knob_moves[0])
-
-    # nest: blocked multi-cursor (chunked attention)
-    b, s, h, hd = (1, 512, 4, 64) if FAST else (2, 1024, 8, 64)
-    q = jnp.ones((b, s, h, hd), jnp.float32)
-    k = jnp.ones((b, s, h, hd), jnp.float32)
-    v = jnp.ones((b, s, h, hd), jnp.float32)
-    p = AttnParams(bq=256, bkv=256)
-    fn = jax.jit(lambda *a: chunked_attention(*a, p))
-    wall = timeit(fn, q, k, v)
-    moved = (q.size + 2 * (s // 256) * k.size + q.size) * 4
-    emit("nest", wall * 1e6,
-         gbps_measured=f"{moved/wall/1e9:.2f}",
-         gbps_tpu_model=f"{predict_bw(Pattern.NEST, Knobs())/1e9:.1f}",
-         paper_u280_gbps=421.89,
-         advice=ADVICE[Pattern.NEST].knob_moves[0])
+    run_shim("database")
 
 
 if __name__ == "__main__":

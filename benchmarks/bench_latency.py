@@ -1,43 +1,10 @@
-"""Paper Table 2 (latency per channel) + Fig. 6 (latency vs stride).
-
-TPU analogue: pointer-chase ns/hop per HBM address region (channel analogue)
-and vs chain stride.  Measured = XLA:CPU chase; model = T_l (memmodel).
-"""
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from benchmarks.common import FAST, emit, header, timeit
-from repro.core.memmodel import V5E
-from repro.kernels import ops, ref
-
-
-def _strided_chain(n, stride):
-    """next = (cur + stride) mod n; full cycle when gcd(stride, n) == 1."""
-    idx = (np.arange(n) + stride) % n
-    return jnp.asarray(idx, jnp.int32)[:, None]
+"""Shim: paper artifact Table 2 / Fig 6 — implementation in repro/bench/sweeps/latency.py."""
+import benchmarks  # noqa: F401  (src-tree fallback for bare checkouts)
+from benchmarks.common import run_shim
 
 
 def main():
-    header("latency: per-region chase (paper Table 2)")
-    steps = 1 << (10 if FAST else 13)
-    n = 1 << (12 if FAST else 15)
-    for region in range(4 if FAST else 8):
-        table = ops.make_chain(n, seed=region)
-        fn = jax.jit(lambda t: ref.pointer_chase(t, steps))
-        wall = timeit(fn, table)
-        emit(f"latency_region_{region}", wall * 1e6,
-             ns_per_hop=f"{wall/steps*1e9:.1f}",
-             t_l_model_ns=f"{V5E.dma_latency_s*1e9:.0f}")
-
-    header("latency vs stride (paper Fig. 6)")
-    for stride in (1, 2, 3, 4, 8, 9, 10, 18):
-        table = _strided_chain(n, stride) if np.gcd(stride, n) == 1 else \
-            _strided_chain(n + 1, stride)
-        fn = jax.jit(lambda t: ref.pointer_chase(t, steps))
-        wall = timeit(fn, table)
-        emit(f"latency_stride_{stride}", wall * 1e6,
-             ns_per_hop=f"{wall/steps*1e9:.1f}")
+    run_shim("latency")
 
 
 if __name__ == "__main__":

@@ -1,35 +1,10 @@
-"""Paper Table 6: number of kernels vs throughput.
-
-TPU analogue: split one stream over k separately-dispatched programs.  Fewer,
-wider engines win (dispatch overhead + lost fusion) — same conclusion as the
-paper's 1-2 kernel sweet spot.
-"""
-import jax
-import jax.numpy as jnp
-
-from benchmarks.common import FAST, emit, header, timeit
-from repro.kernels import ref
+"""Shim: paper artifact Table 6 — implementation in repro/bench/sweeps/num_kernels.py."""
+import benchmarks  # noqa: F401  (src-tree fallback for bare checkouts)
+from benchmarks.common import run_shim
 
 
 def main():
-    header("number of kernels (paper Table 6)")
-    rows, cols = (2048, 512) if FAST else (8192, 1024)
-    x = jnp.ones((rows, cols), jnp.float32)
-    nbytes = x.size * 4 * 2
-    for k in (1, 2, 4, 8, 16, 32):
-        parts = jnp.split(x, k, axis=0)
-        fns = [jax.jit(ref.stream_copy) for _ in range(k)]
-        for f, p in zip(fns, parts):
-            f(p).block_until_ready()  # warm
-
-        def run():
-            outs = [f(p) for f, p in zip(fns, parts)]
-            return outs[-1]
-
-        wall = timeit(run)
-        emit(f"kernels_{k}", wall * 1e6,
-             gbps_measured=f"{nbytes/wall/1e9:.3f}",
-             note="fewer_wider_engines_win")
+    run_shim("num_kernels")
 
 
 if __name__ == "__main__":

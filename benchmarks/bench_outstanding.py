@@ -1,54 +1,10 @@
-"""Paper Fig. 5 + Table 5: effect of outstanding transactions.
-
-TPU analogue: requests in flight = independent chase chains serviced in
-parallel (vmap) — per-chain latency is constant, so aggregate hops/s scale
-with the in-flight count until the bandwidth knee.  The model column gives
-the v5e knee NO* = ceil(T_l * BW / burst) (Eq. 4); the VMEM column is the
-paper's BRAM-consumption column.
-"""
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from benchmarks.common import FAST, emit, header, timeit
-from repro.core.memmodel import V5E, min_outstanding_for_peak, predict_bw
-from repro.core.patterns import Knobs, Pattern
-from repro.kernels import ops
-
-
-def _multi_chase(tables, steps):
-    flat = tables[:, :, 0]
-
-    def one(tbl):
-        def body(addr, _):
-            nxt = tbl[addr]
-            return nxt, nxt
-        _, tr = jax.lax.scan(body, jnp.int32(0), None, length=steps)
-        return tr
-
-    return jax.vmap(one)(flat)
+"""Shim: paper artifact Fig 5 / Table 5 — implementation in repro/bench/sweeps/outstanding.py."""
+import benchmarks  # noqa: F401  (src-tree fallback for bare checkouts)
+from benchmarks.common import run_shim
 
 
 def main():
-    header("outstanding transactions (paper Fig. 5 / Table 5)")
-    n = 1 << (10 if FAST else 13)
-    steps = 1 << (9 if FAST else 12)
-    base = None
-    for no in (1, 2, 4, 8, 16, 32, 64):
-        tables = jnp.stack([ops.make_chain(n, seed=i) for i in range(no)])
-        fn = jax.jit(lambda t: _multi_chase(t, steps))
-        wall = timeit(fn, tables)
-        hops_s = no * steps / wall
-        base = base or hops_s
-        knobs = Knobs(burst_bytes=64 * 1024, outstanding=no)
-        emit(f"outstanding_{no}", wall * 1e6,
-             hops_per_s=f"{hops_s:.2e}",
-             speedup_vs_1=f"{hops_s/base:.2f}",
-             tpu_model_gbps=f"{predict_bw(Pattern.SEQUENTIAL, knobs)/1e9:.1f}",
-             vmem_bytes=knobs.vmem_bytes())
-    emit("outstanding_knee_model", 0.0,
-         no_star_64kb=min_outstanding_for_peak(64 * 1024),
-         no_star_1mb=min_outstanding_for_peak(1 << 20))
+    run_shim("outstanding")
 
 
 if __name__ == "__main__":

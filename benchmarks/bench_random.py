@@ -1,47 +1,10 @@
-"""Paper Tables 7/8: random access (LFSR + pointer-chase) vs sequential.
-
-The paper's headline ordering — sequential 421 GB/s >> LFSR-random 5.8 GB/s
->> pointer-chase 0.99 GB/s — is the ratio structure we reproduce (measured on
-this host + modeled on v5e).
-"""
-from benchmarks.common import FAST, emit, header
-from repro.core import engines
+"""Shim: paper artifact Tables 7-8 — implementation in repro/bench/sweeps/random_access.py."""
+import benchmarks  # noqa: F401  (src-tree fallback for bare checkouts)
+from benchmarks.common import run_shim
 
 
 def main():
-    header("random vs sequential (paper Tables 7/8)")
-    # working sets must exceed the host LLC or 'random' hits cache and the
-    # paper's ordering inverts (an instance of its own page-hit effect!)
-    seq = engines.bw_sequential(rows=4096 if FAST else 16384, cols=1024)
-    emit("seq", seq.wall_s * 1e6,
-         gbps_measured=f"{seq.gbps_measured:.2f}",
-         gbps_tpu_model=f"{seq.gbps_tpu_model:.1f}",
-         paper_u280_gbps=421.68)
-    for gen in ("lfsr", "prng"):
-        # one-cache-line rows (64B ~ the paper's 256-bit units) from a
-        # table larger than LLC: each touch pays the latency, not the burst
-        r = engines.bw_random(n_rows=1 << (17 if FAST else 20), cols=16,
-                              n_idx=1 << (13 if FAST else 16), generator=gen)
-        emit(f"random_{gen}", r.wall_s * 1e6,
-             gbps_measured=f"{r.gbps_measured:.3f}",
-             gbps_tpu_model=f"{r.gbps_tpu_model:.2f}",
-             paper_u280_gbps=5.82)
-    chase = engines.latency_chase(n_entries=1 << (20 if FAST else 22),
-                                  steps=1 << 13)
-    emit("random_pointer_chase", chase.wall_s * 1e6,
-         gbps_measured=f"{chase.gbps_measured:.4f}",
-         gbps_tpu_model=f"{chase.gbps_tpu_model:.4f}",
-         paper_u280_gbps=0.994)
-    # paper's ratio claim: seq >> random >> chase.  The chase relations are
-    # host-independent (serialized loads cannot be hidden anywhere); the
-    # seq-vs-random gap needs real DRAM behaviour — virtualized hosts with a
-    # low streaming ceiling can flatten it, so it is reported, not asserted.
-    hard = (seq.gbps_measured > chase.gbps_measured
-            and r.gbps_measured > chase.gbps_measured)
-    emit("ordering_check", 0.0, chase_slowest=hard,
-         seq_over_random=f"{seq.gbps_measured/r.gbps_measured:.2f}x",
-         v5e_model_seq_over_random=f"{seq.gbps_tpu_model/r.gbps_tpu_model:.0f}x")
-    assert hard, "pointer chase must be slowest everywhere"
+    run_shim("random")
 
 
 if __name__ == "__main__":

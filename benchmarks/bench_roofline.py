@@ -1,55 +1,10 @@
-"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
-
-Reads runs/dryrun.json (written by repro.launch.dryrun --all --roofline) and
-prints one CSV row per (arch x shape) cell with the three terms, dominant
-bottleneck, and MODEL_FLOPS/HLO_FLOPs ratio.  Does not compile anything.
-"""
-import json
-import os
-
-from benchmarks.common import emit, header
-
-_RUNS_DIR = os.path.join(os.path.dirname(__file__), "..", "runs")
-_DEFAULT = (os.path.join(_RUNS_DIR, "dryrun_opt.json")
-            if os.path.exists(os.path.join(_RUNS_DIR, "dryrun_opt.json"))
-            else os.path.join(_RUNS_DIR, "dryrun.json"))
-RUNS = os.environ.get("DRYRUN_JSON", _DEFAULT)
+"""Shim: paper artifact EXPERIMENTS §Roofline — implementation in repro/bench/sweeps/roofline.py."""
+import benchmarks  # noqa: F401  (src-tree fallback for bare checkouts)
+from benchmarks.common import run_shim
 
 
 def main():
-    header(f"roofline terms per (arch x shape) — from {os.path.basename(RUNS)}")
-    if not os.path.exists(RUNS):
-        emit("roofline_missing", 0.0,
-             note=f"run 'python -m repro.launch.dryrun --all --roofline --out {RUNS}' first")
-        return
-    with open(RUNS) as f:
-        records = json.load(f)
-    for r in sorted(records, key=lambda r: (r["arch"], r["shape"])):
-        name = f"roofline_{r['arch']}_{r['shape']}"
-        if r.get("status") == "skip":
-            emit(name, 0.0, status="skip", reason=r.get("reason", ""))
-            continue
-        if r.get("status") != "ok" or "roofline" not in r:
-            emit(name, 0.0, status=r.get("status", "missing"))
-            continue
-        rf = r["roofline"]
-        sp = r.get("meshes", {}).get("single_pod", {})
-        mp = r.get("meshes", {}).get("multi_pod", {})
-        c, m, co = rf["compute_s"], rf["memory_s"], rf["collective_s"]
-        ideal = c * rf["useful_ratio"]
-        m_k = m - rf.get("bytes_flash_inner", 0.0) / 819e9
-        emit(name, rf["compute_s"] * 1e6,
-             compute_ms=f"{c*1e3:.2f}",
-             memory_ms=f"{m*1e3:.2f}",
-             collective_ms=f"{co*1e3:.2f}",
-             dominant=rf["dominant"],
-             useful_flops_ratio=f"{rf['useful_ratio']:.3f}",
-             frac=f"{ideal/max(c,m,co):.3f}" if max(c, m, co) else "0",
-             frac_serial=f"{ideal/(c+m+co):.3f}" if (c + m + co) else "0",
-             frac_kernel=f"{ideal/max(c,m_k,co):.3f}" if max(c, m_k, co) else "0",
-             peak_gib_per_dev=sp.get("peak_gib", ""),
-             fits_16g_1pod=sp.get("peak_gib", 99) < 16.0,
-             fits_16g_2pod=mp.get("peak_gib", 99) < 16.0)
+    run_shim("roofline")
 
 
 if __name__ == "__main__":

@@ -1,41 +1,10 @@
-"""Paper Figs. 8/9: throughput vs stride (Loop + Dataflow engines).
-
-Loop analogue = XLA-fused strided traversal; Dataflow analogue = explicit
-index-vector gather (address generation decoupled from access, like the
-paper's FIFO-linked dataflow kernel).
-"""
-import jax
-import jax.numpy as jnp
-
-from benchmarks.common import FAST, emit, header, timeit
-from repro.core.memmodel import predict_bw
-from repro.core.patterns import Knobs, Pattern
-from repro.kernels import ref
+"""Shim: paper artifact Figs 8-9 — implementation in repro/bench/sweeps/stride.py."""
+import benchmarks  # noqa: F401  (src-tree fallback for bare checkouts)
+from benchmarks.common import run_shim
 
 
 def main():
-    header("stride sweep (paper Figs. 8/9)")
-    rows, cols = (2048, 256) if FAST else (8192, 512)
-    x = jnp.ones((rows, cols), jnp.float32)
-    nbytes = x.size * 4 * 2
-    for stride in (1, 2, 4, 8, 16, 32):
-        # Loop engine (fused traversal)
-        fn = jax.jit(lambda a, s=stride: ref.strided_copy(a, block_rows=8,
-                                                          stride=s))
-        wall = timeit(fn, x)
-        # Dataflow engine (explicit address vector -> gather)
-        idx = (jnp.arange(rows // 8) * stride) % (rows // 8)
-        xf = x.reshape(rows // 8, 8 * cols)
-        fn2 = jax.jit(lambda a, i: a[i])
-        wall2 = timeit(fn2, xf, idx)
-        model = predict_bw(Pattern.STRIDED,
-                           Knobs(unit_bytes=8 * cols * 4, stride=stride))
-        emit(f"stride_{stride}_loop", wall * 1e6,
-             gbps_measured=f"{nbytes/wall/1e9:.3f}",
-             gbps_tpu_model=f"{model/1e9:.3f}")
-        emit(f"stride_{stride}_dataflow", wall2 * 1e6,
-             gbps_measured=f"{nbytes/wall2/1e9:.3f}",
-             gbps_tpu_model=f"{model/1e9:.3f}")
+    run_shim("stride")
 
 
 if __name__ == "__main__":

@@ -1,31 +1,10 @@
-"""Paper Fig. 7: throughput vs unit size (transaction width).
-
-TPU analogue: random row gather with growing row bytes — the paper's claim
-(throughput ~ linear in unit size until the bandwidth roof) reproduces on
-both the measured CPU engine and the analytic v5e model.
-"""
-import jax.numpy as jnp
-
-from benchmarks.common import FAST, emit, header
-from repro.core import engines
+"""Shim: paper artifact Fig 7 — implementation in repro/bench/sweeps/unit_size.py."""
+import benchmarks  # noqa: F401  (src-tree fallback for bare checkouts)
+from benchmarks.common import run_shim
 
 
 def main():
-    header("unit size sweep (paper Fig. 7)")
-    units = (4, 16, 64, 256, 1024) if FAST else (4, 16, 64, 256, 1024, 4096)
-    for u in units:
-        r = engines.bw_random(n_rows=1 << 12, cols=max(1, u // 4),
-                              n_idx=1 << 12)
-        emit(f"unit_{u}B", r.wall_s * 1e6,
-             gbps_measured=f"{r.gbps_measured:.3f}",
-             gbps_tpu_model=f"{r.gbps_tpu_model:.3f}")
-    # dtype variant of unit size (int8 vs bf16 vs f32 rows)
-    for dt, tag in ((jnp.int8, "s8"), (jnp.bfloat16, "bf16"),
-                    (jnp.float32, "f32")):
-        r = engines.bw_sequential(rows=2048, cols=1024, dtype=dt)
-        emit(f"unit_dtype_{tag}", r.wall_s * 1e6,
-             gbps_measured=f"{r.gbps_measured:.3f}",
-             gbps_tpu_model=f"{r.gbps_tpu_model:.3f}")
+    run_shim("unit_size")
 
 
 if __name__ == "__main__":

@@ -1,13 +1,24 @@
-"""Shared benchmark plumbing: ``name,us_per_call,derived`` CSV rows."""
+"""Shared benchmark plumbing for ad-hoc scripts.
+
+The structured path is :mod:`repro.bench` (registry + JSON persistence);
+what remains here is the minimal stdout-CSV toolkit for one-off probes plus
+the shim used by the ``benchmarks.bench_*`` entry points.
+"""
 import os
-import sys
 import time
+from typing import NamedTuple
 
 import jax
 
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
-
 FAST = bool(int(os.environ.get("BENCH_FAST", "0")))
+
+
+class Timing(NamedTuple):
+    """(best, mean, trials) — keep the spread visible, not just the best."""
+
+    best: float
+    mean: float
+    trials: int
 
 
 def emit(name: str, us: float, **derived):
@@ -15,16 +26,27 @@ def emit(name: str, us: float, **derived):
     print(f"{name},{us:.2f},{d}", flush=True)
 
 
-def timeit(fn, *args, trials: int = 3, warmup: int = 1) -> float:
+def timeit(fn, *args, trials: int = 3, warmup: int = 1) -> Timing:
+    """Wall-clock ``fn(*args)``: returns (best, mean, trials) seconds."""
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
-    best = float("inf")
+    walls = []
     for _ in range(trials):
         t0 = time.perf_counter()
         jax.block_until_ready(fn(*args))
-        best = min(best, time.perf_counter() - t0)
-    return best
+        walls.append(time.perf_counter() - t0)
+    return Timing(best=min(walls), mean=sum(walls) / len(walls),
+                  trials=trials)
 
 
 def header(title: str):
     print(f"# --- {title} ---", flush=True)
+
+
+def run_shim(sweep: str) -> None:
+    """Run one registered sweep, echoing the legacy CSV (no persistence)."""
+    from repro.bench import run_sweeps
+
+    run = run_sweeps(names=[sweep], out_dir=None)
+    if run.failures:
+        raise SystemExit(1)

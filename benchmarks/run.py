@@ -1,43 +1,28 @@
-"""Benchmark harness: one module per paper table/figure.
+"""Benchmark harness: one registered sweep per paper table/figure.
 
-``PYTHONPATH=src python -m benchmarks.run``          (full)
+``PYTHONPATH=src python -m benchmarks.run``               (full)
 ``BENCH_FAST=1 PYTHONPATH=src python -m benchmarks.run``  (CI-scale)
 
-Every row prints ``name,us_per_call,derived`` CSV.
+Thin shim over :mod:`repro.bench`: runs every registered sweep, echoes the
+legacy ``name,us_per_call,derived`` CSV, and persists the structured run as
+``runs/BENCH_<timestamp>.json`` (compare two runs with
+``python -m repro.bench.compare``).
 """
 import sys
-import traceback
 
-from benchmarks import (bench_burst, bench_conv, bench_database,
-                        bench_latency, bench_num_kernels, bench_outstanding,
-                        bench_random, bench_roofline, bench_stride,
-                        bench_unit_size)
-
-MODULES = [
-    ("latency (Table 2 / Fig 6)", bench_latency),
-    ("outstanding (Fig 5 / Table 5)", bench_outstanding),
-    ("unit size (Fig 7)", bench_unit_size),
-    ("stride (Figs 8-9)", bench_stride),
-    ("burst (Fig 10 / Tables 3-4)", bench_burst),
-    ("num kernels (Table 6)", bench_num_kernels),
-    ("random (Tables 7-8)", bench_random),
-    ("database (Table 9)", bench_database),
-    ("convolution (Table 10)", bench_conv),
-    ("roofline (EXPERIMENTS §Roofline)", bench_roofline),
-]
+import benchmarks  # noqa: F401  (src-tree fallback for bare checkouts)
 
 
 def main() -> None:
+    from repro.bench import run_sweeps
+
     print("name,us_per_call,derived")
-    failures = 0
-    for title, mod in MODULES:
-        try:
-            mod.main()
-        except Exception:  # noqa: BLE001
-            failures += 1
-            print(f"# FAILED {title}", flush=True)
-            traceback.print_exc()
-    if failures:
+    run = run_sweeps(out_dir="runs")
+    if "path" in run.env:
+        print(f"# wrote {run.env['path']}", flush=True)
+    if run.failures:
+        print(f"# {len(run.failures)} sweep(s) FAILED: "
+              f"{sorted(run.failures)}", file=sys.stderr)
         sys.exit(1)
 
 

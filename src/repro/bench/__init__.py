@@ -1,0 +1,27 @@
+"""Structured benchmark subsystem (the paper's measurement campaign).
+
+- :mod:`repro.bench.schema` — ``BenchResult``/``BenchRun`` + JSON persistence
+- :mod:`repro.bench.registry` — sweep registry + :func:`run_sweeps` runner
+- :mod:`repro.bench.sweeps` — the ten registered sweeps (paper tables/figures)
+- :mod:`repro.bench.compare` — regression comparator over two saved runs
+- :mod:`repro.bench.calibrate` — measured mode: fit the memmodel constants
+
+CLI: ``PYTHONPATH=src python -m repro.bench [--fast] [--out runs]``.
+"""
+from repro.bench.calibrate import (CalibrationResult, CalibSample,  # noqa: F401
+                                   calibrate, fit_spec, samples_from_run,
+                                   synthetic_samples)
+from repro.bench.compare import CompareReport, compare_runs  # noqa: F401
+from repro.bench.registry import (ORDER, REGISTRY, SweepContext,  # noqa: F401
+                                  register, run_sweeps)
+from repro.bench.schema import (BenchResult, BenchRun, Timing,  # noqa: F401
+                                env_fingerprint)
+from repro.bench import sweeps as _sweeps  # noqa: F401  (populate REGISTRY)
+
+__all__ = [
+    "BenchResult", "BenchRun", "Timing", "env_fingerprint",
+    "REGISTRY", "ORDER", "SweepContext", "register", "run_sweeps",
+    "CompareReport", "compare_runs",
+    "CalibrationResult", "CalibSample", "calibrate", "fit_spec",
+    "samples_from_run", "synthetic_samples",
+]

@@ -1,0 +1,49 @@
+"""CLI: run the registered sweeps, persist BENCH_<timestamp>.json.
+
+  PYTHONPATH=src python -m repro.bench                  # full campaign
+  PYTHONPATH=src python -m repro.bench --fast           # CI scale
+  PYTHONPATH=src python -m repro.bench --sweeps latency,stride
+  PYTHONPATH=src python -m repro.bench --calibrate      # measured mode
+"""
+import argparse
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--sweeps", default="",
+                    help="comma-separated subset (default: all)")
+    ap.add_argument("--fast", action="store_true",
+                    help="CI-scale problem sizes (same as BENCH_FAST=1)")
+    ap.add_argument("--out", default="runs",
+                    help="directory for BENCH_<timestamp>.json ('' = no file)")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="fit memmodel constants to this host first and "
+                         "attach the calibration record to the run")
+    args = ap.parse_args(argv)
+
+    from repro.bench import calibrate, run_sweeps
+
+    calibration = None
+    if args.calibrate:
+        cal = calibrate(fast=args.fast)
+        calibration = cal.to_dict()
+        print(f"# calibrated: T_l={cal.spec.dma_latency_s*1e9:.1f}ns "
+              f"BW={cal.spec.hbm_bw/1e9:.2f}GB/s "
+              f"(rms log err {cal.rms_log_error:.3f})", flush=True)
+
+    names = [s for s in args.sweeps.split(",") if s] or None
+    print("name,us_per_call,derived")
+    run = run_sweeps(names=names, fast=args.fast or None,
+                     out_dir=args.out or None, calibration=calibration)
+    if "path" in run.env:
+        print(f"# wrote {run.env['path']}", flush=True)
+    if run.failures:
+        print(f"# {len(run.failures)} sweep(s) FAILED: "
+              f"{sorted(run.failures)}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,146 @@
+"""Diff two persisted bench runs and flag regressions beyond noise.
+
+Matching is by row ``name``.  The primary metric is ``gbps_measured``
+(higher is better); rows with no bandwidth fall back to ``us_per_call``
+(lower is better).  The noise threshold is the comparator's floor; each
+row's own recorded timing spread (``Timing.noise``) widens it further, so a
+jittery row must move more than a steady one before it counts.
+
+CLI:
+  python -m repro.bench.compare runs/BENCH_a.json runs/BENCH_b.json
+  (exit 1 when any regression verdict is produced)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+from repro.bench.schema import BenchResult, BenchRun
+
+REGRESSION = "regression"
+IMPROVEMENT = "improvement"
+UNCHANGED = "unchanged"
+ADDED = "added"
+REMOVED = "removed"
+
+
+@dataclass
+class RowDiff:
+    name: str
+    verdict: str
+    metric: str = ""
+    old: float = 0.0
+    new: float = 0.0
+    rel_change: float = 0.0  # signed; positive = better
+    threshold: float = 0.0
+
+
+@dataclass
+class CompareReport:
+    rows: List[RowDiff] = field(default_factory=list)
+    noise_threshold: float = 0.15
+
+    @property
+    def regressions(self) -> List[RowDiff]:
+        return [r for r in self.rows if r.verdict == REGRESSION]
+
+    @property
+    def improvements(self) -> List[RowDiff]:
+        return [r for r in self.rows if r.verdict == IMPROVEMENT]
+
+    def verdicts(self) -> Dict[str, str]:
+        return {r.name: r.verdict for r in self.rows}
+
+    def render(self) -> str:
+        lines = [f"{'name':40s} {'verdict':12s} {'metric':14s} "
+                 f"{'old':>12s} {'new':>12s} {'change':>8s}"]
+        for r in sorted(self.rows, key=lambda r: (r.verdict, r.name)):
+            if r.verdict in (ADDED, REMOVED):
+                lines.append(f"{r.name:40s} {r.verdict:12s}")
+                continue
+            lines.append(
+                f"{r.name:40s} {r.verdict:12s} {r.metric:14s} "
+                f"{r.old:12.3f} {r.new:12.3f} {r.rel_change:+7.1%}")
+        n_reg = len(self.regressions)
+        lines.append(f"# {len(self.rows)} rows compared, "
+                     f"{n_reg} regression(s), "
+                     f"{len(self.improvements)} improvement(s), "
+                     f"noise floor {self.noise_threshold:.0%}")
+        return "\n".join(lines)
+
+
+def _row_threshold(old: BenchResult, new: BenchResult, floor: float) -> float:
+    """Noise floor widened by the rows' own recorded trial spread."""
+    spread = 0.0
+    for r in (old, new):
+        if r.timing is not None:
+            spread = max(spread, r.timing.noise)
+    return floor + spread
+
+
+def _diff_row(old: BenchResult, new: BenchResult, floor: float) -> RowDiff:
+    thresh = _row_threshold(old, new, floor)
+    if old.gbps_measured > 0 and new.gbps_measured <= 0:
+        # the primary metric vanished — that IS a regression, never let it
+        # fall through to the wall-clock comparison
+        return RowDiff(name=old.name, verdict=REGRESSION,
+                       metric="gbps_measured", old=old.gbps_measured,
+                       new=0.0, rel_change=-1.0, threshold=thresh)
+    if old.gbps_measured <= 0 and new.gbps_measured > 0:
+        return RowDiff(name=old.name, verdict=IMPROVEMENT,
+                       metric="gbps_measured", old=0.0,
+                       new=new.gbps_measured, rel_change=1.0,
+                       threshold=thresh)
+    if old.gbps_measured > 0 and new.gbps_measured > 0:
+        metric, o, n = "gbps_measured", old.gbps_measured, new.gbps_measured
+        rel = (n - o) / o  # positive = faster
+    elif old.us_per_call > 0 and new.us_per_call > 0:
+        metric, o, n = "us_per_call", old.us_per_call, new.us_per_call
+        rel = (o - n) / o  # lower is better -> positive = faster
+    else:
+        return RowDiff(name=old.name, verdict=UNCHANGED, metric="none",
+                       threshold=thresh)
+    if rel < -thresh:
+        verdict = REGRESSION
+    elif rel > thresh:
+        verdict = IMPROVEMENT
+    else:
+        verdict = UNCHANGED
+    return RowDiff(name=old.name, verdict=verdict, metric=metric, old=o,
+                   new=n, rel_change=rel, threshold=thresh)
+
+
+def compare_runs(old: BenchRun, new: BenchRun,
+                 noise_threshold: float = 0.15) -> CompareReport:
+    """Row-by-row diff; verdicts: regression / improvement / unchanged /
+    added / removed."""
+    report = CompareReport(noise_threshold=noise_threshold)
+    old_by, new_by = old.by_name(), new.by_name()
+    for name, o in old_by.items():
+        if name in new_by:
+            report.rows.append(_diff_row(o, new_by[name], noise_threshold))
+        else:
+            report.rows.append(RowDiff(name=name, verdict=REMOVED))
+    for name in new_by:
+        if name not in old_by:
+            report.rows.append(RowDiff(name=name, verdict=ADDED))
+    return report
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("old", help="baseline BENCH_*.json")
+    ap.add_argument("new", help="candidate BENCH_*.json")
+    ap.add_argument("--threshold", type=float, default=0.15,
+                    help="relative noise floor (default 0.15)")
+    args = ap.parse_args(argv)
+    report = compare_runs(BenchRun.load(args.old), BenchRun.load(args.new),
+                          noise_threshold=args.threshold)
+    print(report.render())
+    return 1 if report.regressions else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,16 @@
+"""The ten registered sweeps — one module per paper table/figure.
+
+Importing this package populates :data:`repro.bench.registry.REGISTRY` in
+the paper's presentation order.  ``benchmarks/bench_*.py`` are thin shims
+over these modules; the implementations live here so library users can run
+any sweep programmatically via :func:`repro.bench.run_sweeps`.
+"""
+from repro.bench.sweeps import (  # noqa: F401  (import order == run order)
+    latency, outstanding, unit_size, stride, burst, num_kernels,
+    random_access, database, conv, roofline,
+)
+
+__all__ = [
+    "latency", "outstanding", "unit_size", "stride", "burst", "num_kernels",
+    "random_access", "database", "conv", "roofline",
+]

@@ -1,0 +1,34 @@
+"""Paper Fig. 10 + Tables 3/4: burst size effect + buffer (BRAM/VMEM) cost.
+
+TPU analogue: BlockSpec block bytes per DMA.  Measured column uses the
+Pallas stream engine in interpret mode for CORRECTNESS of the block walk and
+XLA for timing; the VMEM column is the paper's BRAM column (grows with
+burst x outstanding while throughput saturates) — the resource-throughput
+tradeoff the paper highlights.
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.bench.registry import SweepContext, register
+from repro.core.memmodel import vmem_ok
+from repro.core.patterns import Knobs, Pattern
+from repro.kernels import ops, ref
+
+
+@register("burst", "Fig 10 / Tables 3-4")
+def run(ctx: SweepContext) -> None:
+    rows, cols = (1024, 512) if ctx.fast else (4096, 1024)
+    x = jnp.ones((rows, cols), jnp.float32)
+    nbytes = x.size * 4 * 2
+    fn = jax.jit(ref.stream_copy)
+    t = ctx.timeit(fn, x)  # XLA copy timing is block-independent
+    for block_rows in (2, 4, 8, 16, 32, 64, 128):
+        # correctness of the blocked walk (the Pallas engine)
+        got = ops.stream_copy(x[:256], block_rows=block_rows)
+        assert bool(jnp.all(got == x[:256]))
+        knobs = Knobs(burst_bytes=block_rows * cols * 4, outstanding=2)
+        ctx.emit(f"burst_{block_rows}rows", pattern=Pattern.SEQUENTIAL,
+                 knobs=knobs, timing=t, bytes_moved=nbytes,
+                 burst_bytes=knobs.burst_bytes,
+                 vmem_bytes=knobs.vmem_bytes(),
+                 fits_vmem=vmem_ok(knobs, ctx.spec))

@@ -1,0 +1,73 @@
+"""Paper Table 10 + §6.1: 11x11 convolution over a 1920x1080 matrix.
+
+Rows mirror the paper's three implementations:
+  cpu       — naive numpy sliding-window (the paper's CPU row)
+  fused     — XLA conv (single wide engine; the paper's 2-channel FPGA row)
+  split     — row-partitioned conv (the paper's 32-channel row;
+              per-shard dispatch overhead vs parallelism)
+
+Bandwidth columns count input read + output write once per pass — an
+*effective* streaming bandwidth, so the conv rows calibrate against the
+sequential model like every other sweep.
+"""
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.bench.registry import SweepContext, register
+from repro.bench.schema import Timing
+from repro.core.patterns import Knobs, Pattern
+
+
+@register("conv", "Table 10")
+def run(ctx: SweepContext) -> None:
+    H, W = (480, 270) if ctx.fast else (1080, 1920)
+    K = 11
+    img = np.random.default_rng(0).standard_normal((H, W)).astype(np.float32)
+    ker = np.ones((K, K), np.float32) / (K * K)
+    out_hw = (H - K + 1) * (W - K + 1)
+    nbytes = (H * W + out_hw) * 4  # read image once + write result once
+    flops = 2 * H * W * K * K
+
+    # cpu: naive strided windows (small tile to keep runtime sane)
+    th, tw = (64, 64)
+    tile = img[:th + K - 1, :tw + K - 1]
+    t0 = time.perf_counter()
+    out = np.zeros((th, tw), np.float32)
+    for i in range(K):
+        for j in range(K):
+            out += tile[i:i + th, j:j + tw] * ker[i, j]
+    cpu_wall = (time.perf_counter() - t0) * (H * W) / (th * tw)
+    ctx.emit("conv_cpu_naive", pattern=Pattern.STRIDED,
+             knobs=Knobs(unit_bytes=tw * 4, stride=K),
+             timing=Timing(best_s=cpu_wall, mean_s=cpu_wall, trials=1),
+             bytes_moved=nbytes,
+             gflops=f"{flops/cpu_wall/1e9:.2f}", paper_cpu_s=0.06)
+
+    x = jnp.asarray(img)[None, :, :, None]
+    kk = jnp.asarray(ker)[:, :, None, None]
+    conv_fn = jax.jit(lambda a, b: jax.lax.conv_general_dilated(
+        a, b, (1, 1), "VALID", dimension_numbers=("NHWC", "HWIO", "NHWC")))
+    t = ctx.timeit(conv_fn, x, kk)
+    ctx.emit("conv_xla_fused", pattern=Pattern.SEQUENTIAL,
+             knobs=Knobs(burst_bytes=W * 4 * 8), timing=t, bytes_moved=nbytes,
+             gflops=f"{flops/t.best_s/1e9:.2f}", paper_fpga2ch_s=2.04,
+             speedup_vs_cpu=f"{cpu_wall/t.best_s:.1f}")
+
+    # split: row-shards, separate dispatches (multi-kernel analogue)
+    shards = jnp.split(jnp.asarray(img), 8, axis=0)
+    pads = [jnp.pad(s, ((0, K - 1), (0, 0)))[None, :, :, None] for s in shards]
+
+    def run_split():
+        outs = [conv_fn(p, kk) for p in pads]
+        return outs[-1]
+
+    run_split()
+    t = ctx.timeit(run_split)
+    ctx.emit("conv_split_16", pattern=Pattern.SEQUENTIAL,
+             knobs=Knobs(burst_bytes=W * 4 * 8, engines=8), timing=t,
+             bytes_moved=nbytes,
+             gflops=f"{flops/t.best_s/1e9:.2f}", paper_fpga32ch_s=21.0,
+             note="per_shard_dispatch_overhead")

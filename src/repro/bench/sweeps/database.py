@@ -1,0 +1,62 @@
+"""Paper Table 9: database access patterns (rs_tra / rr_tra / r_acc / nest).
+
+Framework-level instantiations:
+  rs_tra — repeated sequential weight streaming (epoch re-reads)
+  rr_tra — repeated random traversal (shuffled epochs over the same table)
+  r_acc  — embedding-row gather
+  nest   — interleaved multi-cursor sequential = chunked attention
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.bench.registry import SweepContext, register
+from repro.core.patterns import ADVICE, Knobs, Pattern
+from repro.kernels import ops
+from repro.models.attention import AttnParams, chunked_attention
+
+
+@register("database", "Table 9")
+def run(ctx: SweepContext) -> None:
+    n, d = (1 << 12, 256) if ctx.fast else (1 << 14, 512)
+    table = jnp.ones((n, d), jnp.float32)
+    nbytes = table.size * 4
+
+    # rs_tra: stream the table repeatedly (3 epochs)
+    fn = jax.jit(lambda t: sum(jnp.sum(t * (i + 1)) for i in range(3)))
+    t = ctx.timeit(fn, table)
+    ctx.emit("rs_tra", pattern=Pattern.RS_TRA, knobs=Knobs(),
+             timing=t, bytes_moved=3 * nbytes,
+             paper_u280_gbps=13.26,
+             advice=ADVICE[Pattern.RS_TRA].knob_moves[0])
+
+    # rr_tra: shuffled traversal each epoch
+    perm = jax.random.permutation(jax.random.PRNGKey(0), n)
+    fn = jax.jit(lambda t, p: jnp.sum(t[p]))
+    t = ctx.timeit(fn, table, perm)
+    ctx.emit("rr_tra", pattern=Pattern.RR_TRA, knobs=Knobs(unit_bytes=d * 4),
+             timing=t, bytes_moved=nbytes,
+             paper_u280_gbps=3.51,
+             advice=ADVICE[Pattern.RR_TRA].knob_moves[0])
+
+    # r_acc: sparse random row access (small working fraction)
+    idx = ops.lfsr_indices(n // 8, bits=24) % n
+    fn = jax.jit(lambda t, i: t[i])
+    t = ctx.timeit(fn, table, idx)
+    ctx.emit("r_acc", pattern=Pattern.R_ACC, knobs=Knobs(unit_bytes=d * 4),
+             timing=t, bytes_moved=idx.shape[0] * d * 4 * 2,
+             paper_u280_gbps=0.68,
+             advice=ADVICE[Pattern.R_ACC].knob_moves[0])
+
+    # nest: blocked multi-cursor (chunked attention)
+    b, s, h, hd = (1, 512, 4, 64) if ctx.fast else (2, 1024, 8, 64)
+    q = jnp.ones((b, s, h, hd), jnp.float32)
+    k = jnp.ones((b, s, h, hd), jnp.float32)
+    v = jnp.ones((b, s, h, hd), jnp.float32)
+    p = AttnParams(bq=256, bkv=256)
+    fn = jax.jit(lambda *a: chunked_attention(*a, p))
+    t = ctx.timeit(fn, q, k, v)
+    moved = (q.size + 2 * (s // 256) * k.size + q.size) * 4
+    ctx.emit("nest", pattern=Pattern.NEST, knobs=Knobs(),
+             timing=t, bytes_moved=moved,
+             paper_u280_gbps=421.89,
+             advice=ADVICE[Pattern.NEST].knob_moves[0])

@@ -1,0 +1,43 @@
+"""Paper Table 2 (latency per channel) + Fig. 6 (latency vs stride).
+
+TPU analogue: pointer-chase ns/hop per HBM address region (channel analogue)
+and vs chain stride.  Measured = XLA:CPU chase; model = T_l (memmodel).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.bench.registry import SweepContext, register
+from repro.core.patterns import Knobs, Pattern
+from repro.kernels import ops, ref
+
+
+def _strided_chain(n, stride):
+    """next = (cur + stride) mod n; full cycle when gcd(stride, n) == 1."""
+    idx = (np.arange(n) + stride) % n
+    return jnp.asarray(idx, jnp.int32)[:, None]
+
+
+@register("latency", "Table 2 / Fig 6")
+def run(ctx: SweepContext) -> None:
+    steps = 1 << (10 if ctx.fast else 13)
+    n = 1 << (12 if ctx.fast else 15)
+    knobs = Knobs(unit_bytes=4, outstanding=1)
+    for region in range(4 if ctx.fast else 8):
+        table = ops.make_chain(n, seed=region)
+        fn = jax.jit(lambda t: ref.pointer_chase(t, steps))
+        t = ctx.timeit(fn, table)
+        ctx.emit(f"latency_region_{region}", pattern=Pattern.CHASE,
+                 knobs=knobs, timing=t, bytes_moved=steps * 4,
+                 ns_per_hop=f"{t.best_s/steps*1e9:.1f}",
+                 t_l_model_ns=f"{ctx.spec.dma_latency_s*1e9:.0f}")
+
+    for stride in (1, 2, 3, 4, 8, 9, 10, 18):
+        table = _strided_chain(n, stride) if np.gcd(stride, n) == 1 else \
+            _strided_chain(n + 1, stride)
+        fn = jax.jit(lambda t: ref.pointer_chase(t, steps))
+        t = ctx.timeit(fn, table)
+        ctx.emit(f"latency_stride_{stride}", pattern=Pattern.CHASE,
+                 knobs=Knobs(unit_bytes=4, stride=stride, outstanding=1),
+                 timing=t, bytes_moved=steps * 4,
+                 ns_per_hop=f"{t.best_s/steps*1e9:.1f}")

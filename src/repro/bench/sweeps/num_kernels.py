@@ -1,0 +1,39 @@
+"""Paper Table 6: number of kernels vs throughput.
+
+TPU analogue: split one stream over k separately-dispatched programs.  Fewer,
+wider engines win (dispatch overhead + lost fusion) — same conclusion as the
+paper's 1-2 kernel sweet spot.  The model column is the idealized linear
+multi-engine aggregate (``aggregate_bw``); measured falling below it at high
+k IS the paper's dispatch-overhead finding.
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.bench.registry import SweepContext, register
+from repro.core.memmodel import aggregate_bw
+from repro.core.patterns import Knobs, Pattern
+from repro.kernels import ref
+
+
+@register("num_kernels", "Table 6")
+def run(ctx: SweepContext) -> None:
+    rows, cols = (2048, 512) if ctx.fast else (8192, 1024)
+    x = jnp.ones((rows, cols), jnp.float32)
+    nbytes = x.size * 4 * 2
+    for k in (1, 2, 4, 8, 16, 32):
+        parts = jnp.split(x, k, axis=0)
+        fns = [jax.jit(ref.stream_copy) for _ in range(k)]
+        for f, p in zip(fns, parts):
+            f(p).block_until_ready()  # warm
+
+        def run_all():
+            outs = [f(p) for f, p in zip(fns, parts)]
+            return outs[-1]
+
+        t = ctx.timeit(run_all)
+        knobs = Knobs(burst_bytes=(rows // k) * cols * 4, engines=k)
+        ctx.emit(f"kernels_{k}", pattern=Pattern.SEQUENTIAL, knobs=knobs,
+                 timing=t, bytes_moved=nbytes,
+                 gbps_predicted=aggregate_bw(Pattern.SEQUENTIAL, knobs,
+                                             ctx.spec) / 1e9,
+                 note="fewer_wider_engines_win")

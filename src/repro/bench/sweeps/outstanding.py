@@ -1,0 +1,51 @@
+"""Paper Fig. 5 + Table 5: effect of outstanding transactions.
+
+TPU analogue: requests in flight = independent chase chains serviced in
+parallel (vmap) — per-chain latency is constant, so aggregate hops/s scale
+with the in-flight count until the bandwidth knee.  The model column gives
+the v5e knee NO* = ceil(T_l * BW / burst) (Eq. 4); the VMEM column is the
+paper's BRAM-consumption column.
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.bench.registry import SweepContext, register
+from repro.core.memmodel import min_outstanding_for_peak
+from repro.core.patterns import Knobs, Pattern
+from repro.kernels import ops
+
+
+def _multi_chase(tables, steps):
+    flat = tables[:, :, 0]
+
+    def one(tbl):
+        def body(addr, _):
+            nxt = tbl[addr]
+            return nxt, nxt
+        _, tr = jax.lax.scan(body, jnp.int32(0), None, length=steps)
+        return tr
+
+    return jax.vmap(one)(flat)
+
+
+@register("outstanding", "Fig 5 / Table 5")
+def run(ctx: SweepContext) -> None:
+    n = 1 << (10 if ctx.fast else 13)
+    steps = 1 << (9 if ctx.fast else 12)
+    base = None
+    burst = 64 * 1024
+    no_star = min_outstanding_for_peak(burst, ctx.spec)
+    for no in (1, 2, 4, 8, 16, 32, 64):
+        tables = jnp.stack([ops.make_chain(n, seed=i) for i in range(no)])
+        fn = jax.jit(lambda t: _multi_chase(t, steps))
+        t = ctx.timeit(fn, tables)
+        hops_s = no * steps / t.best_s
+        base = base or hops_s
+        knobs = Knobs(burst_bytes=burst, outstanding=no)
+        ctx.emit(f"outstanding_{no}", pattern=Pattern.SEQUENTIAL, knobs=knobs,
+                 timing=t, bytes_moved=no * steps * 4,
+                 hops_per_s=f"{hops_s:.2e}",
+                 speedup_vs_1=f"{hops_s/base:.2f}",
+                 vmem_bytes=knobs.vmem_bytes(),
+                 no_star_64kb=no_star,
+                 no_star_1mb=min_outstanding_for_peak(1 << 20, ctx.spec))

@@ -1,0 +1,57 @@
+"""Paper Tables 7/8: random access (LFSR + pointer-chase) vs sequential.
+
+The paper's headline ordering — sequential 421 GB/s >> LFSR-random 5.8 GB/s
+>> pointer-chase 0.99 GB/s — is the ratio structure we reproduce (measured on
+this host + modeled on v5e).
+"""
+from repro.bench.registry import SweepContext, register
+from repro.core import engines
+from repro.core.patterns import Knobs, Pattern
+
+
+@register("random", "Tables 7-8")
+def run(ctx: SweepContext) -> None:
+    fast = ctx.fast
+    # working sets must exceed the host LLC or 'random' hits cache and the
+    # paper's ordering inverts (an instance of its own page-hit effect!)
+    seq = engines.bw_sequential(rows=4096 if fast else 16384, cols=1024)
+    # knobs mirror engines.bw_sequential's own model point so calibration
+    # fits predict_bw at the measured configuration, not a nominal default
+    ctx.emit("seq", pattern=Pattern.SEQUENTIAL,
+             knobs=Knobs(unit_bytes=128 * 4, burst_bytes=1024 * 4 * 8,
+                         outstanding=2),
+             us=seq.wall_s * 1e6,
+             gbps_measured=seq.gbps_measured,
+             gbps_predicted=seq.gbps_tpu_model,
+             paper_u280_gbps=421.68)
+    r = None
+    for gen in ("lfsr", "prng"):
+        # one-cache-line rows (64B ~ the paper's 256-bit units) from a
+        # table larger than LLC: each touch pays the latency, not the burst
+        r = engines.bw_random(n_rows=1 << (17 if fast else 20), cols=16,
+                              n_idx=1 << (13 if fast else 16), generator=gen)
+        ctx.emit(f"random_{gen}", pattern=Pattern.RANDOM,
+                 knobs=Knobs(unit_bytes=64, outstanding=8),
+                 us=r.wall_s * 1e6,
+                 gbps_measured=r.gbps_measured,
+                 gbps_predicted=r.gbps_tpu_model,
+                 paper_u280_gbps=5.82)
+    chase = engines.latency_chase(n_entries=1 << (20 if fast else 22),
+                                  steps=1 << 13)
+    # paper's ratio claim: seq >> random >> chase.  The chase relations are
+    # host-independent (serialized loads cannot be hidden anywhere); the
+    # seq-vs-random gap needs real DRAM behaviour — virtualized hosts with a
+    # low streaming ceiling can flatten it, so it is reported, not asserted.
+    hard = (seq.gbps_measured > chase.gbps_measured
+            and r.gbps_measured > chase.gbps_measured)
+    ctx.emit("random_pointer_chase", pattern=Pattern.CHASE,
+             knobs=Knobs(unit_bytes=4, outstanding=1),
+             us=chase.wall_s * 1e6,
+             gbps_measured=chase.gbps_measured,
+             gbps_predicted=chase.gbps_tpu_model,
+             paper_u280_gbps=0.994,
+             chase_slowest=hard,
+             seq_over_random=f"{seq.gbps_measured/r.gbps_measured:.2f}x",
+             v5e_model_seq_over_random=
+             f"{seq.gbps_tpu_model/r.gbps_tpu_model:.0f}x")
+    assert hard, "pointer chase must be slowest everywhere"

@@ -1,0 +1,34 @@
+"""Paper Figs. 8/9: throughput vs stride (Loop + Dataflow engines).
+
+Loop analogue = XLA-fused strided traversal; Dataflow analogue = explicit
+index-vector gather (address generation decoupled from access, like the
+paper's FIFO-linked dataflow kernel).
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.bench.registry import SweepContext, register
+from repro.core.patterns import Knobs, Pattern
+from repro.kernels import ref
+
+
+@register("stride", "Figs 8-9")
+def run(ctx: SweepContext) -> None:
+    rows, cols = (2048, 256) if ctx.fast else (8192, 512)
+    x = jnp.ones((rows, cols), jnp.float32)
+    nbytes = x.size * 4 * 2
+    for stride in (1, 2, 4, 8, 16, 32):
+        knobs = Knobs(unit_bytes=8 * cols * 4, stride=stride)
+        # Loop engine (fused traversal)
+        fn = jax.jit(lambda a, s=stride: ref.strided_copy(a, block_rows=8,
+                                                          stride=s))
+        t = ctx.timeit(fn, x)
+        # Dataflow engine (explicit address vector -> gather)
+        idx = (jnp.arange(rows // 8) * stride) % (rows // 8)
+        xf = x.reshape(rows // 8, 8 * cols)
+        fn2 = jax.jit(lambda a, i: a[i])
+        t2 = ctx.timeit(fn2, xf, idx)
+        ctx.emit(f"stride_{stride}_loop", pattern=Pattern.STRIDED,
+                 knobs=knobs, timing=t, bytes_moved=nbytes)
+        ctx.emit(f"stride_{stride}_dataflow", pattern=Pattern.STRIDED,
+                 knobs=knobs, timing=t2, bytes_moved=nbytes)

@@ -1,0 +1,33 @@
+"""Paper Fig. 7: throughput vs unit size (transaction width).
+
+TPU analogue: random row gather with growing row bytes — the paper's claim
+(throughput ~ linear in unit size until the bandwidth roof) reproduces on
+both the measured CPU engine and the analytic v5e model.
+"""
+import jax.numpy as jnp
+
+from repro.bench.registry import SweepContext, register
+from repro.core import engines
+from repro.core.patterns import Knobs, Pattern
+
+
+@register("unit_size", "Fig 7")
+def run(ctx: SweepContext) -> None:
+    units = (4, 16, 64, 256, 1024) if ctx.fast else (4, 16, 64, 256, 1024, 4096)
+    for u in units:
+        r = engines.bw_random(n_rows=1 << 12, cols=max(1, u // 4),
+                              n_idx=1 << 12)
+        ctx.emit(f"unit_{u}B", pattern=Pattern.RANDOM,
+                 knobs=Knobs(unit_bytes=u, outstanding=8),
+                 us=r.wall_s * 1e6,
+                 gbps_measured=r.gbps_measured,
+                 gbps_predicted=r.gbps_tpu_model)
+    # dtype variant of unit size (int8 vs bf16 vs f32 rows)
+    for dt, tag in ((jnp.int8, "s8"), (jnp.bfloat16, "bf16"),
+                    (jnp.float32, "f32")):
+        r = engines.bw_sequential(rows=2048, cols=1024, dtype=dt)
+        ctx.emit(f"unit_dtype_{tag}", pattern=Pattern.SEQUENTIAL,
+                 knobs=Knobs(unit_bytes=128 * jnp.dtype(dt).itemsize),
+                 us=r.wall_s * 1e6,
+                 gbps_measured=r.gbps_measured,
+                 gbps_predicted=r.gbps_tpu_model)

@@ -14,14 +14,25 @@ Two entry points:
 from __future__ import annotations
 
 import re
-from typing import Dict, List
+from functools import lru_cache
+from typing import Dict, List, Optional
 
 from repro.configs.base import ATTN, DECODE, MOE, RGLRU, SSD, ModelConfig, ShapeCell
+from repro.core.memmodel import TPUSpec, V5E
 from repro.core.patterns import ADVICE, Pattern, SiteReport
 
 
+@lru_cache(maxsize=None)
+def _tuned_gbps(pattern: Pattern, spec: TPUSpec) -> float:
+    """Model-predicted tuned bandwidth for a pattern under ``spec`` (GB/s).
+    Cached — TPUSpec is frozen/hashable and the knob search is pure."""
+    from repro.core.autotune import tune_pattern
+    return tune_pattern(pattern, spec).predicted_gbps
+
+
 def advise_model(cfg: ModelConfig, cell: ShapeCell, engines: int = 1,
-                 param_engines: int = None) -> List[SiteReport]:
+                 param_engines: int = None, spec: TPUSpec = V5E,
+                 calibration=None) -> List[SiteReport]:
     """``engines`` is the parallel-access-engine count of the active
     sharding policy on its mesh (``ShardingPolicy.engines(mesh)``, paper
     Tables 3-5): traffic is reported *per engine*, i.e. per mesh shard,
@@ -31,7 +42,13 @@ def advise_model(cfg: ModelConfig, cell: ShapeCell, engines: int = 1,
     all ``engines``; the weight stream splits only across ``param_engines``
     (``ShardingPolicy.param_engines(mesh)`` — 1 for pure DP, where params
     replicate and every shard streams the full model).  Defaults to
-    ``engines`` when unset."""
+    ``engines`` when unset.
+
+    ``spec`` grounds each site's ``predicted_gbps`` (tuned-model bandwidth
+    for its pattern).  Passing a ``calibration``
+    (:class:`repro.bench.calibrate.CalibrationResult`) switches predictions
+    to the host-fitted constants and stamps every site with the pattern's
+    ``measured_vs_predicted`` ratio — measured mode."""
     reports: List[SiteReport] = []
     dt = 2  # bf16
     tokens = cell.tokens
@@ -53,20 +70,20 @@ def advise_model(cfg: ModelConfig, cell: ShapeCell, engines: int = 1,
         detail="per-step weight streaming; FSDP all-gather of layer i+1 "
                "overlaps layer i compute (prefetch = outstanding)"))
 
-    for j, spec in enumerate(cfg.layer_pattern):
-        if spec.mixer == ATTN:
-            kv = cell.seq_len if spec.sliding_window is None else min(
-                spec.sliding_window, cell.seq_len)
+    for j, lspec in enumerate(cfg.layer_pattern):
+        if lspec.mixer == ATTN:
+            kv = cell.seq_len if lspec.sliding_window is None else min(
+                lspec.sliding_window, cell.seq_len)
             qn = 1 if cell.kind == DECODE else cell.seq_len
             b = cell.global_batch
             bytes_kv = b * kv * cfg.num_kv_heads * cfg.resolved_head_dim * dt * 2
             reports.append(SiteReport(
-                op_name=f"attn[p{j}]{'.window' if spec.sliding_window else ''}",
+                op_name=f"attn[p{j}]{'.window' if lspec.sliding_window else ''}",
                 pattern=Pattern.NEST, bytes_moved=bytes_kv,
                 shape=(qn, kv),
                 detail=f"q-cursor {qn} x kv-cursor {kv}; block both cursors "
                        f"(flash tiling) so the kv stream stays VMEM-resident"))
-        elif spec.mixer == SSD:
+        elif lspec.mixer == SSD:
             h = cfg.ssm_expand * d // cfg.ssm_head_dim
             state = cell.global_batch * h * cfg.ssm_head_dim * cfg.ssm_state * 4
             reports.append(SiteReport(
@@ -74,14 +91,14 @@ def advise_model(cfg: ModelConfig, cell: ShapeCell, engines: int = 1,
                 bytes_moved=state,
                 detail=f"constant {state/1e6:.2f}MB state; chunk size trades "
                        f"intra (~Q*H/token) vs inter (~H*P*N/Q/token) traffic"))
-        elif spec.mixer == RGLRU:
+        elif lspec.mixer == RGLRU:
             w = cfg.lru_width or d
             reports.append(SiteReport(
                 op_name=f"rglru[p{j}].state", pattern=Pattern.SEQUENTIAL,
                 bytes_moved=cell.global_batch * w * 4,
                 detail="streaming recurrence; associative-scan keeps it "
                        "bandwidth-bound, not latency-bound"))
-        if spec.mlp == MOE:
+        if lspec.mlp == MOE:
             reports.append(SiteReport(
                 op_name=f"moe[p{j}].route", pattern=Pattern.R_ACC,
                 bytes_moved=3 * d * cfg.d_ff * cfg.num_experts_per_tok * dt,
@@ -101,6 +118,12 @@ def advise_model(cfg: ModelConfig, cell: ShapeCell, engines: int = 1,
             if n > 1:
                 r.bytes_moved = max(1, r.bytes_moved // n)
                 r.detail = f"[1/{n} engines] " + r.detail
+    eff_spec = calibration.spec if calibration is not None else spec
+    for r in reports:
+        r.predicted_gbps = _tuned_gbps(r.pattern, eff_spec)
+        if calibration is not None:
+            r.measured_vs_predicted = calibration.measured_vs_predicted(
+                r.pattern)
     return reports
 
 
@@ -126,9 +149,16 @@ def classify_hlo(hlo_text: str) -> Dict[str, int]:
 
 
 def render_report(reports: List[SiteReport]) -> str:
-    lines = ["site | pattern | bytes | direction"]
+    calibrated = any(r.measured_vs_predicted is not None for r in reports)
+    head = "site | pattern | bytes | pred GB/s"
+    head += " | meas/pred | direction" if calibrated else " | direction"
+    lines = [head]
     for r in reports:
-        lines.append(
-            f"{r.op_name:28s} | {r.pattern.value:10s} | "
-            f"{r.bytes_moved/2**20:10.1f}MiB | {r.advice.knob_moves[0]}")
+        row = (f"{r.op_name:28s} | {r.pattern.value:10s} | "
+               f"{r.bytes_moved/2**20:10.1f}MiB | {r.predicted_gbps:8.1f}")
+        if calibrated:
+            ratio = ("      n/a" if r.measured_vs_predicted is None
+                     else f"{r.measured_vs_predicted:9.3f}")
+            row += f" | {ratio}"
+        lines.append(row + f" | {r.advice.knob_moves[0]}")
     return "\n".join(lines)

@@ -20,6 +20,12 @@ class TunedResult:
     predicted_gbps: float
     vmem_bytes: int
     note: str = ""
+    # best predicted bandwidth over the whole feasible set (GB/s) — the
+    # chosen knobs are within 2% of this; monotone in the VMEM budget
+    best_gbps: float = 0.0
+    # measured/predicted ratio for this pattern when tuned under a
+    # calibration (repro.bench.calibrate); None in purely analytic mode
+    measured_vs_predicted: Optional[float] = None
 
 
 def tune_pattern(pattern: Pattern, spec: TPUSpec = V5E,
@@ -28,9 +34,19 @@ def tune_pattern(pattern: Pattern, spec: TPUSpec = V5E,
                  burst_candidates: Iterable[int] = tuple(
                      2 ** i for i in range(12, 23)),
                  outstanding_candidates: Iterable[int] = (1, 2, 3, 4, 8, 16, 32),
+                 calibration=None,
                  ) -> TunedResult:
     """Smallest-resource knobs within 2% of the best predicted bandwidth
-    (the paper's resource-throughput tradeoff, Tables 3-5)."""
+    (the paper's resource-throughput tradeoff, Tables 3-5).
+
+    ``calibration`` (a :class:`repro.bench.calibrate.CalibrationResult`)
+    switches to measured mode: the search runs against the *fitted* spec —
+    the constants observed on this host — and the result carries the
+    pattern's measured/predicted ratio so callers can de-rate analytic
+    expectations.
+    """
+    if calibration is not None:
+        spec = calibration.spec
     best: List[Tuple[float, int, Knobs]] = []
     for u in unit_candidates:
         for b in burst_candidates:
@@ -47,8 +63,11 @@ def tune_pattern(pattern: Pattern, spec: TPUSpec = V5E,
     top_bw = max(b[0] for b in best)
     feasible = [b for b in best if b[0] >= 0.98 * top_bw]
     bw, vmem, knobs = min(feasible, key=lambda t: t[1])
+    ratio = (calibration.measured_vs_predicted(pattern)
+             if calibration is not None else None)
     return TunedResult(knobs=knobs, predicted_gbps=bw / 1e9, vmem_bytes=vmem,
-                       note=f"NO*={min_outstanding_for_peak(knobs.burst_bytes, spec)}")
+                       note=f"NO*={min_outstanding_for_peak(knobs.burst_bytes, spec)}",
+                       best_gbps=top_bw / 1e9, measured_vs_predicted=ratio)
 
 
 def tune_attention_blocks(head_dim: int, kv_heads_per_device: int = 1,

@@ -149,6 +149,12 @@ class SiteReport:
     shape: Tuple[int, ...] = ()
     detail: str = ""
     advice: Optional[Advice] = None
+    # model-predicted tuned bandwidth for this pattern (GB/s) under the spec
+    # the advisor ran with; 0.0 until the advisor fills it in
+    predicted_gbps: float = 0.0
+    # measured/predicted ratio for this pattern from a calibration pass
+    # (repro.bench.calibrate); None when running purely analytic
+    measured_vs_predicted: Optional[float] = None
 
     def __post_init__(self):
         if self.advice is None:

@@ -1,0 +1,82 @@
+"""Golden tests: the advisor's pattern taxonomy per site is stable.
+
+The paper's mapping (§5/§6) is load-bearing for every downstream consumer
+(autotune knobs, dryrun roofline, sharding advice), so pin it per config:
+embedding gather -> r_acc, attention -> nest, weight streaming -> rs_tra,
+MoE routing -> r_acc, recurrent/SSM state -> sequential, decode cache
+re-read -> rs_tra.
+"""
+import pytest
+
+from repro.configs import ARCHS, SHAPES_BY_NAME
+from repro.configs.base import ATTN, MOE, RGLRU, SSD
+from repro.core.advisor import advise_model, render_report
+from repro.core.patterns import Pattern
+
+ARCH_NAMES = sorted(ARCHS)
+
+
+def _patterns_by_site(reports):
+    return {r.op_name: r.pattern for r in reports}
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_taxonomy_train(arch):
+    cfg = ARCHS[arch]
+    reports = advise_model(cfg, SHAPES_BY_NAME["train_4k"])
+    by_site = _patterns_by_site(reports)
+
+    # universal sites
+    assert by_site["embedding.lookup"] == Pattern.R_ACC
+    assert by_site["params.stream"] == Pattern.RS_TRA
+
+    # per-layer sites follow the mixer/mlp kinds in the config
+    for site, pattern in by_site.items():
+        if site.startswith("attn["):
+            assert pattern == Pattern.NEST, site
+        if site.startswith(("ssd[", "rglru[")):
+            assert pattern == Pattern.SEQUENTIAL, site
+        if site.startswith("moe[") and site.endswith(".route"):
+            assert pattern == Pattern.R_ACC, site
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_sites_match_layer_pattern(arch):
+    """Every mixer/mlp kind in the config produces its site, and no site
+    appears without its kind — the golden structure, derived not hardcoded."""
+    cfg = ARCHS[arch]
+    reports = advise_model(cfg, SHAPES_BY_NAME["train_4k"])
+    sites = [r.op_name for r in reports]
+    kinds = {spec.mixer for spec in cfg.layer_pattern}
+    mlps = {spec.mlp for spec in cfg.layer_pattern}
+
+    assert (ATTN in kinds) == any(s.startswith("attn[") for s in sites)
+    assert (SSD in kinds) == any(s.startswith("ssd[") for s in sites)
+    assert (RGLRU in kinds) == any(s.startswith("rglru[") for s in sites)
+    assert (MOE in mlps) == any(s.startswith("moe[") for s in sites)
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_decode_adds_cache_stream(arch):
+    cfg = ARCHS[arch]
+    reports = advise_model(cfg, SHAPES_BY_NAME["decode_32k"])
+    by_site = _patterns_by_site(reports)
+    assert by_site["kv_cache.decode_stream"] == Pattern.RS_TRA
+    # the cache stream aggregates exactly the nest (attention) bytes
+    nest_bytes = sum(r.bytes_moved for r in reports
+                     if r.pattern == Pattern.NEST)
+    cache = next(r for r in reports
+                 if r.op_name == "kv_cache.decode_stream")
+    assert cache.bytes_moved == nest_bytes
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_every_site_has_advice_and_prediction(arch):
+    cfg = ARCHS[arch]
+    reports = advise_model(cfg, SHAPES_BY_NAME["train_4k"])
+    for r in reports:
+        assert r.advice is not None and r.advice.pattern == r.pattern
+        assert r.bytes_moved > 0
+        assert r.predicted_gbps > 0  # spec-grounded model prediction
+        assert r.measured_vs_predicted is None  # analytic mode
+    assert render_report(reports).count("\n") == len(reports)

@@ -1,0 +1,220 @@
+"""repro.bench subsystem: schema round-trip, comparator verdicts, registry
+smoke (BENCH_FAST scale), and measured-mode calibration."""
+import dataclasses
+import json
+
+import pytest
+
+from repro.bench import (BenchResult, BenchRun, Timing, compare_runs,
+                         calibrate, fit_spec, run_sweeps, samples_from_run,
+                         synthetic_samples)
+from repro.bench.compare import (ADDED, IMPROVEMENT, REGRESSION, REMOVED,
+                                 UNCHANGED, main as compare_main)
+from repro.bench.registry import ORDER, REGISTRY
+from repro.core.memmodel import V5E
+from repro.core.patterns import Knobs, Pattern
+
+
+def _result(name, sweep="unit_size", gbps=10.0, pattern=Pattern.RANDOM,
+            timing=None, **extras):
+    return BenchResult(
+        name=name, sweep=sweep, pattern=pattern.value,
+        knobs=dataclasses.asdict(Knobs(unit_bytes=1024, outstanding=8)),
+        us_per_call=123.4, gbps_measured=gbps, gbps_predicted=8.0,
+        timing=timing, extras=extras)
+
+
+def _run(results):
+    return BenchRun(results=results, spec={"name": "test"})
+
+
+# ---------------------------------------------------------------------------
+# schema round-trip
+# ---------------------------------------------------------------------------
+
+def test_schema_round_trip(tmp_path):
+    run = _run([
+        _result("a", timing=Timing(best_s=1e-3, mean_s=1.5e-3, trials=3),
+                note="x"),
+        _result("b", sweep="stride", pattern=Pattern.STRIDED, gbps=2.5),
+    ])
+    run.calibration = {"latency_scale": 1.5}
+    path = run.dump(str(tmp_path / "BENCH_test.json"))
+    loaded = BenchRun.load(path)
+    assert loaded.to_dict() == run.to_dict()
+    assert loaded.results[0].timing.noise == pytest.approx(0.5)
+    assert loaded.results[0].measured_vs_predicted == pytest.approx(10.0 / 8.0)
+    assert loaded.sweeps() == ["stride", "unit_size"]
+    # the file itself is valid JSON with both bandwidth columns on every row
+    raw = json.loads(open(path).read())
+    for row in raw["results"]:
+        assert "gbps_measured" in row and "gbps_predicted" in row
+
+
+def test_save_names_file_with_timestamp(tmp_path):
+    p1 = _run([_result("a")]).save(str(tmp_path))
+    p2 = _run([_result("a")]).save(str(tmp_path))
+    assert "BENCH_" in p1 and p1.endswith(".json")
+    assert p1 != p2  # same-second runs must not clobber each other
+
+
+# ---------------------------------------------------------------------------
+# comparator
+# ---------------------------------------------------------------------------
+
+def test_compare_verdicts_on_synthetic_pair():
+    old = _run([
+        _result("reg", gbps=10.0),
+        _result("imp", gbps=10.0),
+        _result("same", gbps=10.0),
+        _result("gone", gbps=10.0),
+    ])
+    new = _run([
+        _result("reg", gbps=5.0),      # -50% -> regression
+        _result("imp", gbps=20.0),     # +100% -> improvement
+        _result("same", gbps=10.5),    # +5% -> inside 15% noise floor
+        _result("new", gbps=1.0),
+    ])
+    rep = compare_runs(old, new)
+    v = rep.verdicts()
+    assert v["reg"] == REGRESSION
+    assert v["imp"] == IMPROVEMENT
+    assert v["same"] == UNCHANGED
+    assert v["gone"] == REMOVED
+    assert v["new"] == ADDED
+    assert [r.name for r in rep.regressions] == ["reg"]
+    assert "regression" in rep.render()
+
+
+def test_compare_noise_widens_threshold():
+    """A jittery row (30% trial spread) must not flag a 20% drop."""
+    noisy = Timing(best_s=1e-3, mean_s=1.3e-3, trials=3)
+    old = _run([_result("r", gbps=10.0, timing=noisy)])
+    new = _run([_result("r", gbps=8.0, timing=noisy)])
+    assert compare_runs(old, new).verdicts()["r"] == UNCHANGED
+    # the same drop on a steady row IS a regression at a 5% floor
+    steady = Timing(best_s=1e-3, mean_s=1.0e-3, trials=3)
+    old = _run([_result("r", gbps=10.0, timing=steady)])
+    new = _run([_result("r", gbps=8.0, timing=steady)])
+    assert compare_runs(old, new, noise_threshold=0.05).verdicts()["r"] == \
+        REGRESSION
+
+
+def test_compare_flags_vanished_bandwidth():
+    """A row whose measured bandwidth drops to zero must not slip through
+    the wall-clock fallback as 'unchanged'."""
+    old = _run([_result("r", gbps=10.0)])
+    new = _run([_result("r", gbps=0.0)])
+    rep = compare_runs(old, new)
+    row = rep.rows[0]
+    assert row.verdict == REGRESSION
+    assert row.metric == "gbps_measured" and row.rel_change == -1.0
+    # and the mirror case reads as an improvement, not a regression
+    assert compare_runs(new, old).verdicts()["r"] == IMPROVEMENT
+
+
+def test_compare_us_fallback_for_bandwidthless_rows():
+    old = _run([_result("r", gbps=0.0)])
+    new = _run([dataclasses.replace(_result("r", gbps=0.0), us_per_call=300.0)])
+    rep = compare_runs(old, new, noise_threshold=0.15)
+    row = rep.rows[0]
+    assert row.metric == "us_per_call"
+    assert row.verdict == REGRESSION  # 123us -> 300us is slower
+
+
+def test_compare_cli(tmp_path, capsys):
+    a = _run([_result("r", gbps=10.0)]).dump(str(tmp_path / "a.json"))
+    b = _run([_result("r", gbps=1.0)]).dump(str(tmp_path / "b.json"))
+    assert compare_main([a, a]) == 0
+    assert compare_main([a, b]) == 1
+    assert "regression" in capsys.readouterr().out
+
+
+# ---------------------------------------------------------------------------
+# registry smoke (the BENCH_FAST=1 campaign)
+# ---------------------------------------------------------------------------
+
+def test_registry_lists_ten_sweeps():
+    assert len(REGISTRY) == 10
+    assert ORDER == ["latency", "outstanding", "unit_size", "stride", "burst",
+                     "num_kernels", "random", "database", "conv", "roofline"]
+
+
+def test_registry_rejects_unknown_sweep():
+    with pytest.raises(KeyError):
+        run_sweeps(names=["nope"], fast=True, echo=False)
+
+
+@pytest.mark.slow
+def test_fast_campaign_every_sweep_emits(tmp_path):
+    """BENCH_FAST-scale smoke: all ten sweeps run, each emits >= 1 result,
+    every row carries both bandwidth columns, and the run persists."""
+    run = run_sweeps(fast=True, echo=False, out_dir=str(tmp_path))
+    assert run.failures == {}
+    for name in REGISTRY:
+        rows = run.by_sweep(name)
+        assert rows, f"sweep {name} emitted no results"
+    for r in run.results:
+        assert r.gbps_measured >= 0.0
+        assert r.gbps_predicted >= 0.0
+    assert "path" in run.env
+    reloaded = BenchRun.load(run.env["path"])
+    assert len(reloaded.results) == len(run.results)
+    # a fresh campaign compared against itself has no regressions
+    assert compare_runs(reloaded, run).regressions == []
+
+
+# ---------------------------------------------------------------------------
+# measured-mode calibration
+# ---------------------------------------------------------------------------
+
+def test_calibration_recovers_spec_constants():
+    """Acceptance: fitting samples generated FROM the model recovers the
+    latency/bandwidth constants within 5%."""
+    true = dataclasses.replace(V5E, dma_latency_s=420e-9, hbm_bw=512e9)
+    res = fit_spec(synthetic_samples(true))
+    assert abs(res.spec.dma_latency_s / true.dma_latency_s - 1) < 0.05
+    assert abs(res.spec.hbm_bw / true.hbm_bw - 1) < 0.05
+    assert res.rms_log_error < 0.05
+    assert res.n_samples == len(synthetic_samples(true))
+
+
+def test_calibration_tolerates_noise():
+    true = dataclasses.replace(V5E, dma_latency_s=1200e-9, hbm_bw=96e9)
+    res = fit_spec(synthetic_samples(true, noise=0.03, seed=7))
+    assert abs(res.spec.dma_latency_s / true.dma_latency_s - 1) < 0.15
+    assert abs(res.spec.hbm_bw / true.hbm_bw - 1) < 0.15
+
+
+def test_samples_from_run_filters_and_parses():
+    run = _run([
+        _result("ok", sweep="unit_size", gbps=3.0),
+        _result("wrong_sweep", sweep="num_kernels", gbps=3.0),
+        _result("no_bw", sweep="latency", gbps=0.0),
+    ])
+    samples = samples_from_run(run)
+    assert [s.gbps for s in samples] == [3.0]
+    assert samples[0].pattern == Pattern.RANDOM
+    assert samples[0].knobs.unit_bytes == 1024
+
+
+def test_calibrate_measured_mode_threads_into_core():
+    """calibrate() on this host: fitted spec + ratios flow through
+    tune_pattern and advise_model (the measured_vs_predicted column)."""
+    from repro.configs import ARCHS, SHAPES_BY_NAME
+    from repro.core.advisor import advise_model, render_report
+    from repro.core.autotune import tune_pattern
+
+    cal = calibrate(fast=True)
+    assert cal.spec.dma_latency_s > 0 and cal.spec.hbm_bw > 0
+    assert cal.to_dict()["fitted"]["hbm_bw"] == cal.spec.hbm_bw
+
+    tuned = tune_pattern(Pattern.SEQUENTIAL, calibration=cal)
+    assert tuned.measured_vs_predicted is not None
+    assert tuned.predicted_gbps <= tuned.best_gbps + 1e-9
+
+    reps = advise_model(ARCHS["gemma-2b"], SHAPES_BY_NAME["train_4k"],
+                        calibration=cal)
+    assert all(r.measured_vs_predicted is not None for r in reps)
+    assert all(r.predicted_gbps > 0 for r in reps)
+    assert "meas/pred" in render_report(reps)

@@ -73,6 +73,58 @@ def test_outstanding_knee():
 
 
 # ---------------------------------------------------------------------------
+# autotune + measured-mode calibration
+# ---------------------------------------------------------------------------
+
+_TUNABLE = [Pattern.SEQUENTIAL, Pattern.STRIDED, Pattern.RANDOM,
+            Pattern.CHASE, Pattern.RS_TRA, Pattern.RR_TRA, Pattern.R_ACC,
+            Pattern.NEST]
+
+
+@SET
+@given(pattern=st.sampled_from(_TUNABLE),
+       frac=st.floats(0.01, 0.5))
+def test_tuned_knobs_always_fit_vmem(pattern, frac):
+    """Whatever the budget, the tuner never returns knobs that bust it."""
+    from repro.core import autotune
+    t = autotune.tune_pattern(pattern, vmem_budget_fraction=frac)
+    assert memmodel.vmem_ok(t.knobs, memmodel.V5E, budget_fraction=frac)
+    assert t.vmem_bytes == t.knobs.vmem_bytes()
+    assert 0 < t.predicted_gbps <= t.best_gbps + 1e-9
+
+
+@SET
+@given(pattern=st.sampled_from(_TUNABLE),
+       f1=st.floats(0.01, 0.5), f2=st.floats(0.01, 0.5))
+def test_tuned_bandwidth_monotone_in_budget(pattern, f1, f2):
+    """A bigger VMEM budget can only expand the feasible set, so the best
+    predicted bandwidth is monotone non-decreasing in the budget."""
+    from repro.core import autotune
+    lo, hi = sorted((f1, f2))
+    t_lo = autotune.tune_pattern(pattern, vmem_budget_fraction=lo)
+    t_hi = autotune.tune_pattern(pattern, vmem_budget_fraction=hi)
+    assert t_hi.best_gbps >= t_lo.best_gbps - 1e-9
+
+
+CAL_SET = settings(max_examples=8, deadline=None)
+
+
+@CAL_SET
+@given(lat_exp=st.floats(-7.5, -5.5), bw_exp=st.floats(9.0, 12.5))
+def test_calibration_recovers_model_constants(lat_exp, bw_exp):
+    """Fitting samples generated FROM the model recovers the spec's
+    latency/bandwidth constants within 5% anywhere in the plausible range
+    (30ns..3us latency, 1..3000 GB/s bandwidth)."""
+    import dataclasses
+    from repro.bench.calibrate import fit_spec, synthetic_samples
+    true = dataclasses.replace(memmodel.V5E, dma_latency_s=10.0 ** lat_exp,
+                               hbm_bw=10.0 ** bw_exp)
+    res = fit_spec(synthetic_samples(true))
+    assert abs(res.spec.dma_latency_s / true.dma_latency_s - 1) < 0.05
+    assert abs(res.spec.hbm_bw / true.hbm_bw - 1) < 0.05
+
+
+# ---------------------------------------------------------------------------
 # roofline extraction
 # ---------------------------------------------------------------------------
 

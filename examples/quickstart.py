@@ -17,6 +17,7 @@ from repro.dist import POLICIES
 from repro.models import RuntimeFlags, build
 from repro.optim import AdamWConfig
 from repro.train import TrainConfig, Trainer
+from repro.tune import default_cache, plan_for
 
 
 def main():
@@ -41,6 +42,20 @@ def main():
     print("\n=== 3. autotuned knobs ===")
     print("  sequential:", tune_pattern(Pattern.SEQUENTIAL))
     print("  attention blocks (hd=128):", tune_attention_blocks(128))
+
+    print("\n=== 3b. the applied KernelPlan for this model (repro.tune) ===")
+    big = ARCHS["gemma2-27b"]
+    cell = SHAPES_BY_NAME["prefill_32k"]
+    plan = plan_for("flash_attention",
+                    shape_sig=(cell.seq_len, cell.seq_len,
+                               big.resolved_head_dim),
+                    dtype=big.compute_dtype)
+    print(f"  flash_attention @ {big.name}/{cell.name}: "
+          f"bq={plan.bq} bkv={plan.bkv} depth={plan.pipeline_depth} "
+          f"dtype={plan.dtype} interpret={plan.resolve_interpret()} "
+          f"({plan.predicted_gbps:.0f} GB/s predicted, {plan.source})")
+    print(f"  cached in {repr(default_cache().path)} "
+          f"— kernels pick this up when called without blocks")
 
     print("\n=== 4. five training steps of a reduced gemma2 ===")
     cfg = smoke_config(ARCHS["gemma2-27b"])

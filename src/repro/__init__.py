@@ -9,3 +9,7 @@ from repro import compat as _compat
 
 _compat.install()
 del _compat
+
+# the closed tune->execute loop is part of the public surface:
+# ``import repro; repro.tune.plan_for(...)``
+from repro import tune  # noqa: E402,F401

@@ -35,6 +35,26 @@ class RowDiff:
     new: float = 0.0
     rel_change: float = 0.0  # signed; positive = better
     threshold: float = 0.0
+    # True when both rows are flagged ``extras["deterministic"]``: the
+    # metric is a derived/counted figure (dispatch counts, model-predicted
+    # plan bandwidth), so any regression on it is real, not timer noise
+    deterministic: bool = False
+
+    @property
+    def structural(self) -> bool:
+        """A regression the gate can trust on a noisy host: the bandwidth
+        metric vanished outright, the row is deterministic, or a
+        deterministic row disappeared from the candidate run entirely
+        (dropping a gated invariant must not read as a pass)."""
+        if self.verdict == REMOVED:
+            return self.deterministic
+        if self.verdict != REGRESSION:
+            return False
+        # rel_change <= -1.0 means "vanished" only for higher-is-better
+        # bandwidth; for us_per_call any 2x slowdown hits -1.0, which is
+        # still just timing noise across hosts
+        vanished = self.metric == "gbps_measured" and self.rel_change <= -1.0
+        return self.deterministic or vanished
 
 
 @dataclass
@@ -45,6 +65,12 @@ class CompareReport:
     @property
     def regressions(self) -> List[RowDiff]:
         return [r for r in self.rows if r.verdict == REGRESSION]
+
+    @property
+    def structural_regressions(self) -> List[RowDiff]:
+        """Regressions that survive host timing noise: vanished metrics and
+        rows flagged ``extras["deterministic"]``."""
+        return [r for r in self.rows if r.structural]
 
     @property
     def improvements(self) -> List[RowDiff]:
@@ -82,17 +108,20 @@ def _row_threshold(old: BenchResult, new: BenchResult, floor: float) -> float:
 
 def _diff_row(old: BenchResult, new: BenchResult, floor: float) -> RowDiff:
     thresh = _row_threshold(old, new, floor)
+    det = (bool(old.extras.get("deterministic"))
+           and bool(new.extras.get("deterministic")))
     if old.gbps_measured > 0 and new.gbps_measured <= 0:
         # the primary metric vanished — that IS a regression, never let it
         # fall through to the wall-clock comparison
         return RowDiff(name=old.name, verdict=REGRESSION,
                        metric="gbps_measured", old=old.gbps_measured,
-                       new=0.0, rel_change=-1.0, threshold=thresh)
+                       new=0.0, rel_change=-1.0, threshold=thresh,
+                       deterministic=det)
     if old.gbps_measured <= 0 and new.gbps_measured > 0:
         return RowDiff(name=old.name, verdict=IMPROVEMENT,
                        metric="gbps_measured", old=0.0,
                        new=new.gbps_measured, rel_change=1.0,
-                       threshold=thresh)
+                       threshold=thresh, deterministic=det)
     if old.gbps_measured > 0 and new.gbps_measured > 0:
         metric, o, n = "gbps_measured", old.gbps_measured, new.gbps_measured
         rel = (n - o) / o  # positive = faster
@@ -101,7 +130,7 @@ def _diff_row(old: BenchResult, new: BenchResult, floor: float) -> RowDiff:
         rel = (o - n) / o  # lower is better -> positive = faster
     else:
         return RowDiff(name=old.name, verdict=UNCHANGED, metric="none",
-                       threshold=thresh)
+                       threshold=thresh, deterministic=det)
     if rel < -thresh:
         verdict = REGRESSION
     elif rel > thresh:
@@ -109,7 +138,8 @@ def _diff_row(old: BenchResult, new: BenchResult, floor: float) -> RowDiff:
     else:
         verdict = UNCHANGED
     return RowDiff(name=old.name, verdict=verdict, metric=metric, old=o,
-                   new=n, rel_change=rel, threshold=thresh)
+                   new=n, rel_change=rel, threshold=thresh,
+                   deterministic=det)
 
 
 def compare_runs(old: BenchRun, new: BenchRun,
@@ -122,7 +152,9 @@ def compare_runs(old: BenchRun, new: BenchRun,
         if name in new_by:
             report.rows.append(_diff_row(o, new_by[name], noise_threshold))
         else:
-            report.rows.append(RowDiff(name=name, verdict=REMOVED))
+            report.rows.append(RowDiff(
+                name=name, verdict=REMOVED,
+                deterministic=bool(o.extras.get("deterministic"))))
     for name in new_by:
         if name not in old_by:
             report.rows.append(RowDiff(name=name, verdict=ADDED))
@@ -135,11 +167,28 @@ def main(argv=None) -> int:
     ap.add_argument("new", help="candidate BENCH_*.json")
     ap.add_argument("--threshold", type=float, default=0.15,
                     help="relative noise floor (default 0.15)")
+    ap.add_argument("--gate", choices=("all", "structural"), default="all",
+                    help="which regression verdicts set a nonzero exit: "
+                         "'all' (default), or 'structural' — only vanished "
+                         "metrics and rows flagged extras['deterministic']; "
+                         "wall-clock regressions still print but are "
+                         "advisory.  Use 'structural' when baseline and "
+                         "candidate ran on different hosts (CI).")
     args = ap.parse_args(argv)
     report = compare_runs(BenchRun.load(args.old), BenchRun.load(args.new),
                           noise_threshold=args.threshold)
     print(report.render())
-    return 1 if report.regressions else 0
+    # a dropped deterministic row gates under EVERY mode — removing an
+    # invariant from the candidate run must never read as a pass
+    removed_det = [r for r in report.structural_regressions
+                   if r.verdict == REMOVED]
+    gating = (report.structural_regressions if args.gate == "structural"
+              else report.regressions + removed_det)
+    if args.gate == "structural" and (gating or report.regressions):
+        print(f"# gate=structural: {len(gating)} gating verdict(s) out of "
+              f"{len(report.regressions)} regression(s) + "
+              f"{len(removed_det)} dropped deterministic row(s)")
+    return 1 if gating else 0
 
 
 if __name__ == "__main__":

@@ -1,4 +1,5 @@
-"""The ten registered sweeps — one module per paper table/figure.
+"""The twelve registered sweeps — one module per paper table/figure, plus
+the PR 3 tune->execute proof sweeps (``serve`` + ``kernel_plan``).
 
 Importing this package populates :data:`repro.bench.registry.REGISTRY` in
 the paper's presentation order.  ``benchmarks/bench_*.py`` are thin shims
@@ -7,10 +8,10 @@ any sweep programmatically via :func:`repro.bench.run_sweeps`.
 """
 from repro.bench.sweeps import (  # noqa: F401  (import order == run order)
     latency, outstanding, unit_size, stride, burst, num_kernels,
-    random_access, database, conv, roofline,
+    random_access, database, conv, roofline, serve,
 )
 
 __all__ = [
     "latency", "outstanding", "unit_size", "stride", "burst", "num_kernels",
-    "random_access", "database", "conv", "roofline",
+    "random_access", "database", "conv", "roofline", "serve",
 ]

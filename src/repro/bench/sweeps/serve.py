@@ -1,0 +1,148 @@
+"""Tune->execute proof sweeps (PR 3): serve throughput + applied kernel plans.
+
+Two registered sweeps close the loop the paper's §5 describes — measured
+knob choices must reach the datapath:
+
+- ``serve``: tokens/s of the continuous-batching engine with the legacy
+  per-token host loop (`chase` over PCIe: one dispatch + one host sync per
+  token) vs the device-resident fast path (fused ``decode_many`` windows,
+  bucketed prefill).  The decode regime is `rs_tra` — every tick streams the
+  KV cache once — so GB/s is cache-bytes x ticks / wall.
+- ``kernel_plan``: the blocked attention hot loop with the old hardcoded
+  128x128 blocks vs the :class:`repro.tune.KernelPlan` blocks for the same
+  shape (`nest` — both cursors tiled).
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.bench.registry import SweepContext, register
+from repro.bench.schema import Timing
+from repro.core.patterns import Knobs, Pattern
+
+
+def _cache_bytes(tree) -> int:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return int(sum(x.size * x.dtype.itemsize for x in leaves))
+
+
+def _drain(eng, n_req, max_new):
+    """Enqueue the deterministic request mix and serve it to completion."""
+    from repro.serve import Request
+
+    rng = np.random.default_rng(0)
+    for i in range(n_req):
+        prompt = rng.integers(
+            0, eng.bundle.cfg.vocab_size, size=int(rng.integers(4, 17))
+        ).astype(np.int32)
+        eng.add_request(Request(rid=i, prompt=prompt, max_new_tokens=max_new))
+    t0 = time.perf_counter()
+    stats = eng.run_to_completion()
+    return stats, time.perf_counter() - t0
+
+
+@register("serve", "§5 pointer-chase fix: device-resident decode")
+def run_serve(ctx: SweepContext) -> None:
+    from repro.configs import ARCHS, smoke_config
+    from repro.models import RuntimeFlags, build
+    from repro.serve import ServeEngine
+
+    cfg = smoke_config(ARCHS["gemma-2b"])
+    flags = RuntimeFlags(attn_impl="chunked", attn_bq=16, attn_bkv=16,
+                         moe_impl="dense", loss_chunk=16)
+    bundle = build(cfg, flags)
+    params = bundle.init(jax.random.PRNGKey(0))
+    n_req, max_new = (4, 8) if ctx.fast else (12, 24)
+    max_len = 64 if ctx.fast else 128
+    trials = 2 if ctx.fast else 3
+
+    variants = {
+        # window=1 + exact-length prefill == the old per-token host loop
+        "serve_default": dict(window=1, bucket_prompts=False),
+        # fused windows + pow2 prompt buckets == the fast path
+        "serve_fastpath": dict(window=8, bucket_prompts=True),
+    }
+    for name, kw in variants.items():
+        eng = ServeEngine(bundle, params, batch_size=2, max_len=max_len, **kw)
+        # cold drain compiles every prefill bucket + decode window; reset()
+        # keeps those traces so the timed drains measure dispatch cost
+        cold_stats, _ = _drain(eng, n_req, max_new)
+        walls = []
+        for _ in range(trials):
+            eng.reset()
+            stats, wall = _drain(eng, n_req, max_new)
+            walls.append(wall)
+        timing = Timing(best_s=min(walls), mean_s=sum(walls) / len(walls),
+                        trials=trials)
+        # rs_tra: each decode tick streams the whole batch KV cache once
+        bytes_moved = _cache_bytes(eng.cache) * max(1, stats.decode_steps)
+        knobs = Knobs(burst_bytes=_cache_bytes(eng.cache) // max(
+            1, cfg.num_layers), outstanding=kw["window"])
+        ctx.emit(name, pattern=Pattern.RS_TRA, knobs=knobs, timing=timing,
+                 us=timing.best_s / max(1, stats.tokens_out) * 1e6,
+                 gbps_measured=bytes_moved / max(timing.best_s, 1e-9) / 1e9,
+                 tok_s=f"{stats.tokens_out / max(timing.best_s, 1e-9):.1f}",
+                 tokens_out=stats.tokens_out,
+                 decode_dispatches=stats.decode_dispatches,
+                 ticks_per_dispatch=f"{stats.decode_steps / max(1, stats.decode_dispatches):.2f}",
+                 prefill_compiles_cold=cold_stats.prefill_retraces)
+        if name == "serve_fastpath":
+            # deterministic figure-of-merit rows (no timing => the
+            # comparator's structural gate trusts them on any host):
+            # ticks/dispatch collapsing to ~1 means the fast path fell back
+            # to per-token dispatch; cold prefill compiles growing means
+            # prompt bucketing stopped deduplicating traces
+            ctx.emit("serve_ticks_per_dispatch",
+                     gbps_measured=stats.decode_steps
+                     / max(1, stats.decode_dispatches),
+                     gbps_predicted=float(kw["window"]),
+                     deterministic=True,
+                     metric="decode ticks per fused dispatch (higher=better)")
+            ctx.emit("serve_prefill_compiles",
+                     us=float(cold_stats.prefill_retraces),
+                     deterministic=True,
+                     metric="distinct prefill shapes compiled cold "
+                            "(lower=better)")
+
+
+@register("kernel_plan", "§5 knobs applied: tuned vs default blocks")
+def run_kernel_plan(ctx: SweepContext) -> None:
+    from repro.models.attention import AttnParams, chunked_attention
+    from repro.tune import plan_for
+
+    b, hq, hkv, d = (1, 4, 2, 64)
+    s = 512 if ctx.fast else 2048
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.standard_normal((b, s, hq, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, hkv, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, hkv, d)), jnp.float32)
+    nbytes = (q.size + 2 * k.size + q.size) * 4  # q+k+v read, o written
+
+    plan = plan_for("flash_attention", shape_sig=(s, s, d),
+                    dtype=str(q.dtype), spec=ctx.spec)
+    variants = {
+        "kernel_plan_default": AttnParams(bq=128, bkv=128),   # old hardcode
+        # pin the ctx.spec-derived plan's blocks explicitly so the timed
+        # variant executes exactly what the row reports (resolve_blocks
+        # would re-derive under the default spec, not ctx.spec)
+        "kernel_plan_tuned": AttnParams(bq=plan.bq, bkv=plan.bkv),
+    }
+    for name, p in variants.items():
+        fn = jax.jit(lambda q, k, v, p=p: chunked_attention(q, k, v, p))
+        t = ctx.timeit(fn, q, k, v)
+        bq, bkv = (p.bq or plan.bq), (p.bkv or plan.bkv)
+        knobs = Knobs(unit_bytes=d * 4, burst_bytes=min(bkv, s) * d * 4,
+                      outstanding=plan.pipeline_depth)
+        ctx.emit(name, pattern=Pattern.NEST, knobs=knobs, timing=t,
+                 bytes_moved=nbytes, bq=min(bq, s), bkv=min(bkv, s),
+                 plan_source=plan.source,
+                 plan_predicted_gbps=f"{plan.predicted_gbps:.1f}")
+    # deterministic: the tuner's predicted bandwidth for the applied plan —
+    # regression here means the tune->plan derivation itself got worse
+    ctx.emit("kernel_plan_predicted", gbps_measured=plan.predicted_gbps,
+             gbps_predicted=plan.predicted_gbps,
+             bq=plan.bq, bkv=plan.bkv, plan_source=plan.source,
+             deterministic=True,
+             metric="model-predicted GB/s of the applied plan")

@@ -38,7 +38,7 @@ class Knobs:
     """
 
     unit_bytes: int = 2 * 128            # bf16 x one 128-lane vector
-    burst_bytes: int = 2 * 8 * 128 * 128  # a (8x128)x128 bf16 tile * 8
+    burst_bytes: int = 2 * 8 * 128 * 128  # one (8*128)x128 bf16 tile = 256 KiB
     outstanding: int = 2                  # double buffering
     stride: int = 1
     engines: int = 1

@@ -59,17 +59,19 @@ def _kernel(vlen_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 
 @functools.partial(jax.jit, static_argnames=("softcap", "scale", "bkv",
                                              "interpret"))
-def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
-                     valid_len: jax.Array, *, softcap: Optional[float] = None,
-                     scale: Optional[float] = None, bkv: int = 512,
-                     interpret: bool = True) -> jax.Array:
-    """q: (B, Hq, D); k/v: (B, T, Hkv, D); valid_len: (B,) int32 -> (B, Hq, D)."""
+def _decode_call(q: jax.Array, k: jax.Array, v: jax.Array,
+                 valid_len: jax.Array, *, softcap: Optional[float],
+                 scale: float, bkv: int, interpret: bool) -> jax.Array:
     b, hq, d = q.shape
     _, t, hkv, _ = k.shape
     g = hq // hkv
-    scale = scale if scale is not None else d ** -0.5
-    bkv = min(bkv, t)
-    assert t % bkv == 0
+    # ragged cache lengths: pad to the kv grid; padded rows sit past every
+    # per-batch valid_len, so the in-kernel mask already hides them
+    pad = (-t) % bkv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        t += pad
     n_kv = t // bkv
 
     qf = q.reshape(b * hkv, g, d)
@@ -99,3 +101,33 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
         interpret=interpret,
     )(valid_len.astype(jnp.int32), qf, kf, vf)
     return out.reshape(b, hq, d)
+
+
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     valid_len: jax.Array, *, softcap: Optional[float] = None,
+                     scale: Optional[float] = None, bkv: Optional[int] = None,
+                     interpret: Optional[bool] = None, plan=None) -> jax.Array:
+    """q: (B, Hq, D); k/v: (B, T, Hkv, D); valid_len: (B,) int32 -> (B, Hq, D).
+
+    ``bkv``/``interpret`` left as ``None`` resolve from the cached
+    :class:`repro.tune.KernelPlan` for ``(T, D, dtype)`` (split-KV block =
+    tuned rs_tra burst / row width); ``interpret=None`` ultimately
+    auto-detects the backend.
+    """
+    d = q.shape[-1]
+    t = k.shape[1]
+    scale = scale if scale is not None else d ** -0.5
+    if bkv is None or (plan is not None and interpret is None):
+        if plan is None:
+            from repro.tune import plan_for
+            plan = plan_for("decode_attention", shape_sig=(t, d),
+                            dtype=str(k.dtype))
+        bkv = bkv if bkv is not None else plan.bkv
+        if interpret is None:
+            interpret = plan.resolve_interpret()
+    if interpret is None:
+        from repro.tune import auto_interpret
+        interpret = auto_interpret()
+    bkv = max(1, min(bkv, t))
+    return _decode_call(q, k, v, valid_len, softcap=softcap, scale=scale,
+                        bkv=bkv, interpret=bool(interpret))

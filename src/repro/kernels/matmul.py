@@ -9,6 +9,7 @@ of 128 (lane) / 8 (sublane).
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -32,8 +33,8 @@ def _mm_kernel(x_ref, y_ref, o_ref, acc_ref, *, n_k: int):
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
-def matmul(x: jax.Array, y: jax.Array, *, bm: int = 128, bn: int = 128,
-           bk: int = 128, interpret: bool = True) -> jax.Array:
+def _matmul_call(x: jax.Array, y: jax.Array, *, bm: int, bn: int,
+                 bk: int, interpret: bool) -> jax.Array:
     m, k = x.shape
     k2, n = y.shape
     assert k == k2
@@ -52,3 +53,36 @@ def matmul(x: jax.Array, y: jax.Array, *, bm: int = 128, bn: int = 128,
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
     )(x, y)
+
+
+def matmul(x: jax.Array, y: jax.Array, *, bm: Optional[int] = None,
+           bn: Optional[int] = None, bk: Optional[int] = None,
+           interpret: Optional[bool] = None, plan=None) -> jax.Array:
+    """Tile sizes left as ``None`` resolve from the cached
+    :class:`repro.tune.KernelPlan` for ``(M, N, K, dtype)``;
+    ``interpret=None`` ultimately auto-detects the backend."""
+    m, k = x.shape
+    n = y.shape[1]
+
+    def fit(block, dim):
+        """plan tiles must divide the actual dim — halve until they do."""
+        block = min(block, dim)
+        while dim % block:
+            block //= 2
+        return max(1, block)
+
+    if (bm is None or bn is None or bk is None
+            or (plan is not None and interpret is None)):
+        if plan is None:
+            from repro.tune import plan_for
+            plan = plan_for("matmul", shape_sig=(m, n, k), dtype=str(x.dtype))
+        bm = bm if bm is not None else fit(plan.bq, m)
+        bn = bn if bn is not None else fit(plan.bq, n)
+        bk = bk if bk is not None else fit(plan.bq, k)
+        if interpret is None:
+            interpret = plan.resolve_interpret()
+    if interpret is None:
+        from repro.tune import auto_interpret
+        interpret = auto_interpret()
+    return _matmul_call(x, y, bm=min(bm, m), bn=min(bn, n), bk=min(bk, k),
+                        interpret=bool(interpret))

@@ -4,8 +4,6 @@ from __future__ import annotations
 
 from typing import Optional
 
-import jax
-
 from repro.kernels import decode_attention as _da
 from repro.kernels import flash_attention as _fa
 from repro.kernels import paged_attention as _pa
@@ -18,11 +16,15 @@ from repro.kernels import strided_copy as _st
 
 
 def on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+    from repro.tune import auto_interpret
+    return not auto_interpret()  # the one backend heuristic (repro.tune)
 
 
 def _interp(interpret: Optional[bool]) -> bool:
-    return (not on_tpu()) if interpret is None else interpret
+    if interpret is not None:
+        return interpret
+    from repro.tune import auto_interpret
+    return auto_interpret()
 
 
 def stream_copy(x, *, block_rows=256, block_cols=0, mode="copy", interpret=None):
@@ -51,22 +53,29 @@ def make_chain(n, seed=0):
     return _pc.make_chain(n, seed)
 
 
-def matmul(x, y, *, bm=128, bn=128, bk=128, interpret=None):
-    return _mm.matmul(x, y, bm=bm, bn=bn, bk=bk, interpret=_interp(interpret))
+def matmul(x, y, *, bm=None, bn=None, bk=None, interpret=None, plan=None):
+    """Tiles default to the cached :class:`repro.tune.KernelPlan`.
+    ``interpret`` passes through unresolved so a plan's pinned mode wins."""
+    return _mm.matmul(x, y, bm=bm, bn=bn, bk=bk, interpret=interpret,
+                      plan=plan)
 
 
 def flash_attention(q, k, v, *, causal=True, window=None, softcap=None,
-                    scale=None, bq=128, bkv=128, interpret=None):
+                    scale=None, bq=None, bkv=None, interpret=None, plan=None):
+    """Blocks default to the cached :class:`repro.tune.KernelPlan`.
+    ``interpret`` passes through unresolved so a plan's pinned mode wins."""
     return _fa.flash_attention(
         q, k, v, causal=causal, window=window, softcap=softcap, scale=scale,
-        bq=bq, bkv=bkv, interpret=_interp(interpret))
+        bq=bq, bkv=bkv, interpret=interpret, plan=plan)
 
 
 def decode_attention(q, k, v, valid_len, *, softcap=None, scale=None,
-                     bkv=512, interpret=None):
+                     bkv=None, interpret=None, plan=None):
+    """Split-KV block defaults to the cached :class:`repro.tune.KernelPlan`.
+    ``interpret`` passes through unresolved so a plan's pinned mode wins."""
     return _da.decode_attention(q, k, v, valid_len, softcap=softcap,
-                                scale=scale, bkv=bkv,
-                                interpret=_interp(interpret))
+                                scale=scale, bkv=bkv, interpret=interpret,
+                                plan=plan)
 
 
 def paged_attention(q, k_pages, v_pages, page_table, valid_len, *,

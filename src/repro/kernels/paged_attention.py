@@ -60,10 +60,14 @@ def _kernel(table_ref, vlen_ref, q_ref, kp_ref, vp_ref, o_ref,
 def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
                     page_table: jax.Array, valid_len: jax.Array, *,
                     scale: Optional[float] = None,
-                    interpret: bool = True) -> jax.Array:
+                    interpret: Optional[bool] = None) -> jax.Array:
     """q: (B, Hq, D); k/v_pages: (P, page, Hkv, D); page_table: (B, N) int32
     (pool page id per logical page; unused entries may be any valid id —
-    they are masked by valid_len); valid_len: (B,) -> (B, Hq, D)."""
+    they are masked by valid_len); valid_len: (B,) -> (B, Hq, D).
+    ``interpret=None`` auto-detects: compile on TPU, interpret elsewhere."""
+    if interpret is None:
+        from repro.tune import auto_interpret
+        interpret = auto_interpret()
     b, hq, d = q.shape
     pool, page, hkv, _ = k_pages.shape
     _, n_pages = page_table.shape

@@ -26,6 +26,8 @@ def main(argv=None):
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--window", type=int, default=8,
+                    help="fused decode ticks per dispatch")
     ap.add_argument("--kv-int8", action="store_true")
     args = ap.parse_args(argv)
 
@@ -42,7 +44,7 @@ def main(argv=None):
         params = bundle.init(jax.random.PRNGKey(0))
 
     eng = ServeEngine(bundle, params, batch_size=args.batch,
-                      max_len=args.max_len)
+                      max_len=args.max_len, window=args.window)
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         prompt = rng.integers(0, cfg.vocab_size,
@@ -54,7 +56,8 @@ def main(argv=None):
     dt = time.perf_counter() - t0
     print(f"{stats.tokens_out} tokens in {dt:.2f}s "
           f"({stats.tokens_out/dt:.1f} tok/s), prefills={stats.prefills}, "
-          f"decode_steps={stats.decode_steps}")
+          f"decode_steps={stats.decode_steps}, "
+          f"decode_dispatches={stats.decode_dispatches}")
     return 0
 
 

@@ -31,8 +31,24 @@ class AttnParams(NamedTuple):
     window: Optional[int] = None
     softcap: Optional[float] = None
     scale: Optional[float] = None
-    bq: int = 512
-    bkv: int = 1024
+    # None = derive from the tuned KernelPlan for this call's shape/dtype
+    # (repro.tune — the closed tune->execute loop); ints pin the blocks.
+    bq: Optional[int] = None
+    bkv: Optional[int] = None
+
+
+def resolve_blocks(p: AttnParams, q, k) -> tuple:
+    """(bq, bkv) for a blocked impl: explicit AttnParams win; ``None`` falls
+    back to the cached :class:`repro.tune.KernelPlan` for
+    ``(Sq, Skv, D, dtype)`` — the autotuner's choice applied as the default."""
+    if p.bq is not None and p.bkv is not None:
+        return p.bq, p.bkv
+    from repro.tune import plan_for
+    plan = plan_for("flash_attention",
+                    shape_sig=(q.shape[1], k.shape[1], q.shape[-1]),
+                    dtype=str(q.dtype))
+    return (p.bq if p.bq is not None else plan.bq,
+            p.bkv if p.bkv is not None else plan.bkv)
 
 
 def _mask(q_pos, k_pos, causal, window, kv_valid_len=None):
@@ -87,8 +103,9 @@ def chunked_attention(q, k, v, p: AttnParams, q_offset=0, kv_valid_len=None):
     inner-scan accumulator (which costs O(nq*nkv) fp32 blocks per layer).
     Non-divisible lengths are padded internally and masked out."""
     orig_sq, orig_skv = q.shape[1], k.shape[1]
-    bq = min(p.bq, orig_sq)
-    bkv = min(p.bkv, orig_skv)
+    bq, bkv = resolve_blocks(p, q, k)
+    bq = min(bq, orig_sq)
+    bkv = min(bkv, orig_skv)
     pad_q = (-orig_sq) % bq
     pad_kv = (-orig_skv) % bkv
     if pad_q:
@@ -246,8 +263,9 @@ def unrolled_attention(q, k, v, p: AttnParams, q_offset=0, kv_valid_len=None):
     every block.  Statically skips fully-masked (causal / out-of-window)
     blocks — what a production kernel grid does."""
     orig_sq, orig_skv = q.shape[1], k.shape[1]
-    bq = min(p.bq, orig_sq)
-    bkv = min(p.bkv, orig_skv)
+    bq, bkv = resolve_blocks(p, q, k)
+    bq = min(bq, orig_sq)
+    bkv = min(bkv, orig_skv)
     pad_q = (-orig_sq) % bq
     pad_kv = (-orig_skv) % bkv
     if pad_q:
@@ -300,12 +318,13 @@ def unrolled_attention(q, k, v, p: AttnParams, q_offset=0, kv_valid_len=None):
 def pallas_attention(q, k, v, p: AttnParams, q_offset=0, kv_valid_len=None):
     assert q_offset == 0 and kv_valid_len is None, (
         "pallas path serves full-block prefill; decode uses naive")
+    bq, bkv = resolve_blocks(p, q, k)
     qt = jnp.swapaxes(q, 1, 2)
     kt = jnp.swapaxes(k, 1, 2)
     vt = jnp.swapaxes(v, 1, 2)
     o = kops.flash_attention(
         qt, kt, vt, causal=p.causal, window=p.window, softcap=p.softcap,
-        scale=p.scale, bq=min(p.bq, q.shape[1]), bkv=min(p.bkv, k.shape[1]))
+        scale=p.scale, bq=min(bq, q.shape[1]), bkv=min(bkv, k.shape[1]))
     return jnp.swapaxes(o, 1, 2)
 
 

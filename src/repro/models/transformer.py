@@ -39,8 +39,10 @@ class RuntimeFlags:
     """Execution knobs (never affect math, except kv_dtype quantization)."""
 
     attn_impl: str = "chunked"       # naive | chunked | pallas
-    attn_bq: int = 512
-    attn_bkv: int = 1024
+    # None = blocks come from the tuned KernelPlan for the call shape
+    # (repro.tune); ints pin them (tests / roofline compiles).
+    attn_bq: Optional[int] = None
+    attn_bkv: Optional[int] = None
     moe_impl: str = "sorted"         # dense | sorted
     moe_group: int = 1024
     remat: str = "none"              # none | full | dots
@@ -454,9 +456,23 @@ def train_loss(params, cfg: ModelConfig, flags: RuntimeFlags, batch: dict):
 
 
 def prefill(params, cfg: ModelConfig, flags: RuntimeFlags, batch: dict):
+    """``batch["valid_len"]`` (scalar or (B,) int32, optional) marks the true
+    prompt length when tokens are right-padded to a bucket (the serve fast
+    path): last-token logits are read at ``valid_len - 1`` instead of the pad
+    tail.  Causal attention keeps positions < valid_len exact under right
+    padding; cache rows past valid_len are masked downstream by the decode
+    step's ``kv_valid_len``."""
     x, cache, _ = forward(params, cfg, flags, batch["tokens"],
                           batch.get("patch_embeds"), mode="prefill")
-    last_logits = compute_logits(params, cfg, x[:, -1:])[:, 0]
+    vl = batch.get("valid_len")
+    if vl is None:
+        last = x[:, -1:]
+    else:
+        bsz = x.shape[0]
+        idx = jnp.broadcast_to(
+            jnp.asarray(vl, jnp.int32).reshape(-1), (bsz,)) - 1
+        last = x[jnp.arange(bsz), idx][:, None]
+    last_logits = compute_logits(params, cfg, last)[:, 0]
     return cache, last_logits
 
 

@@ -130,14 +130,71 @@ def test_compare_cli(tmp_path, capsys):
     assert "regression" in capsys.readouterr().out
 
 
+def test_structural_gate_ignores_wallclock_noise(tmp_path, capsys):
+    """--gate structural: a wall-clock row's drop is advisory (different
+    host), but a deterministic-flagged row's drop and a vanished metric
+    still fail the gate — the CI baseline-compare contract."""
+    timed = Timing(best_s=1e-3, mean_s=1.1e-3, trials=3)
+    old = _run([
+        _result("wallclock", gbps=10.0, timing=timed),
+        _result("counter", gbps=8.0, deterministic=True),  # ticks/dispatch
+    ])
+    noisy_new = _run([
+        _result("wallclock", gbps=1.0, timing=timed),   # -90%: noise-class
+        _result("counter", gbps=8.0, deterministic=True),
+    ])
+    a = old.dump(str(tmp_path / "a.json"))
+    b = noisy_new.dump(str(tmp_path / "b.json"))
+    assert compare_main([a, b]) == 1                    # default gate: fails
+    assert compare_main([a, b, "--gate", "structural"]) == 0
+    assert "1 regression" in capsys.readouterr().out
+
+    broken = _run([
+        _result("wallclock", gbps=10.0, timing=timed),
+        _result("counter", gbps=1.0, deterministic=True),  # real drop
+    ])
+    c = broken.dump(str(tmp_path / "c.json"))
+    assert compare_main([a, c, "--gate", "structural"]) == 1
+
+    vanished = _run([
+        _result("wallclock", gbps=0.0, timing=timed),   # metric vanished
+        _result("counter", gbps=8.0, deterministic=True),
+    ])
+    d = vanished.dump(str(tmp_path / "d.json"))
+    assert compare_main([a, d, "--gate", "structural"]) == 1
+
+    rep = compare_runs(old, broken)
+    assert [r.name for r in rep.structural_regressions] == ["counter"]
+
+    # dropping a deterministic row entirely must gate too — removing the
+    # invariant is not a pass — under BOTH gate modes; dropping a
+    # wall-clock-only row stays advisory
+    missing_counter = _run([_result("wallclock", gbps=9.0, timing=timed)])
+    e = missing_counter.dump(str(tmp_path / "e.json"))
+    assert compare_main([a, e, "--gate", "structural"]) == 1
+    assert compare_main([a, e]) == 1
+
+    # a >=2x us_per_call slowdown on an UNFLAGGED row is noise, not
+    # structural: rel <= -1.0 only counts for the bandwidth metric
+    slow_old = _run([dataclasses.replace(
+        _result("uscall", gbps=0.0, timing=timed), us_per_call=100.0)])
+    slow_new = _run([dataclasses.replace(
+        _result("uscall", gbps=0.0, timing=timed), us_per_call=250.0)])
+    f = slow_old.dump(str(tmp_path / "f.json"))
+    g = slow_new.dump(str(tmp_path / "g.json"))
+    assert compare_main([f, g]) == 1                    # default gate: fails
+    assert compare_main([f, g, "--gate", "structural"]) == 0
+
+
 # ---------------------------------------------------------------------------
 # registry smoke (the BENCH_FAST=1 campaign)
 # ---------------------------------------------------------------------------
 
-def test_registry_lists_ten_sweeps():
-    assert len(REGISTRY) == 10
+def test_registry_lists_twelve_sweeps():
+    assert len(REGISTRY) == 12
     assert ORDER == ["latency", "outstanding", "unit_size", "stride", "burst",
-                     "num_kernels", "random", "database", "conv", "roofline"]
+                     "num_kernels", "random", "database", "conv", "roofline",
+                     "serve", "kernel_plan"]
 
 
 def test_registry_rejects_unknown_sweep():
@@ -147,7 +204,7 @@ def test_registry_rejects_unknown_sweep():
 
 @pytest.mark.slow
 def test_fast_campaign_every_sweep_emits(tmp_path):
-    """BENCH_FAST-scale smoke: all ten sweeps run, each emits >= 1 result,
+    """BENCH_FAST-scale smoke: all twelve sweeps run, each emits >= 1 result,
     every row carries both bandwidth columns, and the run persists."""
     run = run_sweeps(fast=True, echo=False, out_dir=str(tmp_path))
     assert run.failures == {}

@@ -109,6 +109,71 @@ def test_flash_attention_cross_lengths():
     _close(got, want, 2e-4)
 
 
+# ---------------------------------------------------------------------------
+# PR 3 parity sweep: dtypes x non-default blocks x non-divisible shapes
+# (the ragged-length wrapper pads to the grid and masks in-kernel)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-4),
+                                       (jnp.bfloat16, 3e-2)])
+@pytest.mark.parametrize("bq,bkv", [(32, 32), (64, 128), (128, 64)])
+@pytest.mark.parametrize("sq,skv", [(96, 96), (37, 53), (128, 100), (65, 129)])
+def test_flash_attention_parity_sweep(dtype, tol, bq, bkv, sq, skv):
+    b, h, d = 1, 2, 32
+    q = _arr((b, h, sq, d), dtype)
+    k = _arr((b, h, skv, d), dtype)
+    v = _arr((b, h, skv, d), dtype)
+    got = ops.flash_attention(q, k, v, causal=False, bq=bq, bkv=bkv)
+    _close(got, ref.attention(q, k, v, causal=False), tol)
+
+
+@pytest.mark.parametrize("opts", [dict(), dict(window=48),
+                                  dict(softcap=12.0)])
+@pytest.mark.parametrize("sq", [33, 100])
+def test_flash_attention_causal_ragged(opts, sq):
+    """satellite: odd sequence lengths no longer trip the block-divisibility
+    assert — padded inside the wrapper, masked in-kernel."""
+    b, h, d = 2, 2, 16
+    q = _arr((b, h, sq, d))
+    k = _arr((b, h, sq, d))
+    v = _arr((b, h, sq, d))
+    got = ops.flash_attention(q, k, v, bq=32, bkv=32, **opts)
+    _close(got, ref.attention(q, k, v, **opts), 2e-4)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 1e-4),
+                                       (jnp.bfloat16, 3e-2)])
+@pytest.mark.parametrize("bkv", [32, 96, 256])
+@pytest.mark.parametrize("t", [100, 255, 256])
+def test_decode_attention_parity_sweep(dtype, tol, bkv, t):
+    b, hq, hkv, d = 2, 4, 2, 32
+    q = _arr((b, hq, d), dtype)
+    k = _arr((b, t, hkv, d), dtype)
+    v = _arr((b, t, hkv, d), dtype)
+    vlen = jnp.asarray([min(7, t), t], jnp.int32)
+    got = ops.decode_attention(q, k, v, vlen, bkv=bkv)
+    _close(got, ref.decode_attention(q, k, v, vlen), tol)
+
+
+def test_kernels_accept_tuned_plan_defaults():
+    """tentpole: with no blocks given, kernels resolve the cached KernelPlan
+    and still match their oracle."""
+    from repro.tune import PlanCache, set_default_cache
+    set_default_cache(PlanCache(None))
+    try:
+        q, k, v = _arr((1, 2, 60, 16)), _arr((1, 2, 60, 16)), _arr((1, 2, 60, 16))
+        _close(ops.flash_attention(q, k, v),
+               ref.attention(q, k, v), 2e-4)
+        qd, kd, vd = _arr((2, 4, 16)), _arr((2, 90, 2, 16)), _arr((2, 90, 2, 16))
+        vlen = jnp.asarray([13, 90], jnp.int32)
+        _close(ops.decode_attention(qd, kd, vd, vlen),
+               ref.decode_attention(qd, kd, vd, vlen), 1e-4)
+        x, y = _arr((96, 100)), _arr((100, 64))
+        _close(ops.matmul(x, y), ref.matmul(x, y), 1e-4)
+    finally:
+        set_default_cache(None)
+
+
 def test_lfsr_properties():
     idx = np.asarray(ops.lfsr_indices(4096, bits=16))
     assert idx.min() >= 0 and idx.max() < (1 << 16)

@@ -106,6 +106,27 @@ def test_tuned_bandwidth_monotone_in_budget(pattern, f1, f2):
     assert t_hi.best_gbps >= t_lo.best_gbps - 1e-9
 
 
+@SET
+@given(kernel=st.sampled_from(["flash_attention", "decode_attention",
+                               "matmul"]),
+       a=st.integers(8, 8192), b=st.integers(8, 8192),
+       d=st.sampled_from([16, 64, 128, 256]),
+       dtype=st.sampled_from(["float32", "bfloat16"]))
+def test_every_cached_kernel_plan_fits_vmem(kernel, a, b, d, dtype):
+    """PR 3 acceptance: any plan the cache can hand a kernel satisfies the
+    paper's BRAM/VMEM constraint (vmem_ok) — whatever the shape/dtype."""
+    from repro.tune import PlanCache
+    cache = PlanCache(None)
+    sig = {"flash_attention": (a, b, d), "decode_attention": (a, d),
+           "matmul": (a, b, d)}[kernel]
+    plan = cache.get_or_derive(kernel, shape_sig=sig, dtype=dtype)
+    assert memmodel.vmem_ok(plan.knobs(), memmodel.V5E)
+    assert plan.vmem_bytes() <= memmodel.V5E.vmem_bytes * 0.5
+    assert 1 <= plan.bq and 1 <= plan.bkv
+    # round-trip: the cached plan is the one handed back
+    assert cache.get_or_derive(kernel, shape_sig=sig, dtype=dtype) == plan
+
+
 CAL_SET = settings(max_examples=8, deadline=None)
 
 

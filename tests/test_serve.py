@@ -81,3 +81,107 @@ def test_engine_slot_reuse(setup):
                                 max_new_tokens=3))
     stats = eng.run_to_completion()
     assert stats.prefills == 3 and stats.tokens_out == 9
+
+
+# ---------------------------------------------------------------------------
+# device-resident fast path (PR 3 acceptance: O(1) host syncs per window)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def gemma_setup():
+    cfg = smoke_config(ARCHS["gemma-2b"])
+    bundle = build(cfg, FLAGS)
+    params = bundle.init(jax.random.PRNGKey(1))
+    return cfg, bundle, params
+
+
+def test_decode_many_is_one_dispatch_per_window(gemma_setup):
+    """run_to_completion on the gemma_2b config: a whole decode window is ONE
+    fused dispatch (ticks-per-dispatch == window), not one dispatch per
+    token — the §5 pointer-chase fix."""
+    cfg, bundle, params = gemma_setup
+    eng = ServeEngine(bundle, params, batch_size=2, max_len=64, window=8)
+    assert eng.bucket_prompts  # gemma-2b is pure full attention
+    for i in range(2):
+        eng.add_request(Request(rid=i, prompt=np.arange(5 + i, dtype=np.int32),
+                                max_new_tokens=9))
+    stats = eng.run_to_completion()
+    assert stats.tokens_out == 2 * 9
+    # 1 prefill token + 8 decode tokens per request, both slots admitted
+    # together: exactly one fused 8-tick dispatch serves all decode tokens
+    assert stats.decode_dispatches == 1
+    assert stats.decode_steps / stats.decode_dispatches == 8
+    # O(1) syncs per window, NOT per token: 16 tokens from 1 decode dispatch
+    assert stats.decode_dispatches < stats.tokens_out - stats.prefills
+
+
+def test_fast_path_matches_reference_greedy(gemma_setup):
+    """Fused windows + bucketed (padded) prefill reproduce the slot-free
+    per-token reference decode exactly."""
+    cfg, bundle, params = gemma_setup
+    prompt = np.asarray([5, 9, 2, 7, 1], np.int32)       # pads 5 -> bucket 8
+    want = _greedy_reference(bundle, params, prompt, 7)
+
+    eng = ServeEngine(bundle, params, batch_size=2, max_len=64, window=4)
+    req = Request(rid=0, prompt=prompt, max_new_tokens=7)
+    eng.add_request(req)
+    eng.add_request(Request(rid=1, prompt=np.arange(11, dtype=np.int32),
+                            max_new_tokens=7))           # pads 11 -> 16
+    eng.run_to_completion()
+    assert req.out_tokens == want
+
+
+def test_prompt_bucketing_dedups_prefill_traces(gemma_setup):
+    """Prompts of different lengths inside one pow2 bucket share a compile."""
+    cfg, bundle, params = gemma_setup
+    eng = ServeEngine(bundle, params, batch_size=2, max_len=64)
+    for i, n in enumerate((9, 11, 13, 16)):              # all bucket to 16
+        eng.add_request(Request(rid=i, prompt=np.arange(n, dtype=np.int32),
+                                max_new_tokens=2))
+    stats = eng.run_to_completion()
+    assert stats.prefills == 4
+    assert stats.prefill_retraces == 1
+
+
+def test_decode_many_respects_budgets(gemma_setup):
+    """A request wanting fewer tokens than the window stops exactly on
+    budget despite the fused loop running masked ticks."""
+    cfg, bundle, params = gemma_setup
+    eng = ServeEngine(bundle, params, batch_size=2, max_len=64, window=8)
+    short = Request(rid=0, prompt=np.arange(4, dtype=np.int32),
+                    max_new_tokens=3)
+    long = Request(rid=1, prompt=np.arange(6, dtype=np.int32),
+                   max_new_tokens=12)
+    eng.add_request(short)
+    eng.add_request(long)
+    eng.run_to_completion()
+    assert len(short.out_tokens) == 3
+    assert len(long.out_tokens) == 12
+
+
+def test_prefill_satisfied_and_maxlen_pinned_slots_retire(gemma_setup):
+    """max_new_tokens=1 is satisfied by prefill alone, and a request pinned
+    at the cache-length guard stops — neither may wedge its slot."""
+    cfg, bundle, params = gemma_setup
+    eng = ServeEngine(bundle, params, batch_size=1, max_len=16, window=4)
+    eng.add_request(Request(rid=0, prompt=np.arange(4, dtype=np.int32),
+                            max_new_tokens=1))
+    # wants 40 tokens but max_len=16 caps it: 1 prefill + (16-1-6) decode
+    eng.add_request(Request(rid=1, prompt=np.arange(6, dtype=np.int32),
+                            max_new_tokens=40))
+    stats = eng.run_to_completion(max_ticks=200)
+    assert stats.prefills == 2
+    assert all(s is None for s in eng.slots)
+    assert stats.tokens_out == 1 + (1 + 16 - 1 - 6)
+
+
+def test_bucketing_auto_disabled_for_recurrent_families(setup):
+    """Right-padding is not mask-safe for ssd/rglru/windowed stacks — the
+    engine must auto-detect and keep exact-length prefill."""
+    cfg_r = smoke_config(ARCHS["mamba2-130m"])
+    bundle_r = build(cfg_r, FLAGS)
+    assert ServeEngine._bucketable(cfg_r) is False
+    cfg_w = smoke_config(ARCHS["gemma2-27b"])           # sliding windows
+    assert ServeEngine._bucketable(cfg_w) is False
+    cfg_full = smoke_config(ARCHS["phi4-mini-3.8b"])    # pure full attention
+    assert ServeEngine._bucketable(cfg_full) is True

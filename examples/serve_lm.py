@@ -1,11 +1,15 @@
 """Serving driver: continuous-batching engine over a small model.
 
 Compares the legacy per-token host loop (window=1, exact-length prefill)
-against the PR 3 device-resident fast path (fused decode_many windows +
-pow2 prompt bucketing) — the paper's §5 pointer-chase fix applied to our
-own scheduler.
+against the device-resident fast path (fused decode_many windows + pow2
+prompt bucketing) — the paper's §5 pointer-chase fix — and, with
+``--cache paged`` (the default ``auto`` picks it wherever the stack
+supports it), the dense per-slot KV cache against the shared page pool:
+chunked prefill, prefix-cached prompt pages, and the ``paged_attention``
+kernel dereferencing a device-resident page table (§6 `r_acc`).
 
     PYTHONPATH=src python examples/serve_lm.py [--requests N] [--batch B]
+                                               [--cache {auto,dense,paged}]
 """
 import argparse
 import os
@@ -24,16 +28,22 @@ from repro.serve import Request, ServeEngine
 
 def _enqueue(eng, args):
     rng = np.random.default_rng(0)
+    common = rng.integers(0, eng.bundle.cfg.vocab_size,
+                          size=16).astype(np.int32)
     for i in range(args.requests):
-        prompt = rng.integers(0, eng.bundle.cfg.vocab_size,
-                              size=rng.integers(4, 24)).astype(np.int32)
+        tail = rng.integers(0, eng.bundle.cfg.vocab_size,
+                            size=rng.integers(4, 24)).astype(np.int32)
+        # half the prompts share a prefix: the paged backend's prefix cache
+        # serves those tokens from read-only pages
+        prompt = np.concatenate([common, tail]) if i % 2 == 0 else tail
         eng.add_request(Request(rid=i, prompt=prompt,
                                 max_new_tokens=args.max_new))
 
 
-def _drive(bundle, params, args, *, window, bucket, label):
+def _drive(bundle, params, args, *, window, bucket, label, backend=None):
     eng = ServeEngine(bundle, params, batch_size=args.batch, max_len=128,
-                      window=window, bucket_prompts=bucket)
+                      window=window, bucket_prompts=bucket,
+                      cache_backend=backend)
     _enqueue(eng, args)
     cold = eng.run_to_completion()     # compiles; reset keeps the traces
     compiles = cold.prefill_retraces
@@ -43,12 +53,20 @@ def _drive(bundle, params, args, *, window, bucket, label):
     stats = eng.run_to_completion()
     dt = time.perf_counter() - t0
     tpd = stats.decode_steps / max(1, stats.decode_dispatches)
+    extra = ""
+    if eng.backend == "paged":
+        extra = (f", {stats.prefix_hit_tokens}/{stats.prompt_tokens} "
+                 f"prefix-cached prompt tokens")
     print(f"  {label:10s} {stats.tokens_out/dt:8.1f} tok/s  "
           f"({stats.tokens_out} tokens in {dt:.2f}s; "
           f"{stats.decode_dispatches} decode dispatches, "
           f"{tpd:.1f} ticks/dispatch, "
-          f"{compiles} prefill compiles cold)")
-    return stats.tokens_out / dt
+          f"{compiles} prefill compiles cold{extra})")
+    print(f"  {'':10s} KV HBM: {eng.kv_bytes()/1024:.0f} KiB allocated, "
+          f"{eng.live_kv_bytes_peak()/1024:.0f} KiB live-token peak"
+          + (f" ({eng.stats.pages_peak} pages of {eng.page} tokens)"
+             if eng.backend == "paged" else " (dense: committed upfront)"))
+    return stats.tokens_out / dt, eng
 
 
 def main():
@@ -59,8 +77,13 @@ def main():
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--window", type=int, default=8,
                     help="fused decode ticks per dispatch (fast path)")
+    ap.add_argument("--cache", default="auto",
+                    choices=("auto", "dense", "paged"),
+                    help="KV backend: 'auto' pages pure full-attention "
+                         "stacks, dense elsewhere; 'dense'/'paged' pin it")
     ap.add_argument("--kv-int8", action="store_true",
-                    help="int8 KV cache (the paper's unit-size lever)")
+                    help="int8 KV cache (the paper's unit-size lever; "
+                         "forces the dense backend)")
     args = ap.parse_args()
 
     cfg = smoke_config(ARCHS[args.arch])
@@ -69,16 +92,18 @@ def main():
                          kv_dtype="int8" if args.kv_int8 else "native")
     bundle = build(cfg, flags)
     params = bundle.init(jax.random.PRNGKey(0))
+    backend = None if args.cache == "auto" else args.cache
 
-    print(f"=== {args.arch} (batch={args.batch}, "
+    print(f"=== {args.arch} (batch={args.batch}, cache={args.cache}, "
           f"kv={'int8' if args.kv_int8 else 'native'}) ===")
-    base = _drive(bundle, params, args, window=1, bucket=False,
-                  label="default")   # one dispatch + host sync per token
-    fast = _drive(bundle, params, args, window=args.window,
-                  bucket=None,       # auto: on for pure full-attention stacks
-                  label="fastpath")
+    base, _ = _drive(bundle, params, args, window=1, bucket=False,
+                     label="default", backend="dense")
+    fast, eng = _drive(bundle, params, args, window=args.window,
+                       bucket=None,    # auto: on for full-attention stacks
+                       label="fastpath", backend=backend)
     print(f"  speedup    {fast / base:8.2f}x  "
-          f"(tuned decode_many window={args.window} + prompt bucketing)")
+          f"(decode_many window={args.window} + prompt bucketing"
+          + (f" + paged KV pool" if eng.backend == "paged" else "") + ")")
 
 
 if __name__ == "__main__":

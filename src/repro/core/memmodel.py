@@ -15,6 +15,14 @@ from typing import Optional
 from repro.core.patterns import Knobs, Pattern
 
 
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= n (tile/page/bucket rounding)."""
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
 @dataclass(frozen=True)
 class TPUSpec:
     """Hardware constants (v5e numbers from the assignment brief)."""

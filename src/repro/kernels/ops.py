@@ -79,9 +79,12 @@ def decode_attention(q, k, v, valid_len, *, softcap=None, scale=None,
 
 
 def paged_attention(q, k_pages, v_pages, page_table, valid_len, *,
-                    scale=None, interpret=None):
+                    scale=None, interpret=None, plan=None):
+    """Page size is pinned by the pool layout (shaped from the plan at
+    pool-creation time); ``interpret`` passes through unresolved so a plan's
+    pinned mode wins."""
     return _pa.paged_attention(q, k_pages, v_pages, page_table, valid_len,
-                               scale=scale, interpret=_interp(interpret))
+                               scale=scale, interpret=interpret, plan=plan)
 
 
 # re-export oracles for tests/benches

@@ -56,18 +56,31 @@ def _kernel(table_ref, vlen_ref, q_ref, kp_ref, vp_ref, o_ref,
                     jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+@functools.partial(jax.jit, static_argnames=("scale", "interpret", "plan"))
 def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
                     page_table: jax.Array, valid_len: jax.Array, *,
                     scale: Optional[float] = None,
-                    interpret: Optional[bool] = None) -> jax.Array:
+                    interpret: Optional[bool] = None,
+                    plan=None) -> jax.Array:
     """q: (B, Hq, D); k/v_pages: (P, page, Hkv, D); page_table: (B, N) int32
     (pool page id per logical page; unused entries may be any valid id —
     they are masked by valid_len); valid_len: (B,) -> (B, Hq, D).
-    ``interpret=None`` auto-detects: compile on TPU, interpret elsewhere."""
+
+    ``plan`` (a :class:`repro.tune.KernelPlan`, hashable => static) carries
+    the tuned backend choice; unlike flash/decode it cannot re-block the
+    kernel here — ``plan.page_size`` shaped the pool this call receives, so
+    the block IS the page and the kernel asserts the two agree.
+    ``interpret=None`` resolves plan-first, then the shared auto heuristic."""
+    if plan is not None and k_pages.shape[1] != plan.page_size:
+        raise ValueError(
+            f"pool page size {k_pages.shape[1]} != plan.page_size "
+            f"{plan.page_size}: the pool must be laid out from the plan")
     if interpret is None:
-        from repro.tune import auto_interpret
-        interpret = auto_interpret()
+        if plan is not None:
+            interpret = plan.resolve_interpret()
+        else:
+            from repro.tune import auto_interpret
+            interpret = auto_interpret()
     b, hq, d = q.shape
     pool, page, hkv, _ = k_pages.shape
     _, n_pages = page_table.shape

@@ -96,6 +96,27 @@ def naive_attention(q, k, v, p: AttnParams, q_offset=0, kv_valid_len=None,
     return o.reshape(b, sq, hq, d).astype(q.dtype)
 
 
+def paged_gather_attention(q, k_pages, v_pages, page_table, p: AttnParams,
+                           q_offset, kv_valid_len):
+    """Chunked-prefill (extend) attention over a paged KV cache.
+
+    q: (B, C, Hq, D) — a prompt *chunk* at absolute offset ``q_offset``;
+    k/v_pages: (P, page, Hkv, D); page_table: (B, N).  The table is
+    dereferenced with a dense gather — logical page j of row b covers
+    absolute positions ``[j*page, (j+1)*page)``, so the gathered view is
+    position-exact and the oracle's causal mask + ``kv_valid_len`` apply
+    unchanged.  Decode (C=1) uses the Pallas ``paged_attention`` kernel
+    instead; prefill chunks are wide enough that the gather amortizes (the
+    paper's unit-size rule is already baked into the page size).
+    """
+    b, n = page_table.shape
+    page = k_pages.shape[1]
+    kd = k_pages[page_table].reshape(b, n * page, *k_pages.shape[2:])
+    vd = v_pages[page_table].reshape(b, n * page, *v_pages.shape[2:])
+    return naive_attention(q, kd.astype(q.dtype), vd.astype(q.dtype), p,
+                           q_offset=q_offset, kv_valid_len=kv_valid_len)
+
+
 def chunked_attention(q, k, v, p: AttnParams, q_offset=0, kv_valid_len=None):
     """Online-softmax double scan (the `nest` transformation) with a
     flash-style custom VJP: the backward recomputes score blocks from

@@ -53,6 +53,28 @@ class ModelBundle:
                                        tokens, pos)
 
     # ------------------------------------------------------------------
+    # paged KV backend (pure full-attention stacks; see paged_supported)
+    # ------------------------------------------------------------------
+    def paged_supported(self) -> bool:
+        """True when the stack can serve from a shared page pool: pure
+        full-causal attention, native kv dtype, no softcap/enc-dec/frontend.
+        The serving engine falls back to the dense per-slot cache otherwise."""
+        return transformer.paged_supported(self.cfg, self.flags.kv_dtype)
+
+    def init_paged_cache(self, num_pages: int, page_size: int):
+        return transformer.init_paged_cache(self.cfg, num_pages, page_size)
+
+    def paged_decode_step(self, params, cache, tokens, pos, table, plan=None):
+        return transformer.paged_decode_step(params, self.cfg, self.flags,
+                                             cache, tokens, pos, table, plan)
+
+    def paged_prefill_chunk(self, params, cache, tokens, pos, table,
+                            chunk_valid):
+        return transformer.paged_prefill_chunk(params, self.cfg, self.flags,
+                                               cache, tokens, pos, table,
+                                               chunk_valid)
+
+    # ------------------------------------------------------------------
     # abstract specs for the dry-run
     # ------------------------------------------------------------------
     def input_specs(self, cell: ShapeCell) -> dict:

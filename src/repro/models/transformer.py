@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ATTN, DENSE, MOE, NONE, RGLRU, SSD, LayerSpec, ModelConfig
+from repro.kernels import ops as kops
 from repro.models import attention as attn_mod
 from repro.models import mlp as mlp_mod
 from repro.models import moe as moe_mod
@@ -53,6 +54,20 @@ class RuntimeFlags:
     #                                  the paper's unit-size lever on the KV
     #                                  stream — halves cache bytes)
     shd: Sharder = no_shard
+
+
+def paged_supported(cfg: ModelConfig, kv_dtype: str = "native") -> bool:
+    """The paged KV backend serves pure full-causal-attention decoders only:
+    ring caches (sliding windows) and recurrent state (ssd/rglru) have no
+    page-table reading, enc-dec splits the cache, int8 KV carries per-token
+    scales the page layout doesn't hold, and the paged kernel has no softcap
+    path.  Everything else falls back to the dense per-slot cache."""
+    if cfg.enc_dec or cfg.frontend or kv_dtype != "native":
+        return False
+    if cfg.attn_logit_softcap is not None:
+        return False
+    specs = tuple(cfg.layer_pattern) + tuple(cfg.remainder_specs)
+    return all(s.mixer == ATTN and s.sliding_window is None for s in specs)
 
 
 def _kv_quant(x):
@@ -132,7 +147,50 @@ def _attn_params(cfg: ModelConfig, spec: LayerSpec, flags: RuntimeFlags) -> Attn
         bq=flags.attn_bq, bkv=flags.attn_bkv)
 
 
-def _apply_attn(p, x, cfg, spec, flags, mode, cache, pos):
+def _paged_attn(q, k, v, cache, ap, pos, table, chunk_valid, cfg, mode,
+                plan=None):
+    """The paged-cache mixer body (both paged modes).
+
+    Writes the chunk/token k/v through the page table, then attends:
+    decode (S=1) dispatches the ``paged_attention`` Pallas kernel against
+    the batched table; extend (prefill chunks) gathers the table into a
+    contiguous view.  Pad positions (bucketed chunks, masked decode ticks
+    on retired slots) are steered to page 0 — the engine reserves it as a
+    null page, so masked writes can never corrupt live data.
+    """
+    bsz, s = q.shape[:2]
+    page = cache["k_pages"].shape[1]
+    n = table.shape[1]
+    posv = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (bsz,))
+    positions = posv[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    if chunk_valid is None:
+        valid = jnp.full((bsz,), s, jnp.int32)
+    else:
+        valid = jnp.broadcast_to(
+            jnp.asarray(chunk_valid, jnp.int32).reshape(-1), (bsz,))
+    in_chunk = jnp.arange(s, dtype=jnp.int32)[None, :] < valid[:, None]
+    pidx = jnp.minimum(positions // page, n - 1)
+    pids = jnp.where(in_chunk, table[jnp.arange(bsz)[:, None], pidx], 0)
+    slots = jnp.where(in_chunk, positions % page, 0)
+    kp = cache["k_pages"].at[pids, slots].set(
+        k.astype(cache["k_pages"].dtype))
+    vp = cache["v_pages"].at[pids, slots].set(
+        v.astype(cache["v_pages"].dtype))
+    new_cache = dict(k_pages=kp, v_pages=vp)
+    if mode == "paged_decode":  # S == 1: the kernel's regime
+        o = kops.paged_attention(q[:, 0], kp, vp, table, posv + 1,
+                                 scale=ap.scale, plan=plan)[:, None]
+    else:  # paged_extend: chunked prefill over the gathered view
+        o = attn_mod.paged_gather_attention(q, kp, vp, table, ap,
+                                            q_offset=posv,
+                                            kv_valid_len=posv + valid)
+    return o, new_cache
+
+
+def _apply_attn(p, x, cfg, spec, flags, mode, cache, pos, table=None,
+                chunk_valid=None, plan=None):
     bsz, s, d = x.shape
     hd = cfg.resolved_head_dim
     shd = flags.shd
@@ -141,7 +199,10 @@ def _apply_attn(p, x, cfg, spec, flags, mode, cache, pos):
     v = jnp.einsum("bsd,dh->bsh", x, p["wv"]).reshape(bsz, s, cfg.num_kv_heads, hd)
     ap = _attn_params(cfg, spec, flags)
 
-    if mode == "decode":
+    if mode in ("paged_decode", "paged_extend"):
+        o, new_cache = _paged_attn(q, k, v, cache, ap, pos, table,
+                                   chunk_valid, cfg, mode, plan)
+    elif mode == "decode":
         # scalar pos (batch-uniform decode, the dry-run/throughput path) uses
         # dynamic-update-slice — SPMD-friendly on seq-sharded caches; vector
         # pos (continuous batching) uses per-slot scatter.
@@ -151,14 +212,15 @@ def _apply_attn(p, x, cfg, spec, flags, mode, cache, pos):
         k = rope(k, posv[:, None], cfg.rope_theta)
 
         def _store(buf, val, idx):
+            val = val.astype(buf.dtype)  # rope upcasts bf16 k to f32
             if uniform:
                 return jax.lax.dynamic_update_slice_in_dim(buf, val, idx, 1)
             return buf.at[jnp.arange(bsz), idx].set(val[:, 0])
 
         def _store_scale(buf, val, idx):
+            val = val.astype(buf.dtype)
             if uniform:
-                return jax.lax.dynamic_update_slice(
-                    buf, val.astype(buf.dtype), (0, idx))
+                return jax.lax.dynamic_update_slice(buf, val, (0, idx))
             return buf.at[jnp.arange(bsz), idx].set(val[:, 0])
 
         int8kv = flags.kv_dtype == "int8"
@@ -225,12 +287,14 @@ def _apply_attn(p, x, cfg, spec, flags, mode, cache, pos):
     return out, new_cache
 
 
-def _apply_layer(p, x, cfg, spec, flags, mode, cache, pos):
+def _apply_layer(p, x, cfg, spec, flags, mode, cache, pos, table=None,
+                 chunk_valid=None, plan=None):
     """returns (x, new_cache, aux_loss)."""
     aux = jnp.zeros((), jnp.float32)
     h = rms_norm(x, p["ln1"])
     if spec.mixer == ATTN:
-        mix, new_cache = _apply_attn(p["attn"], h, cfg, spec, flags, mode, cache, pos)
+        mix, new_cache = _apply_attn(p["attn"], h, cfg, spec, flags, mode,
+                                     cache, pos, table, chunk_valid, plan)
     elif spec.mixer == SSD:
         if mode == "decode":
             mix, new_cache = ssm_mod.decode_step(p["ssd"], h, cache, cfg)
@@ -309,8 +373,41 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
     return dict(blocks=blocks, rem=rem)
 
 
-def _scan_blocks(params, x, cfg, flags, mode, cache, pos):
-    """Apply the scanned pattern blocks + remainder layers."""
+def _empty_paged_for(cfg, spec: LayerSpec, num_pages: int, page_size: int,
+                     dtype):
+    if spec.mixer != ATTN or spec.sliding_window is not None:
+        raise ValueError(
+            f"paged cache requires full attention, got {spec} "
+            "(gate with paged_supported before init_paged_cache)")
+    hd = cfg.resolved_head_dim
+    shape = (num_pages, page_size, cfg.num_kv_heads, hd)
+    return dict(k_pages=jnp.zeros(shape, dtype), v_pages=jnp.zeros(shape, dtype))
+
+
+def init_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int) -> dict:
+    """Paged decode cache: per-layer page *pools* instead of per-slot dense
+    buffers.  Page ids are shared across layers (one host-side allocator,
+    one table), so the pytree mirrors :func:`init_cache`'s stacking —
+    blocks on LAYERS, remainder unstacked — with pools as leaves."""
+    dtype = jnp.dtype(cfg.compute_dtype)
+    nb = cfg.num_pattern_blocks
+
+    def stack(tree):
+        return jax.tree.map(lambda a: jnp.broadcast_to(a, (nb,) + a.shape), tree)
+
+    blocks = {f"p{j}": stack(_empty_paged_for(cfg, spec, num_pages, page_size,
+                                              dtype))
+              for j, spec in enumerate(cfg.layer_pattern)}
+    rem = {f"r{j}": _empty_paged_for(cfg, spec, num_pages, page_size, dtype)
+           for j, spec in enumerate(cfg.remainder_specs)}
+    return dict(blocks=blocks, rem=rem)
+
+
+def _scan_blocks(params, x, cfg, flags, mode, cache, pos, table=None,
+                 chunk_valid=None, plan=None):
+    """Apply the scanned pattern blocks + remainder layers.  ``table`` /
+    ``chunk_valid`` / ``plan`` (paged modes) are loop constants: every
+    layer dereferences the same batched page table."""
     pattern = cfg.layer_pattern
     aux0 = jnp.zeros((), jnp.float32)
 
@@ -321,7 +418,7 @@ def _scan_blocks(params, x, cfg, flags, mode, cache, pos):
         for j, spec in enumerate(pattern):
             c_in = bc.get(f"p{j}") if bc is not None else None
             x, c_out, a = _apply_layer(bp[f"p{j}"], x, cfg, spec, flags, mode,
-                                       c_in, pos)
+                                       c_in, pos, table, chunk_valid, plan)
             aux = aux + a
             new_caches[f"p{j}"] = c_out
         ys = new_caches if mode != "train" else None
@@ -364,7 +461,7 @@ def _scan_blocks(params, x, cfg, flags, mode, cache, pos):
                 prevent_cse=False,
                 static_argnums=(2, 3, 4, 5, 7))
         x, c_out, a = apply(params["rem"][f"r{j}"], x, cfg, spec, flags,
-                            mode, c_in, pos)
+                            mode, c_in, pos, table, chunk_valid, plan)
         aux = aux + a
         new_rem[f"r{j}"] = c_out
     new_cache = (dict(blocks=new_blocks_c, rem=new_rem)
@@ -437,13 +534,16 @@ def chunked_ce(params, cfg, x, labels, flags: RuntimeFlags) -> jax.Array:
 
 def forward(params, cfg: ModelConfig, flags: RuntimeFlags, tokens: jax.Array,
             patch_embeds: Optional[jax.Array] = None, mode: str = "train",
-            cache: Optional[dict] = None, pos=None):
-    """tokens: (B, S_text); patch_embeds: (B, P, d) for vlm frontends."""
+            cache: Optional[dict] = None, pos=None, table=None,
+            chunk_valid=None, plan=None):
+    """tokens: (B, S_text); patch_embeds: (B, P, d) for vlm frontends.
+    ``table``/``chunk_valid``/``plan`` only apply to the paged modes."""
     x = embed_tokens(params, cfg, tokens)
     if patch_embeds is not None:
         x = jnp.concatenate([patch_embeds.astype(x.dtype), x], axis=1)
     x = flags.shd(x, ("batch", "seq", "embed"))
-    x, new_cache, aux = _scan_blocks(params, x, cfg, flags, mode, cache, pos)
+    x, new_cache, aux = _scan_blocks(params, x, cfg, flags, mode, cache, pos,
+                                     table, chunk_valid, plan)
     x = rms_norm(x, params["final_norm"])
     return x, new_cache, aux
 
@@ -483,3 +583,37 @@ def decode_step(params, cfg: ModelConfig, flags: RuntimeFlags, cache: dict,
                               cache=cache, pos=pos)
     logits = compute_logits(params, cfg, x)[:, 0]
     return logits, new_cache
+
+
+def paged_decode_step(params, cfg: ModelConfig, flags: RuntimeFlags,
+                      cache: dict, tokens: jax.Array, pos: jax.Array,
+                      table: jax.Array, plan=None):
+    """One decode tick against the page pool.  tokens: (B, 1); pos: (B,)
+    per-slot positions; table: (B, N) page table (padded entries -> the
+    null page).  Every layer appends k/v through the table and dispatches
+    the ``paged_attention`` kernel under ``plan`` (the engine's tuned
+    :class:`repro.tune.KernelPlan`; the kernel asserts the pool layout
+    matches it and executes its pinned interpret mode)."""
+    x, new_cache, _ = forward(params, cfg, flags, tokens, mode="paged_decode",
+                              cache=cache, pos=pos, table=table, plan=plan)
+    logits = compute_logits(params, cfg, x)[:, 0]
+    return logits, new_cache
+
+
+def paged_prefill_chunk(params, cfg: ModelConfig, flags: RuntimeFlags,
+                        cache: dict, tokens: jax.Array, pos: jax.Array,
+                        table: jax.Array, chunk_valid: jax.Array):
+    """One chunked-prefill step: ``tokens`` (B, C) is a prompt chunk
+    (right-padded to a bucket; ``chunk_valid`` (B,) marks true length) at
+    absolute context offset ``pos`` (B,).  Appends the chunk's k/v into the
+    pages and returns logits at the chunk's last valid position — only the
+    final chunk's logits seed decoding."""
+    x, new_cache, _ = forward(params, cfg, flags, tokens, mode="paged_extend",
+                              cache=cache, pos=pos, table=table,
+                              chunk_valid=chunk_valid)
+    bsz = x.shape[0]
+    idx = jnp.broadcast_to(
+        jnp.asarray(chunk_valid, jnp.int32).reshape(-1), (bsz,)) - 1
+    last = x[jnp.arange(bsz), idx][:, None]
+    logits = compute_logits(params, cfg, last)[:, 0]
+    return new_cache, logits

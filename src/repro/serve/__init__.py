@@ -1,2 +1,3 @@
 from repro.serve.engine import Request, ServeEngine, ServeStats  # noqa: F401
-from repro.serve.kvcache import PagedKVCache  # noqa: F401
+from repro.serve.kvcache import (PageAllocator, PagedKVCache,  # noqa: F401
+                                 PoolExhausted, PrefixIndex, page_hashes)

@@ -2,42 +2,51 @@
 
 Slot-based scheduler over a fixed decode batch: each slot holds one request
 at its own position (the per-slot ``pos`` vector the decode step supports).
-Prefill runs per-request into the slot's cache region; decode runs the whole
-batch in fused multi-tick *windows*.
+Two interchangeable KV backends:
+
+- ``dense`` — the classic per-slot ``(batch, max_len)`` cache: prefill runs
+  per-request into the slot's cache region, decode gathers dense rows.
+- ``paged`` (default wherever the stack supports it) — vLLM-style
+  continuous batching over a shared :class:`~repro.serve.kvcache.
+  PageAllocator` pool: prefill appends k/v into fixed-size pages *in
+  chunks* (a long prompt can no longer stall the decode tick), the decode
+  fast path dispatches the ``paged_attention`` kernel against a
+  device-resident ``(batch, max_pages)`` table, and finished requests
+  release pages immediately — admission is bounded by live tokens, not
+  ``batch x max_len``.  Common prompt prefixes share read-only pages
+  (hash-chained prefix cache); pool exhaustion becomes backpressure
+  (requests stay queued), never a crash.
 
 The fast path is the paper's §5 pointer-chase fix applied to our own
-scheduler: the old engine paid one host round-trip per generated token
-(dispatch decode, pull logits to host, argmax, push the token back — a
-dependent-load chain over PCIe, the `chase` pattern).  Now greedy sampling
-is fused into the decode dispatch, tokens/positions stay device arrays, and
-``decode_many(n)`` runs n ticks under one ``lax.fori_loop`` jit — one
-dispatch and one device->host transfer (the token block) per *window*, not
-per token.  Prompt lengths are bucketed to powers of two before prefill so
-continuous batching stops retracing per distinct prompt length.
+scheduler: greedy sampling is fused into the decode dispatch, tokens and
+positions stay device arrays, and ``decode_many(n)`` runs n ticks under one
+``lax.fori_loop`` jit — one dispatch and one device->host transfer (the
+token block) per *window*, not per token.  The page size itself is a tuned
+knob: :func:`repro.tune.derive_paged_plan` derives it from the advisor's
+``unit_bytes >= 512B`` transaction-optimum rule, so calibration reshapes
+the pool exactly the way it reshapes attention blocks.
 
 The memory system is the product here — KV caches are the dominant HBM
 consumer and the advisor classifies their access as the paper's `nest`
-(prefill) and `rs_tra` (decode streaming) patterns.
+(prefill), `rs_tra` (dense decode streaming) and `r_acc` (paged table
+indirection) patterns.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from dataclasses import dataclass, field
-from typing import List, Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ATTN
+from repro.core.memmodel import next_pow2
 from repro.models.registry import ModelBundle
-
-
-def _next_pow2(n: int) -> int:
-    p = 1
-    while p < n:
-        p *= 2
-    return p
+from repro.serve.kvcache import (PageAllocator, PoolExhausted, PrefixIndex,
+                                 page_hashes)
 
 
 @dataclass
@@ -54,11 +63,17 @@ class Request:
 
 @dataclass
 class ServeStats:
-    prefills: int = 0
+    prefills: int = 0                # requests fully prefilled
     decode_steps: int = 0            # device decode ticks executed
     tokens_out: int = 0
     decode_dispatches: int = 0       # fused decode_many launches (host syncs)
     prefill_retraces: int = 0        # distinct prefill shapes compiled
+    # -- paged backend ----------------------------------------------------
+    prefill_chunks: int = 0          # chunked-prefill dispatches
+    prompt_tokens: int = 0           # prompt tokens admitted
+    prefix_hit_tokens: int = 0       # prompt tokens served from shared pages
+    pages_peak: int = 0              # peak pages_in_use over the run
+    pool_stalls: int = 0             # admissions deferred by PoolExhausted
 
 
 class ServeEngine:
@@ -66,48 +81,107 @@ class ServeEngine:
 
     ``window`` is the fused decode chunk: ``run_to_completion`` advances all
     active slots up to ``window`` tokens per dispatch.  ``bucket_prompts``
-    pads prompts to the next power of two before prefill (defaults to on for
-    pure full-attention decoders, where right-padding is provably masked;
-    recurrent/windowed/enc-dec families keep exact lengths).
+    pads prompts (dense) / prefill chunks (paged) to the next power of two
+    (defaults to on for pure full-attention decoders, where right-padding
+    is provably masked; recurrent/windowed/enc-dec families keep exact
+    lengths).  ``cache_backend`` is ``"dense"``, ``"paged"``, or ``None``
+    (auto: paged wherever :meth:`ModelBundle.paged_supported` allows).
+
+    Paged knobs: ``page_size=None`` derives from the tuned
+    :class:`~repro.tune.KernelPlan`; ``num_pages=None`` sizes the pool at
+    the dense footprint plus the reserved null page — shrink it to admit by
+    live tokens and exercise backpressure, grow it to persist more prefix
+    cache.  ``prefill_chunk`` caps prompt tokens per prefill dispatch so
+    decode ticks interleave with long prompts.
     """
 
     def __init__(self, bundle: ModelBundle, params, batch_size: int,
                  max_len: int, *, window: int = 8,
-                 bucket_prompts: Optional[bool] = None):
+                 bucket_prompts: Optional[bool] = None,
+                 cache_backend: Optional[str] = None,
+                 page_size: Optional[int] = None,
+                 num_pages: Optional[int] = None,
+                 prefill_chunk: int = 32,
+                 prefix_cache: bool = True):
         self.bundle = bundle
         self.params = params
         self.bsz = batch_size
         self.max_len = max_len
         self.window = max(1, window)
-        self.cache = bundle.init_cache(batch_size, max_len)
-        self.pos = jnp.zeros((batch_size,), jnp.int32)       # device
-        self.tokens = jnp.zeros((batch_size, 1), jnp.int32)  # device
-        self._hpos = np.zeros((batch_size,), np.int64)       # host mirror
-        self.slots: List[Optional[Request]] = [None] * batch_size
-        self.queue: List[Request] = []
-        self.stats = ServeStats()
+        if cache_backend is None:
+            cache_backend = "paged" if bundle.paged_supported() else "dense"
+        elif cache_backend not in ("dense", "paged"):
+            raise ValueError(f"unknown cache_backend {cache_backend!r}")
+        elif cache_backend == "paged" and not bundle.paged_supported():
+            raise ValueError(
+                f"{bundle.cfg.name}: paged KV needs a pure full-attention "
+                "stack with native kv dtype (see ModelBundle.paged_supported)")
+        self.backend = cache_backend
         self.bucket_prompts = (self._bucketable(bundle.cfg)
                                if bucket_prompts is None else bucket_prompts)
+
+        if self.backend == "paged":
+            hd = bundle.cfg.resolved_head_dim
+            from repro.tune import plan_for
+            base = plan_for("paged_attention", shape_sig=(max_len, hd),
+                            dtype=str(bundle.cfg.compute_dtype))
+            self.page = int(page_size or base.page_size)
+            # an explicit page_size overrides the derived one; the plan the
+            # kernel receives must describe the pool actually laid out
+            self.plan = (base if base.page_size == self.page
+                         else dataclasses.replace(base, bkv=self.page))
+            self.pages_per_seq = -(-max_len // self.page)
+            # dense-footprint default + the reserved null page (id 0) that
+            # padded table entries target, so masked writes stay harmless
+            self.num_pages = int(num_pages
+                                 or 1 + batch_size * self.pages_per_seq)
+            self.prefill_chunk = max(8, prefill_chunk)
+            self.prefix: Optional[PrefixIndex] = (PrefixIndex()
+                                                  if prefix_cache else None)
+            self._paged_prefill = jax.jit(
+                lambda p, cache, toks, off, tbl, cv:
+                bundle.paged_prefill_chunk(p, cache, toks, off, tbl, cv),
+                donate_argnums=(1,))
+            self._paged_decode_many = jax.jit(
+                functools.partial(_paged_decode_many_impl, bundle, self.plan),
+                static_argnums=(0,), donate_argnums=(2,))
+        else:
+            self._prefill = jax.jit(
+                lambda p, toks, vl: bundle.prefill(
+                    p, dict(tokens=toks, valid_len=vl)))
+            self._decode_many = jax.jit(
+                functools.partial(_decode_many_impl, bundle),
+                static_argnums=(0,), donate_argnums=(2,))
         self._seen_prefill_shapes = set()
-        self._prefill = jax.jit(
-            lambda p, toks, vl: bundle.prefill(
-                p, dict(tokens=toks, valid_len=vl)))
-        self._decode_many = jax.jit(
-            functools.partial(_decode_many_impl, bundle),
-            static_argnums=(0,), donate_argnums=(2,))
+        self._init_state()
+
+    def _init_state(self) -> None:
+        self.pos = jnp.zeros((self.bsz,), jnp.int32)       # device
+        self.tokens = jnp.zeros((self.bsz, 1), jnp.int32)  # device
+        self._hpos = np.zeros((self.bsz,), np.int64)       # host mirror
+        self.slots: List[Optional[Request]] = [None] * self.bsz
+        self.queue: List[Request] = []
+        self.stats = ServeStats()
+        if self.backend == "paged":
+            self.alloc = PageAllocator(self.num_pages, self.page, reserved=1)
+            if self.prefix is not None:
+                self.prefix = PrefixIndex()
+            self.cache = self.bundle.init_paged_cache(self.num_pages,
+                                                      self.page)
+            self._htable = np.zeros((self.bsz, self.pages_per_seq), np.int32)
+            self._table = jnp.asarray(self._htable)
+            self._table_dirty = False
+            self._pending: Dict[int, int] = {}   # slot -> next prefill offset
+            self._hashes: Dict[int, List[str]] = {}  # rid -> full-page hashes
+        else:
+            self.cache = self.bundle.init_cache(self.bsz, self.max_len)
 
     def reset(self) -> None:
-        """Clear all serving state (cache, slots, queue, stats) but KEEP the
-        compiled prefill/decode callables and their trace caches — benchmark
-        drivers drain once to warm the jit caches, reset, then time a
-        steady-state drain."""
-        self.cache = self.bundle.init_cache(self.bsz, self.max_len)
-        self.pos = jnp.zeros((self.bsz,), jnp.int32)
-        self.tokens = jnp.zeros((self.bsz, 1), jnp.int32)
-        self._hpos[:] = 0
-        self.slots = [None] * self.bsz
-        self.queue = []
-        self.stats = ServeStats()
+        """Clear all serving state (cache, pool, slots, queue, stats) but
+        KEEP the compiled prefill/decode callables and their trace caches —
+        benchmark drivers drain once to warm the jit caches, reset, then
+        time a steady-state drain."""
+        self._init_state()
         # _seen_prefill_shapes survives: those shapes remain compiled, so a
         # post-reset drain reports only genuinely new compiles
 
@@ -123,6 +197,27 @@ class ServeEngine:
                    for s in specs)
 
     # ------------------------------------------------------------------
+    # bookkeeping views (benchmarks / examples)
+    # ------------------------------------------------------------------
+    def kv_bytes(self) -> int:
+        """Allocated HBM bytes of the KV cache pytree (both backends)."""
+        return int(sum(x.size * x.dtype.itemsize
+                       for x in jax.tree_util.tree_leaves(self.cache)))
+
+    @property
+    def bytes_per_page(self) -> int:
+        """One page across every layer pool (k + v)."""
+        assert self.backend == "paged"
+        return self.kv_bytes() // self.num_pages
+
+    def live_kv_bytes_peak(self) -> int:
+        """Peak *live-token* HBM bytes: what the cache actually held, vs the
+        ``batch x max_len`` footprint the dense backend commits upfront."""
+        if self.backend == "paged":
+            return self.stats.pages_peak * self.bytes_per_page
+        return self.kv_bytes()
+
+    # ------------------------------------------------------------------
     def add_request(self, req: Request):
         self.queue.append(req)
 
@@ -132,6 +227,9 @@ class ServeEngine:
                 return i
         return None
 
+    # ------------------------------------------------------------------
+    # dense prefill (whole prompt, one dispatch)
+    # ------------------------------------------------------------------
     def _prefill_into_slot(self, slot: int, req: Request):
         """Prefill a single request, then scatter its cache into the batch
         cache at ``slot``.  Stacked leaves (under blocks/dec) carry batch at
@@ -139,7 +237,7 @@ class ServeEngine:
         (zeros for k/v — masked by kv_valid_len; -1e9 for kpos = empty)."""
         s = int(req.prompt.shape[0])
         if self.bucket_prompts:
-            bucket = min(_next_pow2(max(8, s)), self.max_len)
+            bucket = min(next_pow2(max(8, s)), self.max_len)
             padded = np.zeros((1, bucket), np.int32)
             padded[0, :s] = req.prompt
             if bucket not in self._seen_prefill_shapes:
@@ -174,6 +272,102 @@ class ServeEngine:
         self.tokens = self.tokens.at[slot, 0].set(tok0)
         req.out_tokens.append(tok0)
         self.stats.prefills += 1
+        self.stats.prompt_tokens += s
+        self.stats.tokens_out += 1
+
+    # ------------------------------------------------------------------
+    # paged admission + chunked prefill
+    # ------------------------------------------------------------------
+    def _paged_admit_slot(self, slot: int, req: Request) -> None:
+        """Attach the cached prompt prefix (shared read-only pages), then
+        reserve pages for the whole prompt — all-or-nothing, so admission
+        either sticks or backs off cleanly (:class:`PoolExhausted`)."""
+        s = int(req.prompt.shape[0])
+        if s > self.max_len:
+            raise ValueError(f"prompt ({s}) exceeds max_len ({self.max_len})")
+        need = -(-s // self.page)
+        if need > self.num_pages - 1:
+            # no amount of backpressure can ever admit this one — waiting
+            # would silently drop it (and head-of-line-block the queue)
+            raise ValueError(
+                f"prompt needs {need} pages ({s} tokens) but the pool holds "
+                f"only {self.num_pages - 1}; raise num_pages")
+        self.alloc.alloc(req.rid)
+        hit_len = 0
+        hashes: List[str] = []
+        if self.prefix is not None:
+            hashes = page_hashes(req.prompt, self.page)
+            # cap at (s-1) tokens: the last token must be computed so the
+            # final chunk yields the logits that seed decoding
+            usable = (s - 1) // self.page
+            pages = self.prefix.lookup(hashes[:usable])
+            if pages:
+                hit_len = len(pages) * self.page
+                self.alloc.attach(req.rid, pages, hit_len)
+        try:
+            try:
+                self.alloc.reserve(req.rid, s)
+            except PoolExhausted:
+                if self.prefix is None or not self.prefix.evict_unused(self.alloc):
+                    raise
+                self.alloc.reserve(req.rid, s)
+        except PoolExhausted:
+            self.alloc.release(req.rid)
+            raise
+        self._hashes[req.rid] = hashes
+        self.slots[slot] = req
+        self._pending[slot] = hit_len
+        self._hpos[slot] = 0  # no stale position while the prompt builds
+        self.stats.prompt_tokens += s
+        self.stats.prefix_hit_tokens += hit_len
+        self.stats.pages_peak = max(self.stats.pages_peak,
+                                    self.alloc.pages_in_use)
+        # the batch table row stays null until prefill completes: masked
+        # decode ticks must not write through a half-built row
+
+    def _prefill_tick(self, slot: int) -> None:
+        """Advance one pending slot by ONE chunk (<= prefill_chunk tokens).
+        run_to_completion interleaves these with decode windows, so a long
+        prompt admits without stalling in-flight decodes."""
+        req = self.slots[slot]
+        s = int(req.prompt.shape[0])
+        off = self._pending[slot]
+        c = min(self.prefill_chunk, s - off)
+        cb = (min(next_pow2(max(8, c)), self.prefill_chunk)
+              if self.bucket_prompts else c)
+        if ("chunk", cb) not in self._seen_prefill_shapes:
+            self._seen_prefill_shapes.add(("chunk", cb))
+            self.stats.prefill_retraces += 1
+        chunk = np.zeros((1, cb), np.int32)
+        chunk[0, :c] = req.prompt[off:off + c]
+        row = self.alloc.tables[req.rid]
+        trow = np.zeros((1, self.pages_per_seq), np.int32)
+        trow[0, :len(row)] = row
+        self.cache, logits = self._paged_prefill(
+            self.params, self.cache, jnp.asarray(chunk),
+            jnp.asarray([off], jnp.int32), jnp.asarray(trow),
+            jnp.asarray([c], jnp.int32))
+        self.stats.prefill_chunks += 1
+        off += c
+        if off < s:
+            self._pending[slot] = off
+            return
+        # prompt complete: seed decoding and publish the table row
+        del self._pending[slot]
+        if self.prefix is not None:
+            for i, h in enumerate(self._hashes.get(req.rid, [])):
+                if self.prefix.register(h, row[i]):
+                    self.alloc.pin(row[i])
+        self._hashes.pop(req.rid, None)
+        self._htable[slot, :] = 0
+        self._htable[slot, :len(row)] = row
+        self._table_dirty = True
+        self.pos = self.pos.at[slot].set(s)
+        self._hpos[slot] = s
+        tok0 = int(np.argmax(np.asarray(logits)[0]))
+        self.tokens = self.tokens.at[slot, 0].set(tok0)
+        req.out_tokens.append(tok0)
+        self.stats.prefills += 1
         self.stats.tokens_out += 1
 
     def _admit(self) -> None:
@@ -181,20 +375,65 @@ class ServeEngine:
             slot = self._free_slot()
             if slot is None:
                 break
-            self._prefill_into_slot(slot, self.queue.pop(0))
+            if self.backend == "paged":
+                try:
+                    self._paged_admit_slot(slot, self.queue[0])
+                except PoolExhausted:
+                    # backpressure: the request stays queued; pages free as
+                    # in-flight requests finish
+                    self.stats.pool_stalls += 1
+                    break
+                self.queue.pop(0)
+            else:
+                self._prefill_into_slot(slot, self.queue.pop(0))
+        if self.backend == "paged":
+            for slot in sorted(self._pending):
+                self._prefill_tick(slot)
 
     # ------------------------------------------------------------------
     def _budgets(self, n: int) -> np.ndarray:
         """Per-slot token budget for an n-tick window: remaining request
-        quota, capped by the cache length guard."""
+        quota, capped by the cache length guard.  Pending-prefill slots sit
+        at zero until their prompt completes."""
         budgets = np.zeros((self.bsz,), np.int64)
         for i, req in enumerate(self.slots):
             if req is None:
+                continue
+            if self.backend == "paged" and i in self._pending:
                 continue
             remaining = req.max_new_tokens - len(req.out_tokens)
             cap = self.max_len - 1 - self._hpos[i]
             budgets[i] = max(0, min(remaining, cap, n))
         return budgets
+
+    def _reserve_window_pages(self, budgets: np.ndarray) -> np.ndarray:
+        """Pre-allocate pages covering each slot's window budget (page
+        allocation is host-side; the fused loop must never need a page).
+        Pool pressure shrinks budgets (possibly to zero — the slot waits)
+        after evicting prefix-cache pages nothing references."""
+        blocked = np.zeros((self.bsz,), bool)
+        for i, req in enumerate(self.slots):
+            if req is None or budgets[i] == 0:
+                continue
+            target = int(self._hpos[i] + budgets[i])
+            feasible = self.alloc.can_grow(req.rid, target)
+            if feasible < target and self.prefix is not None:
+                self.prefix.evict_unused(self.alloc)
+                feasible = self.alloc.can_grow(req.rid, target)
+            grant = max(0, feasible - int(self._hpos[i]))
+            if grant < budgets[i]:
+                budgets[i] = grant
+                blocked[i] = grant == 0
+            if budgets[i] > 0:
+                fresh = self.alloc.reserve(req.rid,
+                                           int(self._hpos[i] + budgets[i]))
+                if fresh:
+                    row = self.alloc.tables[req.rid]
+                    self._htable[i, :len(row)] = row
+                    self._table_dirty = True
+        self.stats.pages_peak = max(self.stats.pages_peak,
+                                    self.alloc.pages_in_use)
+        return blocked
 
     def decode_many(self, n: int) -> int:
         """Run up to ``n`` decode ticks in ONE fused dispatch (greedy
@@ -202,35 +441,72 @@ class ServeEngine:
         the produced token block with a single device->host transfer.
         Returns the number of real tokens produced."""
         budgets = self._budgets(n)
+        blocked = (self._reserve_window_pages(budgets)
+                   if self.backend == "paged"
+                   else np.zeros((self.bsz,), bool))
+        retired = 0
         for i, req in enumerate(self.slots):
-            if req is not None and budgets[i] == 0:
-                # done already (e.g. max_new_tokens=1 satisfied by prefill)
-                # or pinned at the cache-length guard: retire the slot now,
-                # otherwise it would never advance and never free
-                self.slots[i] = None
+            if req is None or budgets[i] != 0 or blocked[i]:
+                continue
+            if self.backend == "paged" and i in self._pending:
+                continue
+            # done already (e.g. max_new_tokens=1 satisfied by prefill)
+            # or pinned at the cache-length guard: retire the slot now,
+            # otherwise it would never advance and never free
+            self._release_finished(i)
+            retired += 1
+        if retired and self.backend == "paged" and blocked.any():
+            # retired slots returned pages: pool-blocked slots retry
+            budgets = self._budgets(n)
+            blocked = self._reserve_window_pages(budgets)
         top = int(budgets.max(initial=0))
         if top == 0:
+            if blocked.any() and not self._pending:
+                raise PoolExhausted(
+                    "every active slot is pool-blocked and nothing can "
+                    "free pages: the pool is smaller than the live working "
+                    f"set ({self.alloc.pages_in_use} pages in use)")
             return 0
-        n_run = min(n, _next_pow2(top))  # pow2 ticks: bounded trace count
+        n_run = min(n, next_pow2(top))  # pow2 ticks: bounded trace count
         steps = jnp.asarray(np.minimum(budgets, n_run), jnp.int32)
-        self.cache, self.tokens, self.pos, out = self._decode_many(
-            n_run, self.params, self.cache, self.tokens, self.pos, steps)
+        if self.backend == "paged":
+            if self._table_dirty:
+                self._table = jnp.asarray(self._htable)
+                self._table_dirty = False
+            self.cache, self.tokens, self.pos, out = self._paged_decode_many(
+                n_run, self.params, self.cache, self.tokens, self.pos, steps,
+                self._table)
+        else:
+            self.cache, self.tokens, self.pos, out = self._decode_many(
+                n_run, self.params, self.cache, self.tokens, self.pos, steps)
         self.stats.decode_steps += n_run
         self.stats.decode_dispatches += 1
 
         out_np = np.asarray(out)  # (n_run, B) — the one host sync
         produced = 0
         for i, req in enumerate(self.slots):
-            if req is None:
+            if req is None or (self.backend == "paged" and i in self._pending):
                 continue
             adv = int(min(budgets[i], n_run))
             req.out_tokens.extend(int(t) for t in out_np[:adv, i])
             self._hpos[i] += adv
             produced += adv
             if req.done or self._hpos[i] >= self.max_len - 1:
-                self.slots[i] = None
+                self._release_finished(i)
         self.stats.tokens_out += produced
         return produced
+
+    def _release_finished(self, i: int) -> None:
+        """Retire slot ``i``: paged pages go back to the pool *immediately*
+        (prefix-pinned ones persist for future hits) and the slot's table
+        row reverts to the null page so masked writes stay harmless."""
+        req = self.slots[i]
+        self.slots[i] = None
+        if self.backend == "paged":
+            self.alloc.release(req.rid)
+            self._hashes.pop(req.rid, None)
+            self._htable[i, :] = 0
+            self._table_dirty = True
 
     # ------------------------------------------------------------------
     def step(self) -> bool:
@@ -250,8 +526,9 @@ class ServeEngine:
             self._admit()
             if not any(s is not None for s in self.slots):
                 break
-            # decode_many always makes progress: it produces tokens or
-            # retires every zero-budget slot, so this loop cannot spin
+            # every iteration makes progress: _admit advances each pending
+            # prefill one chunk, decode_many produces tokens or retires
+            # zero-budget slots (pool-blocked slots wait on those releases)
             self.decode_many(self.window)
         return self.stats
 
@@ -267,6 +544,32 @@ def _decode_many_impl(bundle: ModelBundle, n: int, params, cache, tokens,
     def body(i, carry):
         cache, tokens, pos, out = carry
         logits, cache = bundle.decode_step(params, cache, tokens, pos)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)   # (B,)
+        act = i < steps
+        tokens = jnp.where(act[:, None], nxt[:, None], tokens)
+        pos = jnp.where(act, pos + 1, pos)
+        out = out.at[i].set(jnp.where(act, nxt, -1))
+        return cache, tokens, pos, out
+
+    out0 = jnp.full((n, bsz), -1, jnp.int32)
+    return jax.lax.fori_loop(0, n, body, (cache, tokens, pos, out0))
+
+
+def _paged_decode_many_impl(bundle: ModelBundle, plan, n: int, params, cache,
+                            tokens, pos, steps, table):
+    """The paged twin of :func:`_decode_many_impl`: each tick writes k/v
+    through the (loop-constant) page table and dispatches the
+    ``paged_attention`` kernel under the engine's tuned ``plan`` (the
+    kernel asserts the pool layout matches it).  Masked slots freeze
+    exactly as in the dense path — their re-writes land on the same page
+    slot (idempotent) or on the reserved null page (retired rows), never
+    on live data."""
+    bsz = tokens.shape[0]
+
+    def body(i, carry):
+        cache, tokens, pos, out = carry
+        logits, cache = bundle.paged_decode_step(params, cache, tokens, pos,
+                                                 table, plan)
         nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)   # (B,)
         act = i < steps
         tokens = jnp.where(act[:, None], nxt[:, None], tokens)

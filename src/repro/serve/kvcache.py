@@ -1,67 +1,279 @@
 """Paged KV-cache pool: vLLM-style page allocation for the serving engine.
 
 Memory-system rationale (the paper's lens): fixed-size pages sized to the
-transaction optimum (advisor: r_acc wants unit_bytes >= 512B -> page >= 16
-tokens x Hkv x D x 2B) turn per-request cache growth from fragmentation-prone
+transaction optimum (advisor: r_acc wants unit_bytes >= 512B -> page tokens =
+unit / row bytes) turn per-request cache growth from fragmentation-prone
 contiguous buffers into constant-time page appends; the paged_attention
 kernel dereferences the table inside its BlockSpec index_map.
+
+Three layers, mechanism only (the engine owns policy):
+
+- :class:`PageAllocator` — host-side bookkeeping: per-request page tables,
+  refcounted shared pages, a *sorted* free list (lowest page id reused
+  first, so table contents are reproducible run to run), and a typed
+  :class:`PoolExhausted` the engine turns into admission backpressure.
+- :class:`PagedKVCache` — allocator + the device-resident page arrays, with
+  copy-on-write ``append`` (a shared page is copied before its first
+  divergent write, so forked/prefix-shared pages are never mutated).
+- :class:`PrefixIndex` — chain-hash -> page-id map for prefix caching:
+  requests with a common prompt prefix attach the same *full* pages
+  read-only (the paper's access-coalescing move applied to prompts).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+import bisect
+import hashlib
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 
+class PoolExhausted(MemoryError):
+    """No free pages left.  The engine catches this and keeps the request
+    queued (backpressure) instead of crashing the serving loop."""
+
+
+def page_hashes(tokens: np.ndarray, page_size: int) -> List[str]:
+    """Chain hashes of the *full* pages of a prompt.
+
+    ``h_i = sha1(h_{i-1} | tokens[i*page:(i+1)*page])`` — the chain makes a
+    page hash identify the whole prefix up to and including that page, so a
+    flat dict lookup implements longest-prefix matching.
+    """
+    toks = np.asarray(tokens, np.int64)
+    out: List[str] = []
+    h = b""
+    for i in range(len(toks) // page_size):
+        chunk = toks[i * page_size:(i + 1) * page_size]
+        h = hashlib.sha1(h + chunk.tobytes()).digest()
+        out.append(h.hex())
+    return out
+
+
+class PageAllocator:
+    """Host-side page bookkeeping shared by every layer's page array.
+
+    Page ids index the same slot in each layer's pool, so one table serves
+    the whole stack.  ``reserved`` ids (0..reserved-1) are never allocated —
+    the engine reserves page 0 as the *null page* that padded table entries
+    point at, so masked/inactive writes can never corrupt live data.
+    """
+
+    def __init__(self, num_pages: int, page_size: int, reserved: int = 0):
+        if reserved >= num_pages:
+            raise ValueError("reserved pages exhaust the pool")
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self.reserved = reserved
+        self.free: List[int] = list(range(reserved, num_pages))  # kept sorted
+        self.tables: Dict[int, List[int]] = {}
+        self.lengths: Dict[int, int] = {}
+        self.ref: Dict[int, int] = {}
+
+    # ------------------------------------------------------------------
+    def alloc(self, rid: int) -> None:
+        if rid in self.tables:
+            raise ValueError(f"rid {rid} already allocated")
+        self.tables[rid] = []
+        self.lengths[rid] = 0
+
+    def _take_page(self) -> int:
+        if not self.free:
+            raise PoolExhausted(
+                f"KV page pool exhausted ({self.num_pages} pages of "
+                f"{self.page_size} tokens)")
+        pid = self.free.pop(0)  # lowest id first: deterministic reuse order
+        self.ref[pid] = 1
+        return pid
+
+    def _free_page(self, pid: int) -> None:
+        bisect.insort(self.free, pid)
+        del self.ref[pid]
+
+    def can_grow(self, rid: int, new_len: int) -> int:
+        """Largest length <= ``new_len`` coverable without exhausting the
+        pool (the engine's budget cap under pool pressure)."""
+        have = len(self.tables[rid])
+        cap = (have + len(self.free)) * self.page_size
+        return min(new_len, cap)
+
+    def reserve(self, rid: int, new_len: int) -> List[int]:
+        """Ensure the table covers ``new_len`` tokens; returns the newly
+        allocated page ids.  All-or-nothing: raises :class:`PoolExhausted`
+        without partial allocation."""
+        need = -(-new_len // self.page_size)
+        table = self.tables[rid]
+        grow = need - len(table)
+        if grow > len(self.free):
+            raise PoolExhausted(
+                f"need {grow} pages for rid {rid}, only {len(self.free)} free")
+        fresh = [self._take_page() for _ in range(max(0, grow))]
+        table.extend(fresh)
+        self.lengths[rid] = max(self.lengths[rid], new_len)
+        return fresh
+
+    def attach(self, rid: int, pages: Sequence[int], length: int) -> None:
+        """Share existing pages into ``rid``'s table (prefix-cache hit or
+        fork): refcount++ on each, no data copied."""
+        table = self.tables[rid]
+        if table:
+            raise ValueError("attach only onto an empty table")
+        for pid in pages:
+            self.ref[pid] += 1
+            table.append(pid)
+        self.lengths[rid] = length
+
+    def fork(self, src: int, dst: int) -> None:
+        """Clone ``src``'s table into a new request ``dst`` (parallel
+        sampling / beam fork): every page becomes shared; the first
+        divergent append copies-on-write."""
+        self.alloc(dst)
+        self.attach(dst, list(self.tables[src]), self.lengths[src])
+
+    def release(self, rid: int) -> None:
+        """Drop the request's pages; a page returns to the (sorted) free
+        list when its last reference goes.  Unknown/double release raises —
+        silent tolerance hid engine accounting bugs."""
+        if rid not in self.tables:
+            raise KeyError(f"release of unknown rid {rid} (double release?)")
+        for pid in self.tables.pop(rid):
+            self.ref[pid] -= 1
+            if self.ref[pid] == 0:
+                self._free_page(pid)
+        del self.lengths[rid]
+
+    # -- prefix-index pinning ------------------------------------------
+    def pin(self, pid: int) -> None:
+        """Extra reference held by the prefix index: the page outlives its
+        owning request so later prompts can share it."""
+        self.ref[pid] += 1
+
+    def unpin(self, pid: int) -> None:
+        self.ref[pid] -= 1
+        if self.ref[pid] == 0:
+            self._free_page(pid)
+
+    def is_shared(self, pid: int) -> bool:
+        return self.ref.get(pid, 0) > 1
+
+    # ------------------------------------------------------------------
+    @property
+    def pages_in_use(self) -> int:
+        return self.num_pages - self.reserved - len(self.free)
+
+    @property
+    def live_tokens(self) -> int:
+        return sum(self.lengths.values())
+
+
+class PrefixIndex:
+    """Chain-hash -> page id.  Policy lives in the engine: it pins pages on
+    register and evicts unused entries under pool pressure."""
+
+    def __init__(self):
+        self._by_hash: Dict[str, int] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._by_hash)
+
+    def lookup(self, hashes: Sequence[str]) -> List[int]:
+        """Longest run of leading hashes present; returns their page ids."""
+        pages: List[int] = []
+        for h in hashes:
+            pid = self._by_hash.get(h)
+            if pid is None:
+                self.misses += 1
+                break
+            self.hits += 1
+            pages.append(pid)
+        return pages
+
+    def register(self, h: str, pid: int) -> bool:
+        """Idempotent: the first page registered for a hash wins (identical
+        content by construction)."""
+        if h in self._by_hash:
+            return False
+        self._by_hash[h] = pid
+        return True
+
+    def evict_unused(self, alloc: PageAllocator) -> int:
+        """Drop every entry whose page is only kept alive by the index
+        (ref == 1): the deterministic response to pool pressure.  Returns
+        the number of pages freed."""
+        drop = [h for h, pid in self._by_hash.items() if alloc.ref.get(pid) == 1]
+        for h in drop:
+            alloc.unpin(self._by_hash.pop(h))
+        return len(drop)
+
+
 @dataclass
-class PagedKVCache:
+class PagedKVCache(PageAllocator):
+    """Single-layer page pool with device-resident k/v arrays.
+
+    The serving engine keeps one :class:`PageAllocator` for the whole stack
+    (the model pytree holds per-layer page arrays); this class is the
+    self-contained one-layer variant the kernels and tests drive directly.
+    """
     num_pages: int
     page_size: int
     num_kv_heads: int
     head_dim: int
     dtype: str = "float32"
+    reserved: int = 0
 
     def __post_init__(self):
+        PageAllocator.__init__(self, self.num_pages, self.page_size,
+                               self.reserved)
         shape = (self.num_pages, self.page_size, self.num_kv_heads,
                  self.head_dim)
         self.k_pages = jnp.zeros(shape, jnp.dtype(self.dtype))
         self.v_pages = jnp.zeros(shape, jnp.dtype(self.dtype))
-        self.free: List[int] = list(range(self.num_pages))
-        self.tables: Dict[int, List[int]] = {}
-        self.lengths: Dict[int, int] = {}
 
     # ------------------------------------------------------------------
-    def alloc(self, rid: int):
-        assert rid not in self.tables
-        self.tables[rid] = []
-        self.lengths[rid] = 0
+    def _cow(self, rid: int, logical: int) -> int:
+        """Copy-on-write: give ``rid`` a private copy of a shared page
+        before writing into it.  The shared original is never mutated."""
+        old = self.tables[rid][logical]
+        if not self.is_shared(old):
+            return old
+        new = self._take_page()
+        self.k_pages = self.k_pages.at[new].set(self.k_pages[old])
+        self.v_pages = self.v_pages.at[new].set(self.v_pages[old])
+        self.ref[old] -= 1  # shared => never drops to 0 here
+        self.tables[rid][logical] = new
+        return new
 
-    def release(self, rid: int):
-        self.free.extend(self.tables.pop(rid, []))
-        self.lengths.pop(rid, None)
-
-    def _ensure_capacity(self, rid: int, new_len: int):
-        need = -(-new_len // self.page_size)
-        while len(self.tables[rid]) < need:
-            if not self.free:
-                raise MemoryError("KV page pool exhausted")
-            self.tables[rid].append(self.free.pop())
-
-    # ------------------------------------------------------------------
     def append(self, rid: int, k: jax.Array, v: jax.Array):
-        """Append (S, Hkv, D) keys/values for one request."""
+        """Append (S, Hkv, D) keys/values for one request.  All-or-nothing:
+        the page budget (fresh pages + copy-on-write copies of shared pages
+        in the write range) is checked before any table/length mutation, so
+        :class:`PoolExhausted` never leaves lengths claiming unwritten
+        tokens."""
         s = k.shape[0]
         start = self.lengths[rid]
-        self._ensure_capacity(rid, start + s)
+        table = self.tables[rid]
+        need_fresh = max(0, -(-(start + s) // self.page_size) - len(table))
+        end_li = (start + s - 1) // self.page_size
+        need_cow = sum(
+            1 for li in range(start // self.page_size,
+                              min(len(table), end_li + 1))
+            if self.is_shared(table[li]))
+        if need_fresh + need_cow > len(self.free):
+            raise PoolExhausted(
+                f"append of {s} tokens needs {need_fresh} fresh + "
+                f"{need_cow} copy-on-write pages, only {len(self.free)} free")
+        self.reserve(rid, start + s)
         off = 0
         while off < s:
             logical = (start + off) // self.page_size
             slot = (start + off) % self.page_size
             n = min(self.page_size - slot, s - off)
-            pid = self.tables[rid][logical]
+            pid = self._cow(rid, logical)
             self.k_pages = self.k_pages.at[pid, slot:slot + n].set(
                 k[off:off + n])
             self.v_pages = self.v_pages.at[pid, slot:slot + n].set(
@@ -69,10 +281,13 @@ class PagedKVCache:
             off += n
         self.lengths[rid] = start + s
 
-    def batch_view(self, rids: List[int]) -> Tuple[jax.Array, jax.Array]:
-        """(page_table (B, N), valid_len (B,)) padded to the max page count.
-        Unused table entries point at page 0 (masked by valid_len)."""
-        n = max(1, max(len(self.tables[r]) for r in rids))
+    def batch_view(self, rids: List[int],
+                   width: Optional[int] = None) -> Tuple[jax.Array, jax.Array]:
+        """(page_table (B, N), valid_len (B,)) padded to ``width`` logical
+        pages (default: the max across ``rids``).  Unused table entries
+        point at page 0 — reserve it as a null page (``reserved=1``) when
+        padded entries may be written through (masked decode ticks)."""
+        n = width or max(1, max(len(self.tables[r]) for r in rids))
         table = np.zeros((len(rids), n), np.int32)
         for i, r in enumerate(rids):
             pages = self.tables[r]
@@ -81,5 +296,7 @@ class PagedKVCache:
         return jnp.asarray(table), jnp.asarray(vlen)
 
     @property
-    def pages_in_use(self) -> int:
-        return self.num_pages - len(self.free)
+    def page_bytes(self) -> int:
+        """HBM bytes of one page (k + v)."""
+        return (2 * self.page_size * self.num_kv_heads * self.head_dim
+                * jnp.dtype(self.dtype).itemsize)

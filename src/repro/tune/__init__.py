@@ -16,13 +16,13 @@ from repro.tune.cache import (DEFAULT_PATH, PlanCache,  # noqa: F401
                               default_cache, plan_for, set_default_cache)
 from repro.tune.plan import (KERNELS, KernelPlan, auto_interpret,  # noqa: F401
                              derive_attention_plan, derive_decode_plan,
-                             derive_matmul_plan, derive_plan, plan_key,
-                             spec_fingerprint)
+                             derive_matmul_plan, derive_paged_plan,
+                             derive_plan, plan_key, spec_fingerprint)
 
 __all__ = [
     "KernelPlan", "KERNELS", "auto_interpret", "plan_key", "spec_fingerprint",
     "derive_plan", "derive_attention_plan", "derive_decode_plan",
-    "derive_matmul_plan",
+    "derive_matmul_plan", "derive_paged_plan",
     "PlanCache", "DEFAULT_PATH", "default_cache", "set_default_cache",
     "plan_for",
 ]

@@ -18,12 +18,14 @@ from dataclasses import dataclass, field
 from typing import Any, Dict, Optional, Tuple
 
 from repro.core.autotune import tune_attention_blocks, tune_pattern
-from repro.core.memmodel import TPUSpec, V5E, predict_bw, vmem_ok
+from repro.core.memmodel import (TPUSpec, V5E, next_pow2, predict_bw,
+                                 vmem_ok)
 from repro.core.patterns import Knobs, Pattern
 
-# the kernels a plan can target (ops.py wrappers consume these; the paged
-# kernel's block is pinned by the page-pool layout, so it takes no plan)
-KERNELS = ("flash_attention", "decode_attention", "matmul")
+# the kernels a plan can target (ops.py wrappers consume these; for the
+# paged kernel the plan's bkv IS the page size — the pool is laid out from
+# the plan, so tuning reshapes serving memory itself)
+KERNELS = ("flash_attention", "decode_attention", "matmul", "paged_attention")
 
 
 def auto_interpret() -> bool:
@@ -82,6 +84,13 @@ class KernelPlan:
     def burst_bytes(self) -> int:
         """Contiguous DMA size: the kv/rhs tile."""
         return max(1, self.bkv * self.head_dim * self.dtype_bytes)
+
+    @property
+    def page_size(self) -> int:
+        """Paged-attention reading of ``bkv``: tokens per KV page.  The
+        serving engine shapes its page pool from this, so the r_acc
+        transaction-optimum rule reaches HBM layout, not just the kernel."""
+        return self.bkv
 
     def knobs(self) -> Knobs:
         """The plan expressed in the paper's knob vocabulary (for vmem_ok /
@@ -198,6 +207,35 @@ def derive_decode_plan(*, seq_len: int, head_dim: int, dtype: str = "bfloat16",
         head_dim=head_dim, predicted_gbps=tuned.predicted_gbps, source=source)
 
 
+def derive_paged_plan(*, max_len: int, head_dim: int, dtype: str = "bfloat16",
+                      spec: Optional[TPUSpec] = None, calibration=None,
+                      vmem_budget_fraction: float = 0.4) -> KernelPlan:
+    """Page size (``bkv``) for the paged-KV pool + kernel.
+
+    Paged decode is the paper's `r_acc` engine: each sequence gathers its
+    pages through a table indirection, so the *page* is the transaction.
+    The advisor's rule is ``unit_bytes >= 512B``; bigger pages only add
+    internal fragmentation (the resource axis of the paper's
+    throughput-vs-resources tradeoff), so the page is the *smallest* pow2
+    token count whose row block crosses that optimum — clamped to the
+    sequence budget so a short ``max_len`` is never a single page.
+    Pipeline depth (outstanding gathers) comes from the tuned r_acc knobs.
+    """
+    import jax.numpy as jnp
+    spec, source = _resolve_spec(spec, calibration)
+    db = jnp.dtype(dtype).itemsize
+    row = max(1, head_dim * db)
+    tuned = tune_pattern(Pattern.R_ACC, spec=spec,
+                         vmem_budget_fraction=vmem_budget_fraction,
+                         calibration=calibration)
+    page = next_pow2(-(-512 // row))
+    page = max(8, min(page, max(8, next_pow2(max_len) // 2)))
+    return KernelPlan(
+        kernel="paged_attention", bq=1, bkv=page,
+        pipeline_depth=tuned.knobs.outstanding, dtype=dtype, interpret=None,
+        head_dim=head_dim, predicted_gbps=tuned.predicted_gbps, source=source)
+
+
 def derive_matmul_plan(*, m: int, n: int, k: int, dtype: str = "bfloat16",
                        spec: Optional[TPUSpec] = None, calibration=None,
                        vmem_budget_fraction: float = 0.4) -> KernelPlan:
@@ -236,6 +274,11 @@ def derive_plan(kernel: str, *, shape_sig: Tuple[int, ...], dtype: str,
         return derive_decode_plan(seq_len=seq_len, head_dim=head_dim,
                                   dtype=dtype, spec=spec,
                                   calibration=calibration)
+    if kernel == "paged_attention":
+        max_len, head_dim = shape_sig
+        return derive_paged_plan(max_len=max_len, head_dim=head_dim,
+                                 dtype=dtype, spec=spec,
+                                 calibration=calibration)
     if kernel == "matmul":
         m, n, k = shape_sig
         return derive_matmul_plan(m=m, n=n, k=k, dtype=dtype, spec=spec,

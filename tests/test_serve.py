@@ -132,11 +132,14 @@ def test_fast_path_matches_reference_greedy(gemma_setup):
 
 
 def test_prompt_bucketing_dedups_prefill_traces(gemma_setup):
-    """Prompts of different lengths inside one pow2 bucket share a compile."""
+    """Prompts of different lengths inside one pow2 bucket share a compile.
+    (First tokens differ so the paged prefix cache can't shorten any prompt
+    into a different chunk bucket — that behavior has its own test.)"""
     cfg, bundle, params = gemma_setup
     eng = ServeEngine(bundle, params, batch_size=2, max_len=64)
     for i, n in enumerate((9, 11, 13, 16)):              # all bucket to 16
-        eng.add_request(Request(rid=i, prompt=np.arange(n, dtype=np.int32),
+        eng.add_request(Request(rid=i,
+                                prompt=np.arange(n, dtype=np.int32) + i,
                                 max_new_tokens=2))
     stats = eng.run_to_completion()
     assert stats.prefills == 4

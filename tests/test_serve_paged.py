@@ -1,0 +1,342 @@
+"""Paged continuous-batching backend: pool mechanics, parity, prefix cache.
+
+The fast ones run in tier-1; the cross-backend serve-parity drains are
+``@pytest.mark.slow`` and run in the CI bench-smoke job instead (they drain
+two engines per config).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, override, smoke_config
+from repro.models import RuntimeFlags, build
+from repro.serve import (PageAllocator, PagedKVCache, PoolExhausted,
+                         PrefixIndex, Request, ServeEngine, page_hashes)
+
+FLAGS = RuntimeFlags(attn_impl="chunked", attn_bq=16, attn_bkv=16,
+                     moe_impl="dense", loss_chunk=16)
+
+
+# ---------------------------------------------------------------------------
+# PageAllocator / PagedKVCache mechanics (satellite 1)
+# ---------------------------------------------------------------------------
+
+def test_release_raises_on_unknown_and_double_release():
+    a = PageAllocator(8, 4)
+    a.alloc(0)
+    a.reserve(0, 6)
+    a.release(0)
+    with pytest.raises(KeyError):
+        a.release(0)            # double release
+    with pytest.raises(KeyError):
+        a.release(99)           # never allocated
+
+
+def test_free_list_reuse_is_deterministic_sorted():
+    """Released pages are reused lowest-id-first, so page-table contents are
+    reproducible run to run (the old stack-order pop was allocation-history
+    dependent)."""
+    a = PageAllocator(10, 4, reserved=1)
+    a.alloc(0); a.reserve(0, 12)          # pages 1,2,3
+    a.alloc(1); a.reserve(1, 8)           # pages 4,5
+    assert a.tables[0] == [1, 2, 3] and a.tables[1] == [4, 5]
+    a.release(0)
+    a.alloc(2); a.reserve(2, 16)          # refills from the *sorted* holes
+    assert a.tables[2] == [1, 2, 3, 6]
+    a.release(1)
+    a.release(2)
+    assert a.free == list(range(1, 10))
+
+
+def test_reserve_is_all_or_nothing_and_raises_typed():
+    a = PageAllocator(4, 4)
+    a.alloc(0)
+    a.reserve(0, 8)                       # 2 of 4 pages
+    with pytest.raises(PoolExhausted):
+        a.reserve(0, 24)                  # needs 4 more, only 2 free
+    assert len(a.tables[0]) == 2          # nothing partially allocated
+    assert a.can_grow(0, 24) == 16        # the engine's backpressure cap
+    a.reserve(0, 16)                      # the feasible target still works
+    assert a.pages_in_use == 4
+
+
+def test_append_spans_page_boundaries():
+    pool = PagedKVCache(num_pages=5, page_size=4, num_kv_heads=1, head_dim=2)
+    pool.alloc(0)
+    k = jnp.arange(10 * 2, dtype=jnp.float32).reshape(10, 1, 2)
+    pool.append(0, k[:3], k[:3])          # partial first page
+    pool.append(0, k[3:10], k[3:10])      # spans pages 0->1->2
+    assert pool.lengths[0] == 10 and len(pool.tables[0]) == 3
+    table, vlen = pool.batch_view([0])
+    gathered = pool.k_pages[table[0]].reshape(-1, 1, 2)[:10]
+    np.testing.assert_array_equal(np.asarray(gathered), np.asarray(k))
+
+
+def test_fork_copy_on_write_never_mutates_shared_pages():
+    """satellite: after a fork, the first divergent append copies the shared
+    page; the original bytes are bit-identical before and after."""
+    pool = PagedKVCache(num_pages=8, page_size=4, num_kv_heads=1, head_dim=2)
+    pool.alloc(0)
+    pool.append(0, jnp.ones((6, 1, 2)), jnp.ones((6, 1, 2)))
+    shared_before = np.asarray(pool.k_pages[np.asarray(pool.tables[0])])
+    pool.fork(0, 1)
+    assert pool.tables[1] == pool.tables[0]
+    assert all(pool.is_shared(p) for p in pool.tables[0])
+    pool.append(1, jnp.full((3, 1, 2), 7.0), jnp.full((3, 1, 2), 7.0))
+    # the partially-filled page diverged: rid 1 got a private copy
+    assert pool.tables[1][0] == pool.tables[0][0]      # full page still shared
+    assert pool.tables[1][1] != pool.tables[0][1]      # COW split
+    shared_after = np.asarray(pool.k_pages[np.asarray(pool.tables[0])])
+    np.testing.assert_array_equal(shared_before, shared_after)
+    # rid 1 sees its own timeline: old rows + the divergent append
+    priv = np.asarray(pool.k_pages[pool.tables[1][1]])
+    np.testing.assert_array_equal(priv[:2], shared_before[1][:2])
+    assert (priv[2:] == 7.0).all()
+
+
+def test_append_cow_budget_is_all_or_nothing():
+    """An append that cannot afford its copy-on-write pages raises BEFORE
+    mutating lengths/table — no phantom tokens claimed as valid."""
+    pool = PagedKVCache(num_pages=3, page_size=4, num_kv_heads=1, head_dim=2)
+    pool.alloc(0)
+    pool.append(0, jnp.ones((6, 1, 2)), jnp.ones((6, 1, 2)))
+    pool.fork(0, 1)
+    with pytest.raises(PoolExhausted):
+        # needs 1 fresh page + 1 COW copy of the shared partial page,
+        # but only 1 page is free
+        pool.append(1, jnp.ones((6, 1, 2)), jnp.ones((6, 1, 2)))
+    assert pool.lengths[1] == 6 and len(pool.tables[1]) == 2
+
+
+def test_prefix_index_longest_match_and_eviction():
+    a = PageAllocator(8, 4)
+    a.alloc(0); a.reserve(0, 12)
+    idx = PrefixIndex()
+    h = page_hashes(np.arange(12), 4)
+    for hh, pid in zip(h, a.tables[0]):
+        idx.register(hh, pid)
+        a.pin(pid)
+    # a longer prompt sharing 2 pages matches exactly its leading run
+    h2 = page_hashes(np.concatenate([np.arange(8), [99, 99, 99, 99]]), 4)
+    assert idx.lookup(h2) == a.tables[0][:2]
+    a.release(0)
+    assert a.pages_in_use == 3            # pinned pages survive release
+    freed = idx.evict_unused(a)
+    assert freed == 3 and a.pages_in_use == 0 and len(idx) == 0
+
+
+# ---------------------------------------------------------------------------
+# engine: paged vs dense parity + churn (satellite 3; acceptance)
+# ---------------------------------------------------------------------------
+
+def _drain_tokens(bundle, params, *, backend, prompts, max_new, bsz=2,
+                  max_len=64, **kw):
+    eng = ServeEngine(bundle, params, batch_size=bsz, max_len=max_len,
+                      cache_backend=backend, **kw)
+    reqs = [Request(rid=i, prompt=p, max_new_tokens=max_new)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        eng.add_request(r)
+    stats = eng.run_to_completion()
+    return [r.out_tokens for r in reqs], stats, eng
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", ["gemma-2b", "phi4-mini-3.8b"])
+def test_paged_matches_dense_token_for_token(arch):
+    """Acceptance: greedy decode over the page pool reproduces the dense
+    engine exactly — non-divisible prompt lengths, slot churn (6 requests
+    through 2 slots with release/realloc reuse), chunked prefill."""
+    cfg = smoke_config(ARCHS[arch])
+    bundle = build(cfg, FLAGS)
+    params = bundle.init(jax.random.PRNGKey(2))
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, cfg.vocab_size, size=int(n)).astype(np.int32)
+               for n in (5, 13, 9, 27, 7, 18)]   # none divisible by page=8
+    dense, sd, _ = _drain_tokens(bundle, params, backend="dense",
+                                 prompts=prompts, max_new=6)
+    paged, sp, eng = _drain_tokens(bundle, params, backend="paged",
+                                   prompts=prompts, max_new=6,
+                                   prefill_chunk=8)
+    assert paged == dense
+    assert sp.tokens_out == sd.tokens_out == 6 * 6
+    # slot churn really released: after the drain only prefix-pinned pages
+    # may persist in the pool
+    assert eng.alloc.pages_in_use * eng.page <= sum(len(p) for p in prompts)
+
+
+@pytest.mark.slow
+def test_paged_matches_dense_bfloat16():
+    cfg = override(smoke_config(ARCHS["gemma-2b"]), compute_dtype="bfloat16")
+    bundle = build(cfg, FLAGS)
+    params = bundle.init(jax.random.PRNGKey(3))
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+               for n in (11, 6)]
+    dense, _, _ = _drain_tokens(bundle, params, backend="dense",
+                                prompts=prompts, max_new=5)
+    paged, _, _ = _drain_tokens(bundle, params, backend="paged",
+                                prompts=prompts, max_new=5)
+    assert paged == dense
+
+
+def test_paged_is_default_for_pure_attention_and_dense_for_the_rest():
+    gemma = build(smoke_config(ARCHS["gemma-2b"]), FLAGS)
+    assert gemma.paged_supported()
+    mamba = build(smoke_config(ARCHS["mamba2-130m"]), FLAGS)
+    assert not mamba.paged_supported()
+    windowed = build(smoke_config(ARCHS["gemma2-27b"]), FLAGS)
+    assert not windowed.paged_supported()
+    int8 = build(smoke_config(ARCHS["gemma-2b"]),
+                 RuntimeFlags(attn_impl="chunked", kv_dtype="int8"))
+    assert not int8.paged_supported()
+    params = mamba.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(mamba, params, batch_size=1, max_len=32)
+    assert eng.backend == "dense"       # auto fallback
+    with pytest.raises(ValueError):
+        ServeEngine(mamba, params, batch_size=1, max_len=32,
+                    cache_backend="paged")
+
+
+def test_pool_exhaustion_becomes_backpressure(gemma_env=None):
+    """A pool too small for the whole batch keeps requests queued (typed
+    backpressure, not a crash) and still completes them as pages free."""
+    cfg = smoke_config(ARCHS["gemma-2b"])
+    bundle = build(cfg, FLAGS)
+    params = bundle.init(jax.random.PRNGKey(4))
+    # page=8, 3 usable pages: one 20-token request needs 3 -> solo admission
+    eng = ServeEngine(bundle, params, batch_size=2, max_len=32,
+                      num_pages=4, prefix_cache=False)
+    for i in range(3):
+        eng.add_request(Request(rid=i,
+                                prompt=np.arange(17, dtype=np.int32) + i,
+                                max_new_tokens=4))
+    stats = eng.run_to_completion()
+    assert stats.tokens_out == 3 * 4
+    assert stats.pool_stalls > 0        # admission actually backed off
+    assert eng.alloc.pages_in_use == 0
+
+
+def test_impossible_prompt_raises_instead_of_silent_drop():
+    """A prompt no amount of backpressure can ever admit (needs more pages
+    than the pool holds) must raise loudly, not sit queued forever while
+    run_to_completion returns 'drained'."""
+    cfg = smoke_config(ARCHS["gemma-2b"])
+    bundle = build(cfg, FLAGS)
+    params = bundle.init(jax.random.PRNGKey(4))
+    eng = ServeEngine(bundle, params, batch_size=1, max_len=32,
+                      num_pages=3)          # 2 usable pages of 8 = 16 tokens
+    eng.add_request(Request(rid=0, prompt=np.arange(17, dtype=np.int32),
+                            max_new_tokens=2))
+    with pytest.raises(ValueError, match="pages"):
+        eng.run_to_completion()
+
+
+def test_explicit_page_size_reshapes_pool_and_plan():
+    """page_size overrides the derived plan; the plan handed to the kernel
+    must describe the pool actually laid out (the kernel asserts it)."""
+    cfg = smoke_config(ARCHS["gemma-2b"])
+    bundle = build(cfg, FLAGS)
+    params = bundle.init(jax.random.PRNGKey(4))
+    eng = ServeEngine(bundle, params, batch_size=1, max_len=32, page_size=4)
+    assert eng.page == 4 and eng.plan.page_size == 4
+    req = Request(rid=0, prompt=np.arange(6, dtype=np.int32),
+                  max_new_tokens=4)
+    eng.add_request(req)
+    eng.run_to_completion()
+    assert len(req.out_tokens) == 4
+
+
+def test_long_prompt_prefills_in_chunks_between_decode_ticks():
+    """Chunked prefill: a long prompt admits in prefill_chunk pieces and
+    in-flight decode keeps ticking between chunks."""
+    cfg = smoke_config(ARCHS["gemma-2b"])
+    bundle = build(cfg, FLAGS)
+    params = bundle.init(jax.random.PRNGKey(5))
+    eng = ServeEngine(bundle, params, batch_size=2, max_len=64, window=2,
+                      prefill_chunk=8)
+    short = Request(rid=0, prompt=np.arange(4, dtype=np.int32),
+                    max_new_tokens=12)
+    long = Request(rid=1, prompt=np.arange(40, dtype=np.int32) + 100,
+                   max_new_tokens=4)
+    eng.add_request(short)
+    eng.add_request(long)
+    stats = eng.run_to_completion()
+    assert len(short.out_tokens) == 12 and len(long.out_tokens) == 4
+    assert stats.prefill_chunks >= 1 + 5   # 40 tokens / 8-token chunks
+    # decode went on while the long prompt was still prefilling: more
+    # dispatches than a single post-prefill drain would need
+    assert stats.decode_dispatches > 2
+
+
+# ---------------------------------------------------------------------------
+# prefix caching (tentpole; satellite 3's fork test is above)
+# ---------------------------------------------------------------------------
+
+def test_prefix_cache_hits_and_outputs_unchanged():
+    """Requests sharing a >= 1-page prompt prefix reuse its pages read-only:
+    hit accounting moves, outputs stay bit-identical to an uncached run."""
+    cfg = smoke_config(ARCHS["gemma-2b"])
+    bundle = build(cfg, FLAGS)
+    params = bundle.init(jax.random.PRNGKey(6))
+    rng = np.random.default_rng(9)
+    common = rng.integers(0, cfg.vocab_size, size=16).astype(np.int32)
+    prompts = [np.concatenate([common, rng.integers(
+        0, cfg.vocab_size, size=5).astype(np.int32)]) for _ in range(4)]
+    # batch_size=1 serializes requests => later ones see registered pages
+    cached, sc, eng = _drain_tokens(bundle, params, backend="paged",
+                                    prompts=prompts, max_new=4, bsz=1)
+    uncached, su, _ = _drain_tokens(bundle, params, backend="paged",
+                                    prompts=prompts, max_new=4, bsz=1,
+                                    prefix_cache=False)
+    assert cached == uncached
+    assert su.prefix_hit_tokens == 0
+    assert sc.prefix_hit_tokens == 3 * 16   # requests 2..4 reuse both pages
+    # shared pages survive in the pool for future hits (pinned by the index)
+    assert eng.alloc.pages_in_use >= 2
+
+
+def test_shared_prefix_pages_never_written_by_later_requests():
+    """The engine-level never-write guarantee: page bytes registered by the
+    first request are bit-identical after later requests decode over them."""
+    cfg = smoke_config(ARCHS["gemma-2b"])
+    bundle = build(cfg, FLAGS)
+    params = bundle.init(jax.random.PRNGKey(7))
+    common = (np.arange(16, dtype=np.int32) * 3 + 1) % cfg.vocab_size
+    eng = ServeEngine(bundle, params, batch_size=1, max_len=64)
+    eng.add_request(Request(rid=0, prompt=common, max_new_tokens=3))
+    eng.run_to_completion()
+    shared = sorted(eng.prefix._by_hash.values())
+    assert len(shared) == 2
+    def snapshot():
+        leaf = jax.tree_util.tree_leaves(eng.cache)[0]
+        # stacked pools carry LAYERS first: (nb, P, page, Hkv, D)
+        return np.asarray(leaf[:, shared] if leaf.ndim == 5 else leaf[shared])
+    before = snapshot()
+    tail = np.asarray([7, 7, 7, 7, 7], np.int32)
+    eng.add_request(Request(rid=1,
+                            prompt=np.concatenate([common, tail]),
+                            max_new_tokens=6))
+    stats = eng.run_to_completion()
+    assert stats.prefix_hit_tokens == 16
+    np.testing.assert_array_equal(before, snapshot())
+
+
+# ---------------------------------------------------------------------------
+# memory figure of merit (acceptance)
+# ---------------------------------------------------------------------------
+
+def test_live_bytes_below_dense_footprint():
+    """The whole point: live-token HBM bytes strictly below the dense
+    ``batch x max_len`` commitment for a short-request mix."""
+    cfg = smoke_config(ARCHS["gemma-2b"])
+    bundle = build(cfg, FLAGS)
+    params = bundle.init(jax.random.PRNGKey(8))
+    prompts = [np.arange(6, dtype=np.int32) + 10 * i for i in range(4)]
+    _, _, dense_eng = _drain_tokens(bundle, params, backend="dense",
+                                    prompts=prompts, max_new=4, bsz=4)
+    _, _, paged_eng = _drain_tokens(bundle, params, backend="paged",
+                                    prompts=prompts, max_new=4, bsz=4)
+    assert paged_eng.live_kv_bytes_peak() < dense_eng.live_kv_bytes_peak()
+    assert paged_eng.stats.pages_peak <= paged_eng.num_pages - 1

@@ -16,6 +16,7 @@ SIGS = {
     "flash_attention": (512, 768, 64),
     "decode_attention": (4096, 128),
     "matmul": (512, 512, 256),
+    "paged_attention": (4096, 128),
 }
 
 
@@ -40,9 +41,31 @@ def test_derive_plan_every_kernel(kernel):
 
 
 def test_unknown_kernel_rejected():
-    # the paged kernel's block is pinned by the page-pool layout: no plan
     with pytest.raises(ValueError):
-        derive_plan("paged_attention", shape_sig=(4096, 128), dtype="bfloat16")
+        derive_plan("warp_attention", shape_sig=(4096, 128), dtype="bfloat16")
+
+
+def test_paged_plan_page_size_is_transaction_optimum():
+    """satellite: the paged plan's bkv IS the page size — the smallest pow2
+    token count whose contiguous row block crosses the advisor's >= 512B
+    transaction optimum (r_acc), clamped so max_len spans >= 2 pages."""
+    plan = derive_plan("paged_attention", shape_sig=(4096, 128),
+                       dtype="bfloat16")
+    assert plan.page_size == plan.bkv
+    assert plan.page_size & (plan.page_size - 1) == 0      # pow2
+    assert plan.page_size * plan.head_dim * plan.dtype_bytes >= 512
+    # halving the page would drop below the optimum (or below the 8 floor)
+    half = plan.page_size // 2
+    assert half < 8 or half * plan.head_dim * plan.dtype_bytes < 512
+    # wider rows need fewer tokens per page; narrower rows need more
+    wide = derive_plan("paged_attention", shape_sig=(4096, 256),
+                       dtype="bfloat16")
+    narrow = derive_plan("paged_attention", shape_sig=(4096, 16),
+                         dtype="float32")
+    assert wide.page_size <= plan.page_size <= narrow.page_size
+    # a tiny max_len clamps: never a single page per sequence
+    tiny = derive_plan("paged_attention", shape_sig=(16, 16), dtype="float32")
+    assert tiny.page_size == 8
 
 
 def test_plan_blocks_clamped_to_shape():

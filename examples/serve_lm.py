@@ -62,10 +62,15 @@ def _drive(bundle, params, args, *, window, bucket, label, backend=None):
           f"{stats.decode_dispatches} decode dispatches, "
           f"{tpd:.1f} ticks/dispatch, "
           f"{compiles} prefill compiles cold{extra})")
+    if eng.backend == "paged":
+        pages = f" ({eng.stats.pages_peak} pages"
+        if eng.stats.ring_pages_peak:
+            pages += f" + {eng.stats.ring_pages_peak} ring pages"
+        pages += f" of {eng.page} tokens)"
+    else:
+        pages = " (dense: committed upfront)"
     print(f"  {'':10s} KV HBM: {eng.kv_bytes()/1024:.0f} KiB allocated, "
-          f"{eng.live_kv_bytes_peak()/1024:.0f} KiB live-token peak"
-          + (f" ({eng.stats.pages_peak} pages of {eng.page} tokens)"
-             if eng.backend == "paged" else " (dense: committed upfront)"))
+          f"{eng.live_kv_bytes_peak()/1024:.0f} KiB live-token peak" + pages)
     return stats.tokens_out / dt, eng
 
 
@@ -82,8 +87,9 @@ def main():
                     help="KV backend: 'auto' pages pure full-attention "
                          "stacks, dense elsewhere; 'dense'/'paged' pin it")
     ap.add_argument("--kv-int8", action="store_true",
-                    help="int8 KV cache (the paper's unit-size lever; "
-                         "forces the dense backend)")
+                    help="int8 KV cache (the paper's data-width lever; the "
+                         "paged backend stores int8 pages + scale lanes and "
+                         "derives a proportionally larger page)")
     args = ap.parse_args()
 
     cfg = smoke_config(ARCHS[args.arch])

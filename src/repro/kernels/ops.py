@@ -79,12 +79,16 @@ def decode_attention(q, k, v, valid_len, *, softcap=None, scale=None,
 
 
 def paged_attention(q, k_pages, v_pages, page_table, valid_len, *,
-                    scale=None, interpret=None, plan=None):
+                    scale=None, softcap=None, window=None, k_scale=None,
+                    v_scale=None, interpret=None, plan=None):
     """Page size is pinned by the pool layout (shaped from the plan at
     pool-creation time); ``interpret`` passes through unresolved so a plan's
-    pinned mode wins."""
+    pinned mode wins.  ``softcap``/``window``/``k_scale``/``v_scale`` select
+    the softcapped, ring-table, and int8-dequant kernel paths."""
     return _pa.paged_attention(q, k_pages, v_pages, page_table, valid_len,
-                               scale=scale, interpret=interpret, plan=plan)
+                               scale=scale, softcap=softcap, window=window,
+                               k_scale=k_scale, v_scale=v_scale,
+                               interpret=interpret, plan=plan)
 
 
 # re-export oracles for tests/benches

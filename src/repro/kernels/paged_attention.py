@@ -6,6 +6,21 @@ a per-sequence page table — the kernel's BlockSpec index_map dereferences the
 scalar-prefetched table (``table[b, j]``), exactly the mechanism
 ``random_gather`` benchmarks (r_acc over page-sized units: the advisor's
 "unit_bytes: row width >= 512B" guidance is why pages are >= 16 tokens).
+
+Three serving-path extensions share the one kernel body:
+
+- ``softcap`` — gemma2-style logit soft-capping applied to the raw scores
+  before masking (mirrors the dense kernels' ``attn_logit_softcap``).
+- ``window`` — *ring* tables for sliding-window layers: the table holds
+  ``ring_slots = ceil(window/page)+1`` rotating slots and the kernel
+  recovers each slot's absolute positions from ``valid_len`` alone
+  (slot ``j`` holds logical page ``L_j = cur_L - ((cur_L - j) mod R)``),
+  masking both the causal bound and the window's trailing edge — stale
+  tokens left from a rotated-out page land on "future" positions and mask
+  away for free.
+- ``k_scale``/``v_scale`` — int8 KV pages carry a per-token fp32 scale lane
+  per page ``(P, page)``; dequantization is fused into the score/value
+  loads, so the HBM stream stays at the paper's halved unit size.
 """
 from __future__ import annotations
 
@@ -20,9 +35,14 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _kernel(table_ref, vlen_ref, q_ref, kp_ref, vp_ref, o_ref,
-            m_ref, l_ref, acc_ref, *, scale: float, page: int, n_pages: int,
-            hkv: int):
+def _kernel(table_ref, vlen_ref, q_ref, kp_ref, vp_ref, *rest,
+            scale: float, page: int, n_pages: int, hkv: int,
+            softcap: Optional[float], window: Optional[int], quant: bool):
+    if quant:
+        ks_ref, vs_ref = rest[0], rest[1]
+        o_ref, m_ref, l_ref, acc_ref = rest[2:]
+    else:
+        o_ref, m_ref, l_ref, acc_ref = rest
     j = pl.program_id(1)
 
     @pl.when(j == 0)
@@ -38,13 +58,32 @@ def _kernel(table_ref, vlen_ref, q_ref, kp_ref, vp_ref, o_ref,
     q = q_ref[0].astype(jnp.float32) * scale                 # (g, d)
     k = kp_ref[0].astype(jnp.float32)                        # (page, d)
     v = vp_ref[0].astype(jnp.float32)
+    if quant:
+        k = k * ks_ref[0][:, None]
+        v = v * vs_ref[0][:, None]
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (g, page)
-    pos = j * page + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-    s = jnp.where(pos < valid, s, NEG_INF)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    if window is None:
+        base = j * page
+    else:
+        # ring slot j currently holds logical page L_j = the largest
+        # L <= cur_L with L % ring_slots == j (negative L => not yet live)
+        cur_l = (valid - 1) // page
+        delta = jax.lax.rem(cur_l - j, n_pages)
+        delta = jnp.where(delta < 0, delta + n_pages, delta)
+        base = (cur_l - delta) * page
+    pos = base + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    msk = (pos < valid) & (pos >= 0)
+    if window is not None:
+        msk &= pos > valid - 1 - window
+    s = jnp.where(msk, s, NEG_INF)
 
     m_prev = m_ref[...]
     m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
-    p = jnp.exp(s - m_new)
+    # mask p explicitly: a fully-masked page visited while m is still at its
+    # NEG_INF init (a rotated-out ring slot) must contribute exactly zero
+    p = jnp.where(msk, jnp.exp(s - m_new), 0.0)
     alpha = jnp.exp(m_prev - m_new)
     l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
     acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(p, v)
@@ -56,15 +95,24 @@ def _kernel(table_ref, vlen_ref, q_ref, kp_ref, vp_ref, o_ref,
                     jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("scale", "interpret", "plan"))
+@functools.partial(jax.jit, static_argnames=("scale", "softcap", "window",
+                                             "interpret", "plan"))
 def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
                     page_table: jax.Array, valid_len: jax.Array, *,
                     scale: Optional[float] = None,
+                    softcap: Optional[float] = None,
+                    window: Optional[int] = None,
+                    k_scale: Optional[jax.Array] = None,
+                    v_scale: Optional[jax.Array] = None,
                     interpret: Optional[bool] = None,
                     plan=None) -> jax.Array:
     """q: (B, Hq, D); k/v_pages: (P, page, Hkv, D); page_table: (B, N) int32
     (pool page id per logical page; unused entries may be any valid id —
     they are masked by valid_len); valid_len: (B,) -> (B, Hq, D).
+
+    ``window`` switches the table to *ring* semantics (N = ring slots,
+    positions derived from valid_len; see module docstring).  ``k_scale``/
+    ``v_scale`` (P, page) fp32 dequantize int8 pages in-kernel.
 
     ``plan`` (a :class:`repro.tune.KernelPlan`, hashable => static) carries
     the tuned backend choice; unlike flash/decode it cannot re-block the
@@ -75,6 +123,8 @@ def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
         raise ValueError(
             f"pool page size {k_pages.shape[1]} != plan.page_size "
             f"{plan.page_size}: the pool must be laid out from the plan")
+    if (k_scale is None) != (v_scale is None):
+        raise ValueError("k_scale and v_scale must be passed together")
     if interpret is None:
         if plan is not None:
             interpret = plan.resolve_interpret()
@@ -86,6 +136,7 @@ def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
     _, n_pages = page_table.shape
     g = hq // hkv
     scale = scale if scale is not None else d ** -0.5
+    quant = k_scale is not None
 
     qf = q.reshape(b * hkv, g, d)
     # flatten pages per kv head: (P*Hkv, page, d)
@@ -97,16 +148,30 @@ def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
         h_ = bh % hkv
         return (table_ref[b_, j] * hkv + h_, 0, 0)
 
+    def scale_map(bh, j, table_ref, vlen_ref, hkv=hkv):
+        return (table_ref[bh // hkv, j], 0)
+
+    in_specs = [
+        pl.BlockSpec((1, g, d), lambda bh, j, t, vl: (bh, 0, 0)),
+        pl.BlockSpec((1, page, d),
+                     lambda bh, j, t, vl: page_map(bh, j, t, vl)),
+        pl.BlockSpec((1, page, d),
+                     lambda bh, j, t, vl: page_map(bh, j, t, vl)),
+    ]
+    args = [qf, kf, vf]
+    if quant:
+        in_specs += [
+            pl.BlockSpec((1, page),
+                         lambda bh, j, t, vl: scale_map(bh, j, t, vl)),
+            pl.BlockSpec((1, page),
+                         lambda bh, j, t, vl: scale_map(bh, j, t, vl)),
+        ]
+        args += [k_scale.astype(jnp.float32), v_scale.astype(jnp.float32)]
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(b * hkv, n_pages),
-        in_specs=[
-            pl.BlockSpec((1, g, d), lambda bh, j, t, vl: (bh, 0, 0)),
-            pl.BlockSpec((1, page, d),
-                         lambda bh, j, t, vl: page_map(bh, j, t, vl)),
-            pl.BlockSpec((1, page, d),
-                         lambda bh, j, t, vl: page_map(bh, j, t, vl)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, g, d), lambda bh, j, t, vl: (bh, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((g, 1), jnp.float32),
@@ -116,9 +181,10 @@ def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
     )
     out = pl.pallas_call(
         functools.partial(_kernel, scale=scale, page=page, n_pages=n_pages,
-                          hkv=hkv),
+                          hkv=hkv, softcap=softcap, window=window,
+                          quant=quant),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b * hkv, g, d), q.dtype),
         interpret=interpret,
-    )(page_table.astype(jnp.int32), valid_len.astype(jnp.int32), qf, kf, vf)
+    )(page_table.astype(jnp.int32), valid_len.astype(jnp.int32), *args)
     return out.reshape(b, hq, d)

@@ -57,15 +57,48 @@ def decode_attention(q, k, v, valid_len, *, softcap=None, scale=None):
     return o.reshape(b, hq, d).astype(q.dtype)
 
 
-def paged_attention(q, k_pages, v_pages, page_table, valid_len, *, scale=None):
-    """Gather pages into contiguous caches, then decode_attention."""
+def paged_attention(q, k_pages, v_pages, page_table, valid_len, *, scale=None,
+                    softcap=None, window=None, k_scale=None, v_scale=None):
+    """Gather pages into contiguous caches, then masked-softmax attention.
+
+    ``window`` switches to ring-table semantics (slot ``j`` holds logical
+    page ``cur_L - ((cur_L - j) mod N)``); ``k_scale``/``v_scale`` (P, page)
+    dequantize int8 pages per token."""
     pool, page, hkv, d = k_pages.shape
-    k = k_pages[page_table]  # (B, N, page, Hkv, D)
-    v = v_pages[page_table]
     b, n = page_table.shape
+    bq, hq, _ = q.shape
+    g = hq // hkv
+    k = k_pages[page_table].astype(jnp.float32)  # (B, N, page, Hkv, D)
+    v = v_pages[page_table].astype(jnp.float32)
+    if k_scale is not None:
+        k = k * k_scale[page_table][..., None, None]
+        v = v * v_scale[page_table][..., None, None]
+    if window is None:
+        base = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[None] * page,
+                                (b, n))
+    else:
+        cur = jnp.maximum(valid_len - 1, 0)[:, None] // page      # (B, 1)
+        j = jnp.arange(n, dtype=jnp.int32)[None, :]
+        base = (cur - (cur - j) % n) * page
+    pos = base[:, :, None] + jnp.arange(page, dtype=jnp.int32)[None, None, :]
+    mask = (pos < valid_len[:, None, None]) & (pos >= 0)
+    if window is not None:
+        mask &= pos > valid_len[:, None, None] - 1 - window
     k = k.reshape(b, n * page, hkv, d)
     v = v.reshape(b, n * page, hkv, d)
-    return decode_attention(q, k, v, valid_len, scale=scale)
+    mask = mask.reshape(b, n * page)
+    scale = scale if scale is not None else d ** -0.5
+    qg = q.reshape(b, hkv, g, d).astype(jnp.float32) * scale
+    s = jnp.einsum("bhgd,bthd->bhgt", qg, k)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    # zero-mask p so a fully-masked row (valid_len 0 / rotated-out ring
+    # slot) contributes exactly 0, matching the kernel — not the uniform
+    # garbage softmax produces over an all-NEG_INF row
+    p = jnp.where(mask[:, None, None, :], jax.nn.softmax(s, axis=-1), 0.0)
+    o = jnp.einsum("bhgt,bthd->bhgd", p, v)
+    return o.reshape(b, hq, d).astype(q.dtype)
 
 
 def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,

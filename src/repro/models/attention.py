@@ -97,7 +97,8 @@ def naive_attention(q, k, v, p: AttnParams, q_offset=0, kv_valid_len=None,
 
 
 def paged_gather_attention(q, k_pages, v_pages, page_table, p: AttnParams,
-                           q_offset, kv_valid_len):
+                           q_offset, kv_valid_len, k_scale=None,
+                           v_scale=None):
     """Chunked-prefill (extend) attention over a paged KV cache.
 
     q: (B, C, Hq, D) — a prompt *chunk* at absolute offset ``q_offset``;
@@ -105,14 +106,20 @@ def paged_gather_attention(q, k_pages, v_pages, page_table, p: AttnParams,
     dereferenced with a dense gather — logical page j of row b covers
     absolute positions ``[j*page, (j+1)*page)``, so the gathered view is
     position-exact and the oracle's causal mask + ``kv_valid_len`` apply
-    unchanged.  Decode (C=1) uses the Pallas ``paged_attention`` kernel
+    unchanged.  ``k_scale``/``v_scale`` (P, page) dequantize int8 pages per
+    token.  Decode (C=1) uses the Pallas ``paged_attention`` kernel
     instead; prefill chunks are wide enough that the gather amortizes (the
     paper's unit-size rule is already baked into the page size).
     """
     b, n = page_table.shape
     page = k_pages.shape[1]
-    kd = k_pages[page_table].reshape(b, n * page, *k_pages.shape[2:])
-    vd = v_pages[page_table].reshape(b, n * page, *v_pages.shape[2:])
+    kd = k_pages[page_table]
+    vd = v_pages[page_table]
+    if k_scale is not None:
+        kd = kd.astype(jnp.float32) * k_scale[page_table][..., None, None]
+        vd = vd.astype(jnp.float32) * v_scale[page_table][..., None, None]
+    kd = kd.reshape(b, n * page, *k_pages.shape[2:])
+    vd = vd.reshape(b, n * page, *v_pages.shape[2:])
     return naive_attention(q, kd.astype(q.dtype), vd.astype(q.dtype), p,
                            q_offset=q_offset, kv_valid_len=kv_valid_len)
 

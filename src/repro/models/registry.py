@@ -56,23 +56,33 @@ class ModelBundle:
     # paged KV backend (pure full-attention stacks; see paged_supported)
     # ------------------------------------------------------------------
     def paged_supported(self) -> bool:
-        """True when the stack can serve from a shared page pool: pure
-        full-causal attention, native kv dtype, no softcap/enc-dec/frontend.
-        The serving engine falls back to the dense per-slot cache otherwise."""
+        """True when the stack can serve from the shared page pools: every
+        decoder-only stack qualifies — full attention grows a page table,
+        sliding windows keep a rotating ring of pages, recurrent mixers
+        (ssd/rglru) keep dense per-slot state beside the pools, int8 KV
+        stores scale lanes, and the kernel has a softcap path.  Only
+        enc-dec (split cache) and modality frontends fall back to the dense
+        per-slot cache."""
         return transformer.paged_supported(self.cfg, self.flags.kv_dtype)
 
-    def init_paged_cache(self, num_pages: int, page_size: int):
-        return transformer.init_paged_cache(self.cfg, num_pages, page_size)
+    def init_paged_cache(self, num_pages: int, page_size: int,
+                         batch: int = 1, ring_pages: int = 0):
+        return transformer.init_paged_cache(self.cfg, num_pages, page_size,
+                                            batch=batch,
+                                            ring_pages=ring_pages,
+                                            kv_dtype=self.flags.kv_dtype)
 
-    def paged_decode_step(self, params, cache, tokens, pos, table, plan=None):
+    def paged_decode_step(self, params, cache, tokens, pos, table, plan=None,
+                          active=None):
         return transformer.paged_decode_step(params, self.cfg, self.flags,
-                                             cache, tokens, pos, table, plan)
+                                             cache, tokens, pos, table, plan,
+                                             active)
 
     def paged_prefill_chunk(self, params, cache, tokens, pos, table,
-                            chunk_valid):
+                            chunk_valid, slot=None):
         return transformer.paged_prefill_chunk(params, self.cfg, self.flags,
                                                cache, tokens, pos, table,
-                                               chunk_valid)
+                                               chunk_valid, slot)
 
     # ------------------------------------------------------------------
     # abstract specs for the dry-run

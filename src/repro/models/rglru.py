@@ -16,7 +16,7 @@ cost_analysis, log-depth).  Decode is a single-step update.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -82,12 +82,16 @@ def _gates(p, xr):
 
 
 def forward(p, x, cfg: ModelConfig, shd: Sharder = no_shard,
-            return_state: bool = False):
-    """x: (B, S, d) -> (B, S, d)."""
+            return_state: bool = False, state: Optional[LRUState] = None):
+    """x: (B, S, d) -> (B, S, d).  ``state`` continues a previous segment
+    (chunked prefill): the conv reads its trailing context and the
+    recurrence folds ``state.h`` in as the h_0 term — mathematically
+    identical to one unbroken sequence."""
     gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["w_gate_in"]))
     xr = jnp.einsum("bsd,dw->bsw", x, p["w_rec_in"])
-    conv_state = conv_state_from(xr, 4)
-    xr = causal_conv1d(xr, p["conv_w"], p["conv_b"])
+    conv_prev = None if state is None else state.conv
+    conv_state = conv_state_from(xr, 4, prev=conv_prev)
+    xr = causal_conv1d(xr, p["conv_w"], p["conv_b"], state=conv_prev)
     a, gated = _gates(p, xr)
 
     def combine(l, r):
@@ -95,7 +99,9 @@ def forward(p, x, cfg: ModelConfig, shd: Sharder = no_shard,
         ar, br = r
         return al * ar, br + ar * bl
 
-    _, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    cum_a, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    if state is not None:
+        h = h + cum_a * state.h[:, None]
     hlast = h[:, -1]
     h = h.astype(x.dtype)
     out = jnp.einsum("bsw,wd->bsd", gate * h, p["w_out"])

@@ -70,16 +70,21 @@ def init_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> SSDState:
 
 
 def forward(p, x, cfg: ModelConfig, shd: Sharder = no_shard,
-            return_state: bool = False):
-    """x: (B, S, d) -> (B, S, d) [, SSDState].  S % chunk == 0."""
+            return_state: bool = False, state: Optional[SSDState] = None):
+    """x: (B, S, d) -> (B, S, d) [, SSDState].  ``state`` continues a
+    previous segment (chunked prefill): the conv reads its trailing context
+    and the associative state-passing scan is seeded with ``state.state`` —
+    mathematically identical to one unbroken sequence."""
     bsz, orig_s, _ = x.shape
     d_in, h, hp, n = dims(cfg)
     q = min(cfg.ssm_chunk, orig_s)
     pad = (-orig_s) % q
 
     z, xbc, dt = _split(p, x, cfg)
-    conv_state = conv_state_from(xbc, cfg.ssm_conv_width)
-    xbc = jax.nn.silu(causal_conv1d(xbc, p["conv_w"], p["conv_b"]))
+    conv_prev = None if state is None else state.conv
+    conv_state = conv_state_from(xbc, cfg.ssm_conv_width, prev=conv_prev)
+    xbc = jax.nn.silu(causal_conv1d(xbc, p["conv_w"], p["conv_b"],
+                                    state=conv_prev))
     if pad:
         # identity-pad: dt is forced to 0 on padded steps (decay 1, input 0),
         # so outputs and the final state are exact.
@@ -124,8 +129,14 @@ def forward(p, x, cfg: ModelConfig, shd: Sharder = no_shard,
 
     dec_all, st_all = jax.lax.associative_scan(
         combine, (chunk_decay, states_loc), axis=1)
-    prev = jnp.concatenate(
-        [jnp.zeros_like(st_all[:, :1]), st_all[:, :-1]], axis=1)
+    if state is not None:
+        # fold the carried-in state through every chunk's cumulative decay
+        h0 = state.state[:, None]                               # (B,1,H,P,N)
+        st_all = st_all + dec_all[..., None, None] * h0
+        prev = jnp.concatenate([h0, st_all[:, :-1]], axis=1)
+    else:
+        prev = jnp.concatenate(
+            [jnp.zeros_like(st_all[:, :1]), st_all[:, :-1]], axis=1)
 
     # --- off-diagonal (state-passing) ---
     y_off = jnp.einsum("bcln,bchpn,bclh->bclhp", cc, prev, jnp.exp(cum))

@@ -57,17 +57,22 @@ class RuntimeFlags:
 
 
 def paged_supported(cfg: ModelConfig, kv_dtype: str = "native") -> bool:
-    """The paged KV backend serves pure full-causal-attention decoders only:
-    ring caches (sliding windows) and recurrent state (ssd/rglru) have no
-    page-table reading, enc-dec splits the cache, int8 KV carries per-token
-    scales the page layout doesn't hold, and the paged kernel has no softcap
-    path.  Everything else falls back to the dense per-slot cache."""
-    if cfg.enc_dec or cfg.frontend or kv_dtype != "native":
-        return False
-    if cfg.attn_logit_softcap is not None:
-        return False
-    specs = tuple(cfg.layer_pattern) + tuple(cfg.remainder_specs)
-    return all(s.mixer == ATTN and s.sliding_window is None for s in specs)
+    """The paged KV backend serves (nearly) every decoder-only stack:
+
+    - full-attention layers grow a per-sequence page table;
+    - sliding-window layers keep a *ring* of ``ceil(window/page)+1`` pages,
+      rotating the trailing page in place as the window slides past it;
+    - recurrent mixers (ssd/rglru) keep dense per-slot state beside the
+      page pools (hybrid cache) — only attention layers read the table;
+    - ``kv_dtype="int8"`` stores int8 pages with a per-token scale lane per
+      page, dequantized inside the paged kernel (the paper's unit-size
+      lever on the KV stream);
+    - the paged kernel mirrors the dense ``attn_logit_softcap`` path.
+
+    Only encoder-decoder stacks (split cache) and modality frontends fall
+    back to the dense per-slot cache."""
+    del kv_dtype  # int8 pages are first-class now; kept for call-site compat
+    return not (cfg.enc_dec or cfg.frontend)
 
 
 def _kv_quant(x):
@@ -147,20 +152,54 @@ def _attn_params(cfg: ModelConfig, spec: LayerSpec, flags: RuntimeFlags) -> Attn
         bq=flags.attn_bq, bkv=flags.attn_bkv)
 
 
-def _paged_attn(q, k, v, cache, ap, pos, table, chunk_valid, cfg, mode,
-                plan=None):
+def _ring_gather(cache, tbl, off, page, window, dtype):
+    """Gather a ring table's live tokens into a contiguous view.
+
+    Returns (k, v, k_positions) with k/v (B, R*page, Hkv, D) and positions
+    (B, R*page) int32 (-1e9 = dead slot).  Ring slot ``j`` holds logical
+    page ``cur_L - ((cur_L - j) mod R)`` where ``cur_L`` is the logical
+    page of the last token *already written* (``off - 1``); stale tokens
+    from rotated-out pages map to positions >= off and are masked."""
+    b, r = tbl.shape
+    kg = cache["k_pages"][tbl]                        # (B, R, page, Hkv, D)
+    vg = cache["v_pages"][tbl]
+    if "k_scale" in cache:
+        kg = kg.astype(jnp.float32) * cache["k_scale"][tbl][..., None, None]
+        vg = vg.astype(jnp.float32) * cache["v_scale"][tbl][..., None, None]
+    cur = jnp.maximum(off - 1, 0)[:, None] // page    # (B, 1)
+    j = jnp.arange(r, dtype=jnp.int32)[None, :]
+    base = (cur - (cur - j) % r) * page               # (B, R)
+    kpos = base[:, :, None] + jnp.arange(page, dtype=jnp.int32)[None, None, :]
+    ok = (kpos < off[:, None, None]) & (kpos >= 0)
+    kpos = jnp.where(ok, kpos, -10**9).reshape(b, r * page)
+    kg = kg.reshape(b, r * page, *kg.shape[3:]).astype(dtype)
+    vg = vg.reshape(b, r * page, *vg.shape[3:]).astype(dtype)
+    return kg, vg, kpos
+
+
+def _paged_attn(q, k, v, cache, ap, spec, pos, table, chunk_valid, cfg,
+                flags, mode, plan=None):
     """The paged-cache mixer body (both paged modes).
 
-    Writes the chunk/token k/v through the page table, then attends:
-    decode (S=1) dispatches the ``paged_attention`` Pallas kernel against
-    the batched table; extend (prefill chunks) gathers the table into a
-    contiguous view.  Pad positions (bucketed chunks, masked decode ticks
-    on retired slots) are steered to page 0 — the engine reserves it as a
-    null page, so masked writes can never corrupt live data.
+    Full-attention layers read ``table["full"]`` (logical page j at absolute
+    positions [j*page, (j+1)*page)); sliding-window layers read
+    ``table["ring"]`` (rotating slots, positions recovered from the valid
+    length).  Decode (S=1) writes the token through the table then
+    dispatches the ``paged_attention`` Pallas kernel (softcap / window /
+    int8-dequant paths included); extend (prefill chunks) attends over a
+    gathered view — ring layers attend *before* writing, because a chunk
+    crossing a page boundary rotates the trailing page that its own early
+    queries still need.  ``kv_dtype="int8"`` quantizes per token before the
+    scatter and stores the scales in per-page lanes.  Pad positions
+    (bucketed chunks, masked decode ticks on retired slots) are steered to
+    page 0 — the engine reserves it as a null page, so masked writes can
+    never corrupt live data.
     """
     bsz, s = q.shape[:2]
     page = cache["k_pages"].shape[1]
-    n = table.shape[1]
+    ring = spec.sliding_window is not None
+    tbl = table["ring"] if ring else table["full"]
+    n = tbl.shape[1]
     posv = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (bsz,))
     positions = posv[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]
     q = rope(q, positions, cfg.rope_theta)
@@ -171,21 +210,66 @@ def _paged_attn(q, k, v, cache, ap, pos, table, chunk_valid, cfg, mode,
         valid = jnp.broadcast_to(
             jnp.asarray(chunk_valid, jnp.int32).reshape(-1), (bsz,))
     in_chunk = jnp.arange(s, dtype=jnp.int32)[None, :] < valid[:, None]
-    pidx = jnp.minimum(positions // page, n - 1)
-    pids = jnp.where(in_chunk, table[jnp.arange(bsz)[:, None], pidx], 0)
-    slots = jnp.where(in_chunk, positions % page, 0)
+    writable = in_chunk
+    if ring:
+        pidx = (positions // page) % n
+        if s > 1:
+            # a chunk wider than the ring would scatter two logical pages
+            # through the same slot (duplicate indices, unspecified order);
+            # only the trailing (R-1) pages of positions can matter to any
+            # future query ((R-1)*page >= window), and that span cannot
+            # alias — everything older is steered to the null page
+            end = (posv + valid)[:, None]
+            writable = in_chunk & (positions >= end - (n - 1) * page)
+    else:
+        pidx = jnp.minimum(positions // page, n - 1)
+    pids = jnp.where(writable, tbl[jnp.arange(bsz)[:, None], pidx], 0)
+    slots = jnp.where(writable, positions % page, 0)
+
+    int8kv = flags.kv_dtype == "int8"
+    if int8kv:
+        kq, ks = _kv_quant(k)
+        vq, vs = _kv_quant(v)
+        # the cache is the source of truth: attend over what readers will
+        # dequantize, so chunked and one-shot prefill agree bit-for-bit
+        k = _kv_dequant(kq, ks, q.dtype)
+        v = _kv_dequant(vq, vs, q.dtype)
+    else:
+        kq, vq = k, v
+
+    if mode != "paged_decode" and ring:
+        # attend BEFORE the write: the chunk may rotate out a page its own
+        # early queries still need (window trailing edge)
+        kg, vg, kpos = _ring_gather(cache, tbl, posv, page,
+                                    spec.sliding_window, q.dtype)
+        cpos = jnp.where(in_chunk, positions, -10**9)
+        k_all = jnp.concatenate([kg, k.astype(q.dtype)], axis=1)
+        v_all = jnp.concatenate([vg, v.astype(q.dtype)], axis=1)
+        o = attn_mod.naive_attention(q, k_all, v_all, ap, q_offset=posv,
+                                     k_positions=jnp.concatenate(
+                                         [kpos, cpos], axis=1))
+
     kp = cache["k_pages"].at[pids, slots].set(
-        k.astype(cache["k_pages"].dtype))
+        kq.astype(cache["k_pages"].dtype))
     vp = cache["v_pages"].at[pids, slots].set(
-        v.astype(cache["v_pages"].dtype))
-    new_cache = dict(k_pages=kp, v_pages=vp)
+        vq.astype(cache["v_pages"].dtype))
+    new_cache = dict(cache)
+    new_cache.update(k_pages=kp, v_pages=vp)
+    if int8kv:
+        new_cache["k_scale"] = cache["k_scale"].at[pids, slots].set(ks)
+        new_cache["v_scale"] = cache["v_scale"].at[pids, slots].set(vs)
+
     if mode == "paged_decode":  # S == 1: the kernel's regime
-        o = kops.paged_attention(q[:, 0], kp, vp, table, posv + 1,
-                                 scale=ap.scale, plan=plan)[:, None]
-    else:  # paged_extend: chunked prefill over the gathered view
-        o = attn_mod.paged_gather_attention(q, kp, vp, table, ap,
-                                            q_offset=posv,
-                                            kv_valid_len=posv + valid)
+        o = kops.paged_attention(
+            q[:, 0], kp, vp, tbl, posv + 1, scale=ap.scale,
+            softcap=ap.softcap, window=spec.sliding_window,
+            k_scale=new_cache.get("k_scale"),
+            v_scale=new_cache.get("v_scale"), plan=plan)[:, None]
+    elif not ring:  # paged_extend: chunked prefill over the gathered view
+        o = attn_mod.paged_gather_attention(
+            q, kp, vp, tbl, ap, q_offset=posv, kv_valid_len=posv + valid,
+            k_scale=new_cache.get("k_scale"),
+            v_scale=new_cache.get("v_scale"))
     return o, new_cache
 
 
@@ -200,8 +284,8 @@ def _apply_attn(p, x, cfg, spec, flags, mode, cache, pos, table=None,
     ap = _attn_params(cfg, spec, flags)
 
     if mode in ("paged_decode", "paged_extend"):
-        o, new_cache = _paged_attn(q, k, v, cache, ap, pos, table,
-                                   chunk_valid, cfg, mode, plan)
+        o, new_cache = _paged_attn(q, k, v, cache, ap, spec, pos, table,
+                                   chunk_valid, cfg, flags, mode, plan)
     elif mode == "decode":
         # scalar pos (batch-uniform decode, the dry-run/throughput path) uses
         # dynamic-update-slice — SPMD-friendly on seq-sharded caches; vector
@@ -265,30 +349,74 @@ def _apply_attn(p, x, cfg, spec, flags, mode, cache, pos, table=None,
         k = rope(k, positions, cfg.rope_theta)
         k = shd(k, ("batch", "seq", "kv_heads", None))
         v = shd(v, ("batch", "seq", "kv_heads", None))
+        int8kv = flags.kv_dtype == "int8" and mode == "prefill"
+        if int8kv:
+            # the cache is the source of truth: prefill attends over the
+            # quantize->dequantize round trip it stores, so its logits agree
+            # bit-for-bit with decode (and with paged chunked prefill, which
+            # can only read earlier chunks back from int8 pages)
+            kq, ks = _kv_quant(k)
+            vq, vs = _kv_quant(v)
+            k = _kv_dequant(kq, ks, q.dtype)
+            v = _kv_dequant(vq, vs, q.dtype)
         o = attn_mod.attention(q, k, v, ap)
         new_cache = None
         if mode == "prefill":
             if spec.sliding_window is not None:
                 w = min(spec.sliding_window, s)
-                kw, vw = k[:, s - w:], v[:, s - w:]
+                sl = slice(s - w, None)
                 new_cache = dict(
                     kpos=jnp.broadcast_to(
                         jnp.arange(s - w, s, dtype=jnp.int32)[None], (bsz, w)))
             else:
-                kw, vw = k, v
+                sl = slice(None)
                 new_cache = {}
-            if flags.kv_dtype == "int8":
-                new_cache["k"], new_cache["k_scale"] = _kv_quant(kw)
-                new_cache["v"], new_cache["v_scale"] = _kv_quant(vw)
+            if int8kv:
+                new_cache["k"], new_cache["k_scale"] = kq[:, sl], ks[:, sl]
+                new_cache["v"], new_cache["v_scale"] = vq[:, sl], vs[:, sl]
             else:
-                new_cache["k"], new_cache["v"] = kw, vw
+                new_cache["k"], new_cache["v"] = k[:, sl], v[:, sl]
     o = o.reshape(bsz, s, cfg.num_heads * hd)
     out = jnp.einsum("bsh,hd->bsd", o, p["wo"])
     return out, new_cache
 
 
+def _recurrent_chunk(mod, p, h, cache, cfg, flags, pos, slot):
+    """Hybrid-cache chunked prefill through a recurrent mixer: slice the
+    per-slot state row out of the batch state tree, run the chunk forward
+    from it, and scatter the updated row back.  ``pos == 0`` (the first
+    chunk of a freshly admitted request) restarts the state from zeros —
+    the slot may hold garbage from masked decode ticks of its previous
+    occupant."""
+    slot = jnp.asarray(slot, jnp.int32).reshape(())
+    fresh = jnp.asarray(pos, jnp.int32).reshape(-1)[0] == 0
+    st = jax.tree.map(
+        lambda a: jnp.where(fresh, jnp.zeros_like(a[:1]),
+                            jax.lax.dynamic_slice_in_dim(a, slot, 1, 0)),
+        cache)
+    mix, st1 = mod.forward(p, h, cfg, flags.shd, return_state=True, state=st)
+    new_cache = jax.tree.map(
+        lambda full, upd: jax.lax.dynamic_update_slice_in_dim(
+            full, upd.astype(full.dtype), slot, 0),
+        cache, st1)
+    return mix, new_cache
+
+
+def _freeze_inactive(new_state, old_state, active):
+    """Freeze recurrent state rows of inactive slots.  Attention pages are
+    write-idempotent under a frozen position (or steered to the null page),
+    but a recurrent update is not — a pending-prefill slot's partial state
+    must survive the masked decode ticks between its chunks."""
+    if active is None:
+        return new_state
+    return jax.tree.map(
+        lambda n, o: jnp.where(
+            jnp.reshape(active, (-1,) + (1,) * (n.ndim - 1)), n, o),
+        new_state, old_state)
+
+
 def _apply_layer(p, x, cfg, spec, flags, mode, cache, pos, table=None,
-                 chunk_valid=None, plan=None):
+                 chunk_valid=None, plan=None, slot=None, active=None):
     """returns (x, new_cache, aux_loss)."""
     aux = jnp.zeros((), jnp.float32)
     h = rms_norm(x, p["ln1"])
@@ -296,16 +424,26 @@ def _apply_layer(p, x, cfg, spec, flags, mode, cache, pos, table=None,
         mix, new_cache = _apply_attn(p["attn"], h, cfg, spec, flags, mode,
                                      cache, pos, table, chunk_valid, plan)
     elif spec.mixer == SSD:
-        if mode == "decode":
+        if mode in ("decode", "paged_decode"):
             mix, new_cache = ssm_mod.decode_step(p["ssd"], h, cache, cfg)
+            if mode == "paged_decode":
+                new_cache = _freeze_inactive(new_cache, cache, active)
+        elif mode == "paged_extend":
+            mix, new_cache = _recurrent_chunk(ssm_mod, p["ssd"], h, cache,
+                                              cfg, flags, pos, slot)
         elif mode == "prefill":
             mix, new_cache = ssm_mod.forward(p["ssd"], h, cfg, flags.shd,
                                              return_state=True)
         else:
             mix, new_cache = ssm_mod.forward(p["ssd"], h, cfg, flags.shd), None
     elif spec.mixer == RGLRU:
-        if mode == "decode":
+        if mode in ("decode", "paged_decode"):
             mix, new_cache = rglru_mod.decode_step(p["rglru"], h, cache, cfg)
+            if mode == "paged_decode":
+                new_cache = _freeze_inactive(new_cache, cache, active)
+        elif mode == "paged_extend":
+            mix, new_cache = _recurrent_chunk(rglru_mod, p["rglru"], h, cache,
+                                              cfg, flags, pos, slot)
         elif mode == "prefill":
             mix, new_cache = rglru_mod.forward(p["rglru"], h, cfg, flags.shd,
                                                return_state=True)
@@ -373,41 +511,60 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
     return dict(blocks=blocks, rem=rem)
 
 
-def _empty_paged_for(cfg, spec: LayerSpec, num_pages: int, page_size: int,
-                     dtype):
-    if spec.mixer != ATTN or spec.sliding_window is not None:
-        raise ValueError(
-            f"paged cache requires full attention, got {spec} "
-            "(gate with paged_supported before init_paged_cache)")
+def _empty_paged_for(cfg, spec: LayerSpec, num_pages: int, ring_pages: int,
+                     page_size: int, batch: int, dtype, kv_dtype: str):
+    """One layer's slice of the hybrid paged cache: page pools for attention
+    (full layers share the ``num_pages`` pool, windowed layers the
+    ``ring_pages`` pool), dense per-slot state for recurrent mixers."""
+    if spec.mixer == SSD:
+        return ssm_mod.init_state(cfg, batch, dtype)
+    if spec.mixer == RGLRU:
+        return rglru_mod.init_state(cfg, batch, dtype)
+    if spec.mixer != ATTN:
+        raise ValueError(spec.mixer)
     hd = cfg.resolved_head_dim
-    shape = (num_pages, page_size, cfg.num_kv_heads, hd)
-    return dict(k_pages=jnp.zeros(shape, dtype), v_pages=jnp.zeros(shape, dtype))
+    p = ring_pages if spec.sliding_window is not None else num_pages
+    kvd = jnp.int8 if kv_dtype == "int8" else dtype
+    shape = (p, page_size, cfg.num_kv_heads, hd)
+    c = dict(k_pages=jnp.zeros(shape, kvd), v_pages=jnp.zeros(shape, kvd))
+    if kv_dtype == "int8":
+        c["k_scale"] = jnp.zeros((p, page_size), jnp.float32)
+        c["v_scale"] = jnp.zeros((p, page_size), jnp.float32)
+    return c
 
 
-def init_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int) -> dict:
+def init_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int,
+                     batch: int = 1, ring_pages: int = 0,
+                     kv_dtype: str = "native") -> dict:
     """Paged decode cache: per-layer page *pools* instead of per-slot dense
-    buffers.  Page ids are shared across layers (one host-side allocator,
-    one table), so the pytree mirrors :func:`init_cache`'s stacking —
-    blocks on LAYERS, remainder unstacked — with pools as leaves."""
+    buffers.  Page ids are shared across layers of the same kind (one
+    host-side allocator + table for the full-attention pools, one for the
+    windowed ring pools), recurrent mixers keep dense (batch, ...) state
+    rows, and ``kv_dtype="int8"`` adds a per-token fp32 scale lane per
+    page.  The pytree mirrors :func:`init_cache`'s stacking — blocks on
+    LAYERS, remainder unstacked — with pools/state as leaves."""
     dtype = jnp.dtype(cfg.compute_dtype)
     nb = cfg.num_pattern_blocks
+    ring_pages = ring_pages or num_pages
 
     def stack(tree):
         return jax.tree.map(lambda a: jnp.broadcast_to(a, (nb,) + a.shape), tree)
 
-    blocks = {f"p{j}": stack(_empty_paged_for(cfg, spec, num_pages, page_size,
-                                              dtype))
+    blocks = {f"p{j}": stack(_empty_paged_for(cfg, spec, num_pages,
+                                              ring_pages, page_size, batch,
+                                              dtype, kv_dtype))
               for j, spec in enumerate(cfg.layer_pattern)}
-    rem = {f"r{j}": _empty_paged_for(cfg, spec, num_pages, page_size, dtype)
+    rem = {f"r{j}": _empty_paged_for(cfg, spec, num_pages, ring_pages,
+                                     page_size, batch, dtype, kv_dtype)
            for j, spec in enumerate(cfg.remainder_specs)}
     return dict(blocks=blocks, rem=rem)
 
 
 def _scan_blocks(params, x, cfg, flags, mode, cache, pos, table=None,
-                 chunk_valid=None, plan=None):
+                 chunk_valid=None, plan=None, slot=None, active=None):
     """Apply the scanned pattern blocks + remainder layers.  ``table`` /
-    ``chunk_valid`` / ``plan`` (paged modes) are loop constants: every
-    layer dereferences the same batched page table."""
+    ``chunk_valid`` / ``plan`` / ``slot`` / ``active`` (paged modes) are
+    loop constants: every layer dereferences the same batched page table."""
     pattern = cfg.layer_pattern
     aux0 = jnp.zeros((), jnp.float32)
 
@@ -418,7 +575,8 @@ def _scan_blocks(params, x, cfg, flags, mode, cache, pos, table=None,
         for j, spec in enumerate(pattern):
             c_in = bc.get(f"p{j}") if bc is not None else None
             x, c_out, a = _apply_layer(bp[f"p{j}"], x, cfg, spec, flags, mode,
-                                       c_in, pos, table, chunk_valid, plan)
+                                       c_in, pos, table, chunk_valid, plan,
+                                       slot, active)
             aux = aux + a
             new_caches[f"p{j}"] = c_out
         ys = new_caches if mode != "train" else None
@@ -461,7 +619,8 @@ def _scan_blocks(params, x, cfg, flags, mode, cache, pos, table=None,
                 prevent_cse=False,
                 static_argnums=(2, 3, 4, 5, 7))
         x, c_out, a = apply(params["rem"][f"r{j}"], x, cfg, spec, flags,
-                            mode, c_in, pos, table, chunk_valid, plan)
+                            mode, c_in, pos, table, chunk_valid, plan, slot,
+                            active)
         aux = aux + a
         new_rem[f"r{j}"] = c_out
     new_cache = (dict(blocks=new_blocks_c, rem=new_rem)
@@ -535,15 +694,16 @@ def chunked_ce(params, cfg, x, labels, flags: RuntimeFlags) -> jax.Array:
 def forward(params, cfg: ModelConfig, flags: RuntimeFlags, tokens: jax.Array,
             patch_embeds: Optional[jax.Array] = None, mode: str = "train",
             cache: Optional[dict] = None, pos=None, table=None,
-            chunk_valid=None, plan=None):
+            chunk_valid=None, plan=None, slot=None, active=None):
     """tokens: (B, S_text); patch_embeds: (B, P, d) for vlm frontends.
-    ``table``/``chunk_valid``/``plan`` only apply to the paged modes."""
+    ``table``/``chunk_valid``/``plan``/``slot``/``active`` only apply to
+    the paged modes."""
     x = embed_tokens(params, cfg, tokens)
     if patch_embeds is not None:
         x = jnp.concatenate([patch_embeds.astype(x.dtype), x], axis=1)
     x = flags.shd(x, ("batch", "seq", "embed"))
     x, new_cache, aux = _scan_blocks(params, x, cfg, flags, mode, cache, pos,
-                                     table, chunk_valid, plan)
+                                     table, chunk_valid, plan, slot, active)
     x = rms_norm(x, params["final_norm"])
     return x, new_cache, aux
 
@@ -587,30 +747,39 @@ def decode_step(params, cfg: ModelConfig, flags: RuntimeFlags, cache: dict,
 
 def paged_decode_step(params, cfg: ModelConfig, flags: RuntimeFlags,
                       cache: dict, tokens: jax.Array, pos: jax.Array,
-                      table: jax.Array, plan=None):
+                      table, plan=None, active=None):
     """One decode tick against the page pool.  tokens: (B, 1); pos: (B,)
-    per-slot positions; table: (B, N) page table (padded entries -> the
-    null page).  Every layer appends k/v through the table and dispatches
-    the ``paged_attention`` kernel under ``plan`` (the engine's tuned
-    :class:`repro.tune.KernelPlan`; the kernel asserts the pool layout
-    matches it and executes its pinned interpret mode)."""
+    per-slot positions; table: ``{"full": (B, N), "ring": (B, R)}`` page
+    tables (padded entries -> the null page; windowed layers read the ring
+    table, full-attention layers the full one).  Every attention layer
+    appends k/v through its table and dispatches the ``paged_attention``
+    kernel under ``plan`` (the engine's tuned :class:`repro.tune.
+    KernelPlan`; the kernel asserts the pool layout matches it and executes
+    its pinned interpret mode); recurrent mixers advance dense per-slot
+    state exactly like the dense decode path, except rows where ``active``
+    (B,) is False keep their previous state — a pending-prefill slot's
+    partial state must survive the masked ticks between its chunks."""
     x, new_cache, _ = forward(params, cfg, flags, tokens, mode="paged_decode",
-                              cache=cache, pos=pos, table=table, plan=plan)
+                              cache=cache, pos=pos, table=table, plan=plan,
+                              active=active)
     logits = compute_logits(params, cfg, x)[:, 0]
     return logits, new_cache
 
 
 def paged_prefill_chunk(params, cfg: ModelConfig, flags: RuntimeFlags,
                         cache: dict, tokens: jax.Array, pos: jax.Array,
-                        table: jax.Array, chunk_valid: jax.Array):
+                        table, chunk_valid: jax.Array, slot=None):
     """One chunked-prefill step: ``tokens`` (B, C) is a prompt chunk
     (right-padded to a bucket; ``chunk_valid`` (B,) marks true length) at
     absolute context offset ``pos`` (B,).  Appends the chunk's k/v into the
-    pages and returns logits at the chunk's last valid position — only the
-    final chunk's logits seed decoding."""
+    pages (full tables and rotating ring tables alike) and returns logits
+    at the chunk's last valid position — only the final chunk's logits seed
+    decoding.  ``slot`` is the engine slot whose dense recurrent state rows
+    this chunk continues (hybrid stacks); the first chunk (``pos == 0``)
+    restarts them from zeros."""
     x, new_cache, _ = forward(params, cfg, flags, tokens, mode="paged_extend",
                               cache=cache, pos=pos, table=table,
-                              chunk_valid=chunk_valid)
+                              chunk_valid=chunk_valid, slot=slot)
     bsz = x.shape[0]
     idx = jnp.broadcast_to(
         jnp.asarray(chunk_valid, jnp.int32).reshape(-1), (bsz,)) - 1

@@ -72,7 +72,8 @@ class ServeStats:
     prefill_chunks: int = 0          # chunked-prefill dispatches
     prompt_tokens: int = 0           # prompt tokens admitted
     prefix_hit_tokens: int = 0       # prompt tokens served from shared pages
-    pages_peak: int = 0              # peak pages_in_use over the run
+    pages_peak: int = 0              # peak full-pool pages_in_use over the run
+    ring_pages_peak: int = 0         # peak ring-pool pages_in_use (windowed)
     pool_stalls: int = 0             # admissions deferred by PoolExhausted
 
 
@@ -88,11 +89,15 @@ class ServeEngine:
     (auto: paged wherever :meth:`ModelBundle.paged_supported` allows).
 
     Paged knobs: ``page_size=None`` derives from the tuned
-    :class:`~repro.tune.KernelPlan`; ``num_pages=None`` sizes the pool at
-    the dense footprint plus the reserved null page — shrink it to admit by
-    live tokens and exercise backpressure, grow it to persist more prefix
-    cache.  ``prefill_chunk`` caps prompt tokens per prefill dispatch so
-    decode ticks interleave with long prompts.
+    :class:`~repro.tune.KernelPlan` (int8 KV halves the unit size, so the
+    derived page doubles in tokens); ``num_pages=None`` sizes the
+    full-attention pool at the dense footprint plus the reserved null page
+    — shrink it to admit by live tokens and exercise backpressure, grow it
+    to persist more prefix cache.  ``num_ring_pages=None`` sizes the
+    windowed-layer ring pool at ``batch x (ceil(window/page)+1)`` rotating
+    pages — the constant-memory bound however long windowed sequences run.
+    ``prefill_chunk`` caps prompt tokens per prefill dispatch so decode
+    ticks interleave with long prompts.
     """
 
     def __init__(self, bundle: ModelBundle, params, batch_size: int,
@@ -101,6 +106,7 @@ class ServeEngine:
                  cache_backend: Optional[str] = None,
                  page_size: Optional[int] = None,
                  num_pages: Optional[int] = None,
+                 num_ring_pages: Optional[int] = None,
                  prefill_chunk: int = 32,
                  prefix_cache: bool = True):
         self.bundle = bundle
@@ -114,33 +120,60 @@ class ServeEngine:
             raise ValueError(f"unknown cache_backend {cache_backend!r}")
         elif cache_backend == "paged" and not bundle.paged_supported():
             raise ValueError(
-                f"{bundle.cfg.name}: paged KV needs a pure full-attention "
-                "stack with native kv dtype (see ModelBundle.paged_supported)")
+                f"{bundle.cfg.name}: paged KV serves decoder-only stacks "
+                "(enc-dec and frontend stacks keep the dense cache; see "
+                "ModelBundle.paged_supported)")
         self.backend = cache_backend
         self.bucket_prompts = (self._bucketable(bundle.cfg)
                                if bucket_prompts is None else bucket_prompts)
 
         if self.backend == "paged":
-            hd = bundle.cfg.resolved_head_dim
+            cfg = bundle.cfg
+            specs = tuple(cfg.layer_pattern) + tuple(cfg.remainder_specs)
+            attn = [s for s in specs if s.mixer == ATTN]
+            self.has_full = any(s.sliding_window is None for s in attn)
+            windows = [s.sliding_window for s in attn
+                       if s.sliding_window is not None]
+            # the ring is sized by the largest window (smaller windows mask
+            # more); a window past max_len degenerates to hold-everything
+            self.attn_window = (min(max(windows), max_len)
+                                if windows else None)
+            self.has_recurrent = any(s.mixer != ATTN for s in specs)
+            hd = cfg.resolved_head_dim
             from repro.tune import plan_for
+            # int8 pages halve the unit size, so the transaction-optimum
+            # page (the r_acc >= 512B rule) doubles in tokens — derive the
+            # plan from the dtype the pool actually stores
+            kv_store = ("int8" if bundle.flags.kv_dtype == "int8"
+                        else str(cfg.compute_dtype))
             base = plan_for("paged_attention", shape_sig=(max_len, hd),
-                            dtype=str(bundle.cfg.compute_dtype))
+                            dtype=kv_store)
             self.page = int(page_size or base.page_size)
             # an explicit page_size overrides the derived one; the plan the
             # kernel receives must describe the pool actually laid out
             self.plan = (base if base.page_size == self.page
                          else dataclasses.replace(base, bkv=self.page))
-            self.pages_per_seq = -(-max_len // self.page)
+            self.pages_per_seq = (-(-max_len // self.page)
+                                  if self.has_full else 0)
+            self.ring_slots = (-(-self.attn_window // self.page) + 1
+                               if self.attn_window is not None else 0)
             # dense-footprint default + the reserved null page (id 0) that
             # padded table entries target, so masked writes stay harmless
             self.num_pages = int(num_pages
                                  or 1 + batch_size * self.pages_per_seq)
+            self.num_ring_pages = int(num_ring_pages
+                                      or 1 + batch_size * self.ring_slots)
             self.prefill_chunk = max(8, prefill_chunk)
-            self.prefix: Optional[PrefixIndex] = (PrefixIndex()
-                                                  if prefix_cache else None)
+            # prefix pages are only reusable when the WHOLE stack reads
+            # them: ring layers rotate prefix tokens away and recurrent
+            # state is never cached, so sharing is a pure-full-attn move
+            pure_full = self.has_full and not windows and not self.has_recurrent
+            self.prefix: Optional[PrefixIndex] = (
+                PrefixIndex() if prefix_cache and pure_full else None)
             self._paged_prefill = jax.jit(
-                lambda p, cache, toks, off, tbl, cv:
-                bundle.paged_prefill_chunk(p, cache, toks, off, tbl, cv),
+                lambda p, cache, toks, off, tbl, cv, slot:
+                bundle.paged_prefill_chunk(p, cache, toks, off, tbl, cv,
+                                           slot),
                 donate_argnums=(1,))
             self._paged_decode_many = jax.jit(
                 functools.partial(_paged_decode_many_impl, bundle, self.plan),
@@ -163,13 +196,23 @@ class ServeEngine:
         self.queue: List[Request] = []
         self.stats = ServeStats()
         if self.backend == "paged":
-            self.alloc = PageAllocator(self.num_pages, self.page, reserved=1)
+            self.alloc = (PageAllocator(self.num_pages, self.page, reserved=1)
+                          if self.has_full else None)
+            self.ralloc = (PageAllocator(self.num_ring_pages, self.page,
+                                         reserved=1, window=self.attn_window)
+                           if self.attn_window is not None else None)
             if self.prefix is not None:
                 self.prefix = PrefixIndex()
-            self.cache = self.bundle.init_paged_cache(self.num_pages,
-                                                      self.page)
-            self._htable = np.zeros((self.bsz, self.pages_per_seq), np.int32)
-            self._table = jnp.asarray(self._htable)
+            self.cache = self.bundle.init_paged_cache(
+                self.num_pages if self.has_full else 1, self.page,
+                batch=self.bsz,
+                ring_pages=self.num_ring_pages)
+            self._htable = np.zeros((self.bsz, max(1, self.pages_per_seq)),
+                                    np.int32)
+            self._hrtable = np.zeros((self.bsz, max(1, self.ring_slots)),
+                                     np.int32)
+            self._table = dict(full=jnp.asarray(self._htable),
+                               ring=jnp.asarray(self._hrtable))
             self._table_dirty = False
             self._pending: Dict[int, int] = {}   # slot -> next prefill offset
             self._hashes: Dict[int, List[str]] = {}  # rid -> full-page hashes
@@ -204,17 +247,51 @@ class ServeEngine:
         return int(sum(x.size * x.dtype.itemsize
                        for x in jax.tree_util.tree_leaves(self.cache)))
 
+    def _page_bytes_by_kind(self):
+        """(full, ring) HBM bytes of ONE page summed over every layer of
+        that kind (k + v, plus the int8 scale lanes)."""
+        cfg = self.bundle.cfg
+        nb = cfg.num_pattern_blocks
+        n_full = n_ring = 0
+        for spec, mult in ([(s, nb) for s in cfg.layer_pattern]
+                           + [(s, 1) for s in cfg.remainder_specs]):
+            if spec.mixer != ATTN:
+                continue
+            if spec.sliding_window is None:
+                n_full += mult
+            else:
+                n_ring += mult
+        int8 = self.bundle.flags.kv_dtype == "int8"
+        itm = 1 if int8 else jnp.dtype(cfg.compute_dtype).itemsize
+        per_layer = (2 * self.page * cfg.num_kv_heads
+                     * cfg.resolved_head_dim * itm
+                     + (2 * self.page * 4 if int8 else 0))
+        return n_full * per_layer, n_ring * per_layer
+
     @property
     def bytes_per_page(self) -> int:
-        """One page across every layer pool (k + v)."""
+        """One page across every layer pool of its kind (k + v)."""
         assert self.backend == "paged"
-        return self.kv_bytes() // self.num_pages
+        full_pb, ring_pb = self._page_bytes_by_kind()
+        return full_pb or ring_pb
+
+    def _recurrent_state_bytes(self) -> int:
+        """Dense per-slot recurrent state (hybrid stacks): always live."""
+        full_pb, ring_pb = self._page_bytes_by_kind()
+        pools = ((self.num_pages * full_pb if self.has_full else 0)
+                 + (self.num_ring_pages * ring_pb if self.ralloc else 0))
+        return self.kv_bytes() - pools
 
     def live_kv_bytes_peak(self) -> int:
         """Peak *live-token* HBM bytes: what the cache actually held, vs the
-        ``batch x max_len`` footprint the dense backend commits upfront."""
+        ``batch x max_len`` footprint the dense backend commits upfront.
+        Ring layers are the headline win: however long a windowed sequence
+        runs, its pages stay bounded by ``ceil(window/page)+1``."""
         if self.backend == "paged":
-            return self.stats.pages_peak * self.bytes_per_page
+            full_pb, ring_pb = self._page_bytes_by_kind()
+            return (self.stats.pages_peak * full_pb
+                    + self.stats.ring_pages_peak * ring_pb
+                    + self._recurrent_state_bytes())
         return self.kv_bytes()
 
     # ------------------------------------------------------------------
@@ -278,41 +355,68 @@ class ServeEngine:
     # ------------------------------------------------------------------
     # paged admission + chunked prefill
     # ------------------------------------------------------------------
+    def _track_peaks(self) -> None:
+        if self.alloc is not None:
+            self.stats.pages_peak = max(self.stats.pages_peak,
+                                        self.alloc.pages_in_use)
+        if self.ralloc is not None:
+            self.stats.ring_pages_peak = max(self.stats.ring_pages_peak,
+                                             self.ralloc.pages_in_use)
+
     def _paged_admit_slot(self, slot: int, req: Request) -> None:
         """Attach the cached prompt prefix (shared read-only pages), then
-        reserve pages for the whole prompt — all-or-nothing, so admission
-        either sticks or backs off cleanly (:class:`PoolExhausted`)."""
+        reserve pages for the whole prompt on every pool the stack uses
+        (full table + windowed ring) — all-or-nothing, so admission either
+        sticks or backs off cleanly (:class:`PoolExhausted`)."""
         s = int(req.prompt.shape[0])
         if s > self.max_len:
             raise ValueError(f"prompt ({s}) exceeds max_len ({self.max_len})")
-        need = -(-s // self.page)
-        if need > self.num_pages - 1:
-            # no amount of backpressure can ever admit this one — waiting
-            # would silently drop it (and head-of-line-block the queue)
-            raise ValueError(
-                f"prompt needs {need} pages ({s} tokens) but the pool holds "
-                f"only {self.num_pages - 1}; raise num_pages")
-        self.alloc.alloc(req.rid)
+        if self.alloc is not None:
+            need = -(-s // self.page)
+            if need > self.num_pages - 1:
+                # no amount of backpressure can ever admit this one — waiting
+                # would silently drop it (and head-of-line-block the queue)
+                raise ValueError(
+                    f"prompt needs {need} pages ({s} tokens) but the pool "
+                    f"holds only {self.num_pages - 1}; raise num_pages")
+        if self.ralloc is not None:
+            need = min(-(-s // self.page), self.ralloc.ring_slots)
+            if need > self.num_ring_pages - 1:
+                raise ValueError(
+                    f"prompt needs {need} ring pages but the ring pool "
+                    f"holds only {self.num_ring_pages - 1}; raise "
+                    "num_ring_pages")
         hit_len = 0
         hashes: List[str] = []
-        if self.prefix is not None:
-            hashes = page_hashes(req.prompt, self.page)
-            # cap at (s-1) tokens: the last token must be computed so the
-            # final chunk yields the logits that seed decoding
-            usable = (s - 1) // self.page
-            pages = self.prefix.lookup(hashes[:usable])
-            if pages:
-                hit_len = len(pages) * self.page
-                self.alloc.attach(req.rid, pages, hit_len)
+        if self.alloc is not None:
+            self.alloc.alloc(req.rid)
+            if self.prefix is not None:
+                hashes = page_hashes(req.prompt, self.page)
+                # cap at (s-1) tokens: the last token must be computed so
+                # the final chunk yields the logits that seed decoding
+                usable = (s - 1) // self.page
+                pages = self.prefix.lookup(hashes[:usable])
+                if pages:
+                    hit_len = len(pages) * self.page
+                    self.alloc.attach(req.rid, pages, hit_len)
+        if self.ralloc is not None:
+            self.ralloc.alloc(req.rid)
         try:
-            try:
-                self.alloc.reserve(req.rid, s)
-            except PoolExhausted:
-                if self.prefix is None or not self.prefix.evict_unused(self.alloc):
-                    raise
-                self.alloc.reserve(req.rid, s)
+            if self.alloc is not None:
+                try:
+                    self.alloc.reserve(req.rid, s)
+                except PoolExhausted:
+                    if (self.prefix is None
+                            or not self.prefix.evict_unused(self.alloc)):
+                        raise
+                    self.alloc.reserve(req.rid, s)
+            if self.ralloc is not None:
+                self.ralloc.reserve(req.rid, s)
         except PoolExhausted:
-            self.alloc.release(req.rid)
+            if self.alloc is not None:
+                self.alloc.release(req.rid)
+            if self.ralloc is not None:
+                self.ralloc.release(req.rid)
             raise
         self._hashes[req.rid] = hashes
         self.slots[slot] = req
@@ -320,8 +424,7 @@ class ServeEngine:
         self._hpos[slot] = 0  # no stale position while the prompt builds
         self.stats.prompt_tokens += s
         self.stats.prefix_hit_tokens += hit_len
-        self.stats.pages_peak = max(self.stats.pages_peak,
-                                    self.alloc.pages_in_use)
+        self._track_peaks()
         # the batch table row stays null until prefill completes: masked
         # decode ticks must not write through a half-built row
 
@@ -340,19 +443,24 @@ class ServeEngine:
             self.stats.prefill_retraces += 1
         chunk = np.zeros((1, cb), np.int32)
         chunk[0, :c] = req.prompt[off:off + c]
-        row = self.alloc.tables[req.rid]
-        trow = np.zeros((1, self.pages_per_seq), np.int32)
+        row = self.alloc.tables[req.rid] if self.alloc is not None else []
+        trow = np.zeros((1, max(1, self.pages_per_seq)), np.int32)
         trow[0, :len(row)] = row
+        rrow = np.zeros((1, max(1, self.ring_slots)), np.int32)
+        if self.ralloc is not None:
+            rring = self.ralloc.tables[req.rid]
+            rrow[0, :len(rring)] = rring
         self.cache, logits = self._paged_prefill(
             self.params, self.cache, jnp.asarray(chunk),
-            jnp.asarray([off], jnp.int32), jnp.asarray(trow),
-            jnp.asarray([c], jnp.int32))
+            jnp.asarray([off], jnp.int32),
+            dict(full=jnp.asarray(trow), ring=jnp.asarray(rrow)),
+            jnp.asarray([c], jnp.int32), jnp.int32(slot))
         self.stats.prefill_chunks += 1
         off += c
         if off < s:
             self._pending[slot] = off
             return
-        # prompt complete: seed decoding and publish the table row
+        # prompt complete: seed decoding and publish the table rows
         del self._pending[slot]
         if self.prefix is not None:
             for i, h in enumerate(self._hashes.get(req.rid, [])):
@@ -361,6 +469,10 @@ class ServeEngine:
         self._hashes.pop(req.rid, None)
         self._htable[slot, :] = 0
         self._htable[slot, :len(row)] = row
+        if self.ralloc is not None:
+            rring = self.ralloc.tables[req.rid]
+            self._hrtable[slot, :] = 0
+            self._hrtable[slot, :len(rring)] = rring
         self._table_dirty = True
         self.pos = self.pos.at[slot].set(s)
         self._hpos[slot] = s
@@ -407,32 +519,45 @@ class ServeEngine:
         return budgets
 
     def _reserve_window_pages(self, budgets: np.ndarray) -> np.ndarray:
-        """Pre-allocate pages covering each slot's window budget (page
-        allocation is host-side; the fused loop must never need a page).
-        Pool pressure shrinks budgets (possibly to zero — the slot waits)
-        after evicting prefix-cache pages nothing references."""
+        """Pre-allocate pages covering each slot's window budget on every
+        pool the stack uses (page allocation is host-side; the fused loop
+        must never need a page).  Ring pools rotate in place past their
+        window, so steady-state windowed decode allocates nothing.  Pool
+        pressure shrinks budgets (possibly to zero — the slot waits) after
+        evicting prefix-cache pages nothing references."""
         blocked = np.zeros((self.bsz,), bool)
         for i, req in enumerate(self.slots):
             if req is None or budgets[i] == 0:
                 continue
             target = int(self._hpos[i] + budgets[i])
-            feasible = self.alloc.can_grow(req.rid, target)
-            if feasible < target and self.prefix is not None:
-                self.prefix.evict_unused(self.alloc)
+            feasible = target
+            if self.alloc is not None:
                 feasible = self.alloc.can_grow(req.rid, target)
+                if feasible < target and self.prefix is not None:
+                    self.prefix.evict_unused(self.alloc)
+                    feasible = self.alloc.can_grow(req.rid, target)
+            if self.ralloc is not None:
+                feasible = min(feasible,
+                               self.ralloc.can_grow(req.rid, target))
             grant = max(0, feasible - int(self._hpos[i]))
             if grant < budgets[i]:
                 budgets[i] = grant
                 blocked[i] = grant == 0
             if budgets[i] > 0:
-                fresh = self.alloc.reserve(req.rid,
-                                           int(self._hpos[i] + budgets[i]))
-                if fresh:
-                    row = self.alloc.tables[req.rid]
-                    self._htable[i, :len(row)] = row
-                    self._table_dirty = True
-        self.stats.pages_peak = max(self.stats.pages_peak,
-                                    self.alloc.pages_in_use)
+                target = int(self._hpos[i] + budgets[i])
+                if self.alloc is not None:
+                    fresh = self.alloc.reserve(req.rid, target)
+                    if fresh:
+                        row = self.alloc.tables[req.rid]
+                        self._htable[i, :len(row)] = row
+                        self._table_dirty = True
+                if self.ralloc is not None:
+                    fresh = self.ralloc.reserve(req.rid, target)
+                    if fresh:
+                        rring = self.ralloc.tables[req.rid]
+                        self._hrtable[i, :len(rring)] = rring
+                        self._table_dirty = True
+        self._track_peaks()
         return blocked
 
     def decode_many(self, n: int) -> int:
@@ -462,16 +587,20 @@ class ServeEngine:
         top = int(budgets.max(initial=0))
         if top == 0:
             if blocked.any() and not self._pending:
+                in_use = sum(a.pages_in_use
+                             for a in (self.alloc, self.ralloc)
+                             if a is not None)
                 raise PoolExhausted(
                     "every active slot is pool-blocked and nothing can "
                     "free pages: the pool is smaller than the live working "
-                    f"set ({self.alloc.pages_in_use} pages in use)")
+                    f"set ({in_use} pages in use)")
             return 0
         n_run = min(n, next_pow2(top))  # pow2 ticks: bounded trace count
         steps = jnp.asarray(np.minimum(budgets, n_run), jnp.int32)
         if self.backend == "paged":
             if self._table_dirty:
-                self._table = jnp.asarray(self._htable)
+                self._table = dict(full=jnp.asarray(self._htable),
+                                   ring=jnp.asarray(self._hrtable))
                 self._table_dirty = False
             self.cache, self.tokens, self.pos, out = self._paged_decode_many(
                 n_run, self.params, self.cache, self.tokens, self.pos, steps,
@@ -497,15 +626,20 @@ class ServeEngine:
         return produced
 
     def _release_finished(self, i: int) -> None:
-        """Retire slot ``i``: paged pages go back to the pool *immediately*
-        (prefix-pinned ones persist for future hits) and the slot's table
-        row reverts to the null page so masked writes stay harmless."""
+        """Retire slot ``i``: paged pages go back to their pools
+        *immediately* (prefix-pinned ones persist for future hits) and the
+        slot's table rows revert to the null page so masked writes stay
+        harmless."""
         req = self.slots[i]
         self.slots[i] = None
         if self.backend == "paged":
-            self.alloc.release(req.rid)
+            if self.alloc is not None:
+                self.alloc.release(req.rid)
+            if self.ralloc is not None:
+                self.ralloc.release(req.rid)
             self._hashes.pop(req.rid, None)
             self._htable[i, :] = 0
+            self._hrtable[i, :] = 0
             self._table_dirty = True
 
     # ------------------------------------------------------------------
@@ -568,10 +702,10 @@ def _paged_decode_many_impl(bundle: ModelBundle, plan, n: int, params, cache,
 
     def body(i, carry):
         cache, tokens, pos, out = carry
-        logits, cache = bundle.paged_decode_step(params, cache, tokens, pos,
-                                                 table, plan)
-        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)   # (B,)
         act = i < steps
+        logits, cache = bundle.paged_decode_step(params, cache, tokens, pos,
+                                                 table, plan, act)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)   # (B,)
         tokens = jnp.where(act[:, None], nxt[:, None], tokens)
         pos = jnp.where(act, pos + 1, pos)
         out = out.at[i].set(jnp.where(act, nxt, -1))

@@ -60,14 +60,27 @@ class PageAllocator:
     the whole stack.  ``reserved`` ids (0..reserved-1) are never allocated —
     the engine reserves page 0 as the *null page* that padded table entries
     point at, so masked/inactive writes can never corrupt live data.
+
+    ``window`` turns the allocator into a *ring*: a request's table holds at
+    most ``ceil(window/page_size) + 1`` pages, indexed by ring slot
+    (``logical_page % ring_slots``), and growth past the ring *rotates* —
+    the trailing page (fully outside the sliding window by the capacity
+    argument: ``ring_slots*page >= window + page``) is reused in place, so
+    a windowed sequence's footprint is constant however long it runs.  A
+    rotated-onto page that is shared (fork) is copy-split instead of reused,
+    so sharers never see the overwrite.
     """
 
-    def __init__(self, num_pages: int, page_size: int, reserved: int = 0):
+    def __init__(self, num_pages: int, page_size: int, reserved: int = 0,
+                 window: Optional[int] = None):
         if reserved >= num_pages:
             raise ValueError("reserved pages exhaust the pool")
         self.num_pages = num_pages
         self.page_size = page_size
         self.reserved = reserved
+        self.window = window
+        self.ring_slots = (None if window is None
+                           else -(-window // page_size) + 1)
         self.free: List[int] = list(range(reserved, num_pages))  # kept sorted
         self.tables: Dict[int, List[int]] = {}
         self.lengths: Dict[int, int] = {}
@@ -93,9 +106,48 @@ class PageAllocator:
         bisect.insort(self.free, pid)
         del self.ref[pid]
 
+    def _ring_growth(self, rid: int, new_len: int) -> List[Tuple[int, int]]:
+        """Ring bookkeeping for growing ``rid`` to ``new_len`` tokens:
+        ``(logical_page, kind)`` steps, kind 0 = append a fresh page,
+        kind 1 = rotate in place (free), kind 2 = rotate a *shared* page
+        (costs one copy-split page)."""
+        page, r = self.page_size, self.ring_slots
+        hi = (new_len - 1) // page if new_len > 0 else -1
+        old = self.lengths[rid]
+        old_hi = (old - 1) // page if old > 0 else -1
+        table = self.tables[rid]
+        nslots = len(table)
+        private = set()  # slots whose page is known private this round
+        steps: List[Tuple[int, int]] = []
+        for logical in range(old_hi + 1, hi + 1):
+            slot = logical % r
+            if slot >= nslots:
+                steps.append((logical, 0))
+                nslots += 1
+                private.add(slot)  # fresh page: private by construction
+            elif slot not in private and self.is_shared(table[slot]):
+                steps.append((logical, 2))
+                private.add(slot)
+            else:
+                steps.append((logical, 1))
+                private.add(slot)
+        return steps
+
     def can_grow(self, rid: int, new_len: int) -> int:
         """Largest length <= ``new_len`` coverable without exhausting the
         pool (the engine's budget cap under pool pressure)."""
+        if self.window is not None:
+            old = self.lengths[rid]
+            old_hi = (old - 1) // self.page_size if old > 0 else -1
+            ok = (old_hi + 1) * self.page_size  # covered by existing pages
+            free = len(self.free)
+            for logical, kind in self._ring_growth(rid, new_len):
+                if kind != 1:
+                    if free == 0:
+                        break
+                    free -= 1
+                ok = (logical + 1) * self.page_size
+            return min(new_len, ok)
         have = len(self.tables[rid])
         cap = (have + len(self.free)) * self.page_size
         return min(new_len, cap)
@@ -103,9 +155,34 @@ class PageAllocator:
     def reserve(self, rid: int, new_len: int) -> List[int]:
         """Ensure the table covers ``new_len`` tokens; returns the newly
         allocated page ids.  All-or-nothing: raises :class:`PoolExhausted`
-        without partial allocation."""
-        need = -(-new_len // self.page_size)
+        without partial allocation.  Ring allocators rotate in place past
+        ``ring_slots`` pages, releasing/reusing the trailing page the moment
+        the window slides past it."""
         table = self.tables[rid]
+        if self.window is not None:
+            steps = self._ring_growth(rid, new_len)
+            cost = sum(1 for _, kind in steps if kind != 1)
+            if cost > len(self.free):
+                raise PoolExhausted(
+                    f"need {cost} ring pages for rid {rid}, only "
+                    f"{len(self.free)} free")
+            fresh: List[int] = []
+            for logical, kind in steps:
+                slot = logical % self.ring_slots
+                if kind == 0:
+                    pid = self._take_page()
+                    table.append(pid)
+                    fresh.append(pid)
+                elif kind == 2:  # shared: split off a private page
+                    old = table[slot]
+                    self.ref[old] -= 1  # shared => never drops to 0 here
+                    pid = self._take_page()
+                    table[slot] = pid
+                    fresh.append(pid)
+                # kind 1: in-place reuse — no pool traffic at all
+            self.lengths[rid] = max(self.lengths[rid], new_len)
+            return fresh
+        need = -(-new_len // self.page_size)
         grow = need - len(table)
         if grow > len(self.free):
             raise PoolExhausted(
@@ -121,6 +198,10 @@ class PageAllocator:
         table = self.tables[rid]
         if table:
             raise ValueError("attach only onto an empty table")
+        if self.ring_slots is not None and len(pages) > self.ring_slots:
+            raise ValueError(
+                f"attach of {len(pages)} pages exceeds the ring "
+                f"({self.ring_slots} slots)")
         for pid in pages:
             self.ref[pid] += 1
             table.append(pid)
@@ -225,27 +306,32 @@ class PagedKVCache(PageAllocator):
     head_dim: int
     dtype: str = "float32"
     reserved: int = 0
+    window: Optional[int] = None
 
     def __post_init__(self):
         PageAllocator.__init__(self, self.num_pages, self.page_size,
-                               self.reserved)
+                               self.reserved, window=self.window)
         shape = (self.num_pages, self.page_size, self.num_kv_heads,
                  self.head_dim)
         self.k_pages = jnp.zeros(shape, jnp.dtype(self.dtype))
         self.v_pages = jnp.zeros(shape, jnp.dtype(self.dtype))
 
     # ------------------------------------------------------------------
+    def _slot(self, logical: int) -> int:
+        """Table index of a logical page (identity, or the ring slot)."""
+        return logical if self.ring_slots is None else logical % self.ring_slots
+
     def _cow(self, rid: int, logical: int) -> int:
         """Copy-on-write: give ``rid`` a private copy of a shared page
         before writing into it.  The shared original is never mutated."""
-        old = self.tables[rid][logical]
+        old = self.tables[rid][self._slot(logical)]
         if not self.is_shared(old):
             return old
         new = self._take_page()
         self.k_pages = self.k_pages.at[new].set(self.k_pages[old])
         self.v_pages = self.v_pages.at[new].set(self.v_pages[old])
         self.ref[old] -= 1  # shared => never drops to 0 here
-        self.tables[rid][logical] = new
+        self.tables[rid][self._slot(logical)] = new
         return new
 
     def append(self, rid: int, k: jax.Array, v: jax.Array):
@@ -257,12 +343,21 @@ class PagedKVCache(PageAllocator):
         s = k.shape[0]
         start = self.lengths[rid]
         table = self.tables[rid]
-        need_fresh = max(0, -(-(start + s) // self.page_size) - len(table))
         end_li = (start + s - 1) // self.page_size
-        need_cow = sum(
-            1 for li in range(start // self.page_size,
-                              min(len(table), end_li + 1))
-            if self.is_shared(table[li]))
+        if self.ring_slots is None:
+            need_fresh = max(0, end_li + 1 - len(table))
+            in_table = range(start // self.page_size,
+                             min(len(table), end_li + 1))
+            need_cow = sum(1 for li in in_table if self.is_shared(table[li]))
+        else:
+            steps = self._ring_growth(rid, start + s)
+            need_fresh = sum(1 for _, kind in steps if kind != 1)
+            touched = {lg % self.ring_slots for lg, _ in steps}
+            old_hi = (start - 1) // self.page_size if start > 0 else -1
+            need_cow = sum(
+                1 for li in range(start // self.page_size, old_hi + 1)
+                if (li % self.ring_slots) not in touched
+                and self.is_shared(table[li % self.ring_slots]))
         if need_fresh + need_cow > len(self.free):
             raise PoolExhausted(
                 f"append of {s} tokens needs {need_fresh} fresh + "
@@ -287,6 +382,10 @@ class PagedKVCache(PageAllocator):
         pages (default: the max across ``rids``).  Unused table entries
         point at page 0 — reserve it as a null page (``reserved=1``) when
         padded entries may be written through (masked decode ticks)."""
+        if self.ring_slots is not None:
+            # ring tables must be exactly ring_slots wide: the kernel maps
+            # logical pages to slots with ``logical % width``
+            width = self.ring_slots
         n = width or max(1, max(len(self.tables[r]) for r in rids))
         table = np.zeros((len(rids), n), np.int32)
         for i, r in enumerate(rids):

@@ -219,7 +219,10 @@ def derive_paged_plan(*, max_len: int, head_dim: int, dtype: str = "bfloat16",
     throughput-vs-resources tradeoff), so the page is the *smallest* pow2
     token count whose row block crosses that optimum — clamped to the
     sequence budget so a short ``max_len`` is never a single page.
-    Pipeline depth (outstanding gathers) comes from the tuned r_acc knobs.
+    ``dtype`` is the dtype the pool *stores*: int8 KV pages halve the row
+    width, so the derived page holds proportionally more tokens — the
+    paper's data-width lever applied to HBM layout.  Pipeline depth
+    (outstanding gathers) comes from the tuned r_acc knobs.
     """
     import jax.numpy as jnp
     spec, source = _resolve_spec(spec, calibration)

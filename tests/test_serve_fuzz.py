@@ -1,0 +1,226 @@
+"""Differential fuzz harness for the universal paged serving backend.
+
+Hypothesis drives random request mixes — prompt lengths, generation
+budgets, shared prefixes, mid-drain admissions — through the dense and
+paged engines and demands *token-identical* greedy outputs for every
+newly-supported stack: gemma2-27b (sliding-window ring pages + softcap
+kernel path), recurrentgemma-9b (hybrid rglru + windowed attention), and
+int8-KV gemma-2b (quantized pages with per-page scale lanes).  Greedy
+decode is schedule-invariant (slots never mix requests), so the two
+engines may interleave prefill chunks and decode windows differently and
+must still agree token for token.
+
+Also here: the allocator/prefix-index conservation property (satellite) —
+any alloc/reserve/fork/release/evict sequence conserves pages, never
+drives a refcount negative, and ring tables never exceed
+``ceil(window/page)+1`` slots.
+
+The short mixes run in tier-1; the long-drain mixes are ``slow`` and run
+in the CI bench-smoke job.
+"""
+import jax
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="dev dependency — pip install -r requirements-dev.txt")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.configs import ARCHS, smoke_config  # noqa: E402
+from repro.models import RuntimeFlags, build  # noqa: E402
+from repro.serve import (PageAllocator, PoolExhausted, PrefixIndex,  # noqa: E402
+                         Request, ServeEngine)
+
+FLAGS = RuntimeFlags(attn_impl="chunked", attn_bq=16, attn_bkv=16,
+                     moe_impl="dense", loss_chunk=16)
+INT8_FLAGS = RuntimeFlags(attn_impl="chunked", attn_bq=16, attn_bkv=16,
+                          moe_impl="dense", loss_chunk=16, kv_dtype="int8")
+
+STACKS = {
+    "gemma2-27b": FLAGS,              # ring pages + softcap kernel path
+    "recurrentgemma-9b": FLAGS,       # hybrid: rglru + windowed attention
+    "gemma-2b-int8": INT8_FLAGS,      # int8 KV pages + scale lanes
+}
+
+MAX_LEN = 64
+BATCH = 2
+
+_ENGINES = {}
+
+
+def _engines(stack: str):
+    """One (dense, paged) engine pair per stack, reused across hypothesis
+    examples via ``reset()`` so jit traces amortize."""
+    if stack not in _ENGINES:
+        arch = "gemma-2b" if stack == "gemma-2b-int8" else stack
+        cfg = smoke_config(ARCHS[arch])
+        bundle = build(cfg, STACKS[stack])
+        params = bundle.init(jax.random.PRNGKey(7))
+        dense = ServeEngine(bundle, params, batch_size=BATCH,
+                            max_len=MAX_LEN, cache_backend="dense")
+        paged = ServeEngine(bundle, params, batch_size=BATCH,
+                            max_len=MAX_LEN, cache_backend="paged",
+                            prefill_chunk=8)
+        _ENGINES[stack] = (cfg, dense, paged)
+    return _ENGINES[stack]
+
+
+# ---------------------------------------------------------------------------
+# workload strategy
+# ---------------------------------------------------------------------------
+
+def _mix(max_requests: int, max_prompt: int):
+    """A request mix: per request (prompt_len, shared_prefix?, max_new,
+    second_wave?)."""
+    req = st.tuples(st.integers(1, max_prompt), st.booleans(),
+                    st.integers(1, 8), st.booleans())
+    return st.lists(req, min_size=1, max_size=max_requests)
+
+
+def _materialize(cfg, mix, seed):
+    """Deterministic prompts from the mix spec: shared-prefix requests
+    start with the same 9-token run (crosses a page boundary for page=8),
+    so the paged engine's prefix machinery sees real sharing."""
+    rng = np.random.default_rng(seed)
+    common = rng.integers(0, cfg.vocab_size, size=9).astype(np.int32)
+    waves = ([], [])
+    for plen, shared, max_new, second in mix:
+        tail = rng.integers(0, cfg.vocab_size, size=plen).astype(np.int32)
+        prompt = np.concatenate([common, tail]) if shared else tail
+        waves[1 if second else 0].append((prompt, max_new))
+    if not waves[0]:  # at least one request must open the drain
+        waves = (waves[1], [])
+    return waves
+
+
+def _drive(eng, waves):
+    """Admit wave 0, tick a few times so wave 1 lands mid-drain, then
+    drain.  Returns the per-request greedy outputs in admission order."""
+    eng.reset()
+    reqs = []
+    for prompt, max_new in waves[0]:
+        r = Request(rid=len(reqs), prompt=prompt, max_new_tokens=max_new)
+        reqs.append(r)
+        eng.add_request(r)
+    if waves[1]:
+        for _ in range(3):
+            eng.step()      # mid-drain: slots busy, maybe prefill pending
+        for prompt, max_new in waves[1]:
+            r = Request(rid=len(reqs), prompt=prompt, max_new_tokens=max_new)
+            reqs.append(r)
+            eng.add_request(r)
+    eng.run_to_completion(max_ticks=5_000)
+    assert all(s is None for s in eng.slots)
+    return [r.out_tokens for r in reqs]
+
+
+def _assert_token_identical(stack, mix, seed):
+    cfg, dense, paged = _engines(stack)
+    waves = _materialize(cfg, mix, seed)
+    want = _drive(dense, waves)
+    got = _drive(paged, waves)
+    assert got == want, (
+        f"{stack}: paged outputs diverged from dense for mix {mix}")
+    for toks, (_, max_new) in zip(got, waves[0] + waves[1]):
+        assert len(toks) == max_new       # budget exactness rides along
+
+
+@pytest.mark.parametrize("stack", sorted(STACKS))
+@settings(max_examples=4, deadline=None)
+@given(mix=_mix(max_requests=3, max_prompt=12), seed=st.integers(0, 2**16))
+def test_fuzz_paged_matches_dense(stack, mix, seed):
+    """Tier-1 fuzz: small mixes, every newly-supported stack."""
+    _assert_token_identical(stack, mix, seed)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("stack", sorted(STACKS))
+@settings(max_examples=6, deadline=None)
+@given(mix=_mix(max_requests=6, max_prompt=40), seed=st.integers(0, 2**16))
+def test_fuzz_paged_matches_dense_long_drain(stack, mix, seed):
+    """Long drains: prompts overflow several pages (and the ring), slots
+    churn through multiple requests, mid-drain admissions stack up."""
+    _assert_token_identical(stack, mix, seed)
+
+
+# ---------------------------------------------------------------------------
+# allocator + prefix-index conservation property (satellite)
+# ---------------------------------------------------------------------------
+
+def _check_invariants(alloc: PageAllocator):
+    assert alloc.pages_in_use + len(alloc.free) == (
+        alloc.num_pages - alloc.reserved), "pages leaked or double-freed"
+    for pid, r in alloc.ref.items():
+        assert r >= 1, f"refcount underflow on page {pid}"
+    for rid, table in alloc.tables.items():
+        if alloc.ring_slots is not None:
+            assert len(table) <= alloc.ring_slots, (
+                f"ring rid {rid} holds {len(table)} > "
+                f"{alloc.ring_slots} pages")
+
+
+OPS = st.lists(
+    st.tuples(st.sampled_from(["alloc", "reserve", "fork", "release",
+                               "pin_evict"]),
+              st.integers(0, 5), st.integers(1, 48)),
+    min_size=1, max_size=40)
+
+
+def _exercise_allocator(ops, num_pages, window):
+    alloc = PageAllocator(num_pages, 4, reserved=1, window=window)
+    idx = PrefixIndex()
+    next_rid = 0
+    live = []
+    for op, pick, length in ops:
+        try:
+            if op == "alloc":
+                alloc.alloc(next_rid)
+                live.append(next_rid)
+                next_rid += 1
+            elif op == "reserve" and live:
+                rid = live[pick % len(live)]
+                alloc.reserve(rid, alloc.lengths[rid] + length)
+            elif op == "fork" and live and window is None:
+                src = live[pick % len(live)]
+                alloc.fork(src, next_rid)
+                live.append(next_rid)
+                next_rid += 1
+            elif op == "fork" and live:
+                # ring fork: attach a copy of the (<= ring_slots) table
+                src = live[pick % len(live)]
+                alloc.alloc(next_rid)
+                alloc.attach(next_rid, list(alloc.tables[src]),
+                             alloc.lengths[src])
+                live.append(next_rid)
+                next_rid += 1
+            elif op == "release" and live:
+                rid = live.pop(pick % len(live))
+                alloc.release(rid)
+            elif op == "pin_evict" and live and window is None:
+                rid = live[pick % len(live)]
+                for pid in alloc.tables[rid]:
+                    # content-hash surrogate: one index entry per page
+                    if idx.register(f"h{pid}", pid):
+                        alloc.pin(pid)
+                idx.evict_unused(alloc)
+        except PoolExhausted:
+            pass  # backpressure is a legal outcome, never a corrupt state
+        _check_invariants(alloc)
+    for rid in list(live):
+        alloc.release(rid)
+    _check_invariants(alloc)
+    assert alloc.pages_in_use == len(idx), (
+        "after releasing every request, only index-pinned pages may live")
+    idx.evict_unused(alloc)
+    assert alloc.pages_in_use == 0 and len(idx) == 0
+
+
+@settings(max_examples=120, deadline=None)
+@given(ops=OPS, num_pages=st.integers(4, 24),
+       window=st.sampled_from([None, 8, 13, 24]))
+def test_allocator_conserves_pages_and_ring_bound(ops, num_pages, window):
+    """Any alloc/reserve/fork/release/evict sequence conserves pages
+    (live + free == pool - reserved), never drives a refcount negative,
+    and ring tables never exceed ceil(window/page)+1 slots."""
+    _exercise_allocator(ops, num_pages, window)

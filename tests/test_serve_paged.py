@@ -109,6 +109,46 @@ def test_append_cow_budget_is_all_or_nothing():
     assert pool.lengths[1] == 6 and len(pool.tables[1]) == 2
 
 
+def test_allocator_random_ops_conserve_pages_without_hypothesis():
+    """Hypothesis-free twin of the test_serve_fuzz conservation property
+    (that module skips entirely when hypothesis is absent): 120 seeded
+    random alloc/reserve/fork/release sequences over full and ring
+    allocators must conserve pages, keep refcounts >= 1, and respect the
+    ring bound."""
+    rng = np.random.default_rng(3)
+    for trial in range(120):
+        num_pages = int(rng.integers(4, 25))
+        window = [None, 8, 13, 24][trial % 4]
+        a = PageAllocator(num_pages, 4, reserved=1, window=window)
+        live, next_rid = [], 0
+        for _ in range(int(rng.integers(1, 40))):
+            op = int(rng.integers(0, 4))
+            try:
+                if op == 0:
+                    a.alloc(next_rid)
+                    live.append(next_rid)
+                    next_rid += 1
+                elif op == 1 and live:
+                    rid = live[int(rng.integers(0, len(live)))]
+                    a.reserve(rid, a.lengths[rid] + int(rng.integers(1, 49)))
+                elif op == 2 and live:
+                    src = live[int(rng.integers(0, len(live)))]
+                    a.fork(src, next_rid)
+                    live.append(next_rid)
+                    next_rid += 1
+                elif op == 3 and live:
+                    a.release(live.pop(int(rng.integers(0, len(live)))))
+            except PoolExhausted:
+                pass     # backpressure is legal; corruption is not
+            assert a.pages_in_use + len(a.free) == num_pages - 1
+            assert all(r >= 1 for r in a.ref.values())
+            if a.ring_slots is not None:
+                assert all(len(t) <= a.ring_slots for t in a.tables.values())
+        for rid in live:
+            a.release(rid)
+        assert a.pages_in_use == 0
+
+
 def test_prefix_index_longest_match_and_eviction():
     a = PageAllocator(8, 4)
     a.alloc(0); a.reserve(0, 12)
@@ -167,6 +207,113 @@ def test_paged_matches_dense_token_for_token(arch):
 
 
 @pytest.mark.slow
+@pytest.mark.parametrize("arch", ["gemma2-27b", "recurrentgemma-9b",
+                                  "mamba2-130m"])
+def test_paged_matches_dense_newly_supported_stacks(arch):
+    """Tentpole acceptance: ring-paged windows (gemma2), hybrid recurrent
+    stacks (recurrentgemma, mamba2) reproduce the dense engine exactly
+    under slot churn and chunked prefill."""
+    cfg = smoke_config(ARCHS[arch])
+    bundle = build(cfg, FLAGS)
+    params = bundle.init(jax.random.PRNGKey(12))
+    rng = np.random.default_rng(21)
+    prompts = [rng.integers(0, cfg.vocab_size, size=int(n)).astype(np.int32)
+               for n in (5, 13, 9, 27, 7, 18)]
+    dense, sd, _ = _drain_tokens(bundle, params, backend="dense",
+                                 prompts=prompts, max_new=6)
+    paged, sp, eng = _drain_tokens(bundle, params, backend="paged",
+                                   prompts=prompts, max_new=6,
+                                   prefill_chunk=8)
+    assert paged == dense
+    assert sp.tokens_out == sd.tokens_out == 6 * 6
+    if eng.ralloc is not None:
+        assert eng.ralloc.pages_in_use == 0   # churn really released
+
+
+@pytest.mark.slow
+def test_paged_matches_dense_int8_kv():
+    """int8 KV pages (quantized k/v + per-page scale lanes, dequant fused
+    into the kernel) reproduce the dense int8 engine token for token."""
+    cfg = smoke_config(ARCHS["gemma-2b"])
+    flags = RuntimeFlags(attn_impl="chunked", attn_bq=16, attn_bkv=16,
+                         moe_impl="dense", loss_chunk=16, kv_dtype="int8")
+    bundle = build(cfg, flags)
+    params = bundle.init(jax.random.PRNGKey(13))
+    rng = np.random.default_rng(22)
+    prompts = [rng.integers(0, cfg.vocab_size, size=int(n)).astype(np.int32)
+               for n in (5, 13, 9, 27)]
+    dense, _, de = _drain_tokens(bundle, params, backend="dense",
+                                 prompts=prompts, max_new=6)
+    paged, _, pe = _drain_tokens(bundle, params, backend="paged",
+                                 prompts=prompts, max_new=6, prefill_chunk=8)
+    assert paged == dense
+    # int8 halves the unit size, so the derived page doubles in tokens
+    assert pe.page >= 2 * ServeEngine(
+        build(cfg, FLAGS), params, batch_size=1, max_len=64).page
+    assert pe.live_kv_bytes_peak() < de.kv_bytes()
+
+
+def test_ring_pages_bounded_and_eagerly_released():
+    """The ring headline: a windowed layer's live pages never exceed
+    ceil(window/page)+1 per slot however long the sequence runs — the
+    trailing page is reused in place the moment the window slides past."""
+    cfg = smoke_config(ARCHS["gemma2-27b"])     # (local 16, global) pattern
+    bundle = build(cfg, FLAGS)
+    params = bundle.init(jax.random.PRNGKey(14))
+    eng = ServeEngine(bundle, params, batch_size=1, max_len=64,
+                      cache_backend="paged", prefill_chunk=8)
+    req = Request(rid=0, prompt=np.arange(10, dtype=np.int32),
+                  max_new_tokens=40)           # runs to position 50: 7 pages
+    eng.add_request(req)
+    eng.run_to_completion()
+    assert len(req.out_tokens) == 40
+    assert eng.ring_slots == 3                  # ceil(16/8) + 1
+    assert eng.stats.ring_pages_peak <= eng.ring_slots
+    # the full-attention layer kept every page; the ring did not
+    assert eng.stats.pages_peak >= 7
+    assert eng.ralloc.pages_in_use == 0 and eng.alloc.pages_in_use == 0
+
+
+def test_ring_prefill_chunk_wider_than_ring_capacity():
+    """A prefill chunk spanning more logical pages than the ring has slots
+    must not scatter two pages through one slot (duplicate indices have
+    unspecified order): writes older than the trailing (R-1) pages steer
+    to the null page instead, and outputs still match dense exactly."""
+    cfg = smoke_config(ARCHS["gemma2-27b"])   # window 16, page 8, R = 3
+    bundle = build(cfg, FLAGS)
+    params = bundle.init(jax.random.PRNGKey(16))
+    rng = np.random.default_rng(24)
+    prompts = [rng.integers(0, cfg.vocab_size, size=40).astype(np.int32)]
+    dense, _, _ = _drain_tokens(bundle, params, backend="dense",
+                                prompts=prompts, max_new=6)
+    # prefill_chunk=32 > ring capacity 24 tokens: one chunk wraps the ring
+    paged, _, eng = _drain_tokens(bundle, params, backend="paged",
+                                  prompts=prompts, max_new=6,
+                                  prefill_chunk=32)
+    assert eng.prefill_chunk > eng.ring_slots * eng.page - eng.page
+    assert paged == dense
+
+
+def test_hybrid_pending_prefill_state_survives_decode_windows():
+    """Hybrid regression guard: a long prompt prefilling in chunks while
+    another slot decodes must not have its recurrent state trampled by the
+    masked decode ticks between its chunks."""
+    cfg = smoke_config(ARCHS["recurrentgemma-9b"])
+    bundle = build(cfg, FLAGS)
+    params = bundle.init(jax.random.PRNGKey(15))
+    rng = np.random.default_rng(23)
+    prompts = [rng.integers(0, cfg.vocab_size, size=4).astype(np.int32),
+               rng.integers(0, cfg.vocab_size, size=40).astype(np.int32)]
+    dense, _, _ = _drain_tokens(bundle, params, backend="dense",
+                                prompts=prompts, max_new=8)
+    paged, sp, _ = _drain_tokens(bundle, params, backend="paged",
+                                 prompts=prompts, max_new=8,
+                                 prefill_chunk=8)
+    assert paged == dense
+    assert sp.prefill_chunks >= 6   # the long prompt really chunked
+
+
+@pytest.mark.slow
 def test_paged_matches_dense_bfloat16():
     cfg = override(smoke_config(ARCHS["gemma-2b"]), compute_dtype="bfloat16")
     bundle = build(cfg, FLAGS)
@@ -181,21 +328,26 @@ def test_paged_matches_dense_bfloat16():
     assert paged == dense
 
 
-def test_paged_is_default_for_pure_attention_and_dense_for_the_rest():
-    gemma = build(smoke_config(ARCHS["gemma-2b"]), FLAGS)
-    assert gemma.paged_supported()
-    mamba = build(smoke_config(ARCHS["mamba2-130m"]), FLAGS)
-    assert not mamba.paged_supported()
-    windowed = build(smoke_config(ARCHS["gemma2-27b"]), FLAGS)
-    assert not windowed.paged_supported()
+def test_paged_is_default_for_every_decoder_only_stack():
+    """Tentpole: the page pool is the default backend for (nearly) every
+    decoder in the registry — windowed (ring pages), recurrent hybrids
+    (dense state beside the pools), pure-ssm, and int8-KV stacks included.
+    Only enc-dec and frontend stacks keep the dense per-slot cache."""
+    for arch in ("gemma-2b", "mamba2-130m", "gemma2-27b",
+                 "recurrentgemma-9b", "phi4-mini-3.8b"):
+        assert build(smoke_config(ARCHS[arch]), FLAGS).paged_supported(), arch
     int8 = build(smoke_config(ARCHS["gemma-2b"]),
                  RuntimeFlags(attn_impl="chunked", kv_dtype="int8"))
-    assert not int8.paged_supported()
-    params = mamba.init(jax.random.PRNGKey(0))
-    eng = ServeEngine(mamba, params, batch_size=1, max_len=32)
+    assert int8.paged_supported()
+    encdec = build(smoke_config(ARCHS["seamless-m4t-medium"]), FLAGS)
+    assert not encdec.paged_supported()
+    vlm = build(smoke_config(ARCHS["pixtral-12b"]), FLAGS)
+    assert not vlm.paged_supported()
+    params = encdec.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(encdec, params, batch_size=1, max_len=32)
     assert eng.backend == "dense"       # auto fallback
     with pytest.raises(ValueError):
-        ServeEngine(mamba, params, batch_size=1, max_len=32,
+        ServeEngine(encdec, params, batch_size=1, max_len=32,
                     cache_backend="paged")
 
 

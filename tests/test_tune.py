@@ -68,6 +68,21 @@ def test_paged_plan_page_size_is_transaction_optimum():
     assert tiny.page_size == 8
 
 
+def test_paged_plan_int8_widens_page_by_dtype_ratio():
+    """int8 KV pages halve the unit width, so the derived page holds
+    proportionally more tokens — the serving engine lays its pool out from
+    the kv *storage* dtype, not the compute dtype."""
+    bf16 = derive_plan("paged_attention", shape_sig=(4096, 16),
+                       dtype="bfloat16")
+    f32 = derive_plan("paged_attention", shape_sig=(4096, 16),
+                      dtype="float32")
+    int8 = derive_plan("paged_attention", shape_sig=(4096, 16), dtype="int8")
+    assert int8.page_size == 2 * bf16.page_size == 4 * f32.page_size
+    # same transaction bytes either way: the optimum is dtype-invariant
+    assert int8.page_size * 16 * 1 >= 512
+    assert bf16.page_size * 16 * 2 >= 512
+
+
 def test_plan_blocks_clamped_to_shape():
     plan = derive_plan("flash_attention", shape_sig=(16, 24, 16),
                        dtype="float32")

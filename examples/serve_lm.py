@@ -8,8 +8,14 @@ supports it), the dense per-slot KV cache against the shared page pool:
 chunked prefill, prefix-cached prompt pages, and the ``paged_attention``
 kernel dereferencing a device-resident page table (§6 `r_acc`).
 
+Sampling is fused on device (``--temperature/--top-k/--top-p/--seed``;
+temperature 0 is exact greedy), and ``--draft self`` (or an arch name)
+switches the paged fast path to speculative draft->verify dispatches —
+the accept rate prints alongside throughput.
+
     PYTHONPATH=src python examples/serve_lm.py [--requests N] [--batch B]
                                                [--cache {auto,dense,paged}]
+                                               [--temperature T] [--draft self]
 """
 import argparse
 import os
@@ -23,7 +29,7 @@ import numpy as np
 
 from repro.configs import ARCHS, smoke_config
 from repro.models import RuntimeFlags, build
-from repro.serve import Request, ServeEngine
+from repro.serve import Request, SamplingParams, ServeEngine
 
 
 def _enqueue(eng, args):
@@ -40,10 +46,15 @@ def _enqueue(eng, args):
                                 max_new_tokens=args.max_new))
 
 
-def _drive(bundle, params, args, *, window, bucket, label, backend=None):
+def _drive(bundle, params, args, *, window, bucket, label, backend=None,
+           **kw):
     eng = ServeEngine(bundle, params, batch_size=args.batch, max_len=128,
                       window=window, bucket_prompts=bucket,
-                      cache_backend=backend)
+                      cache_backend=backend,
+                      sampling=SamplingParams(temperature=args.temperature,
+                                              top_k=args.top_k,
+                                              top_p=args.top_p),
+                      seed=args.seed, **kw)
     _enqueue(eng, args)
     cold = eng.run_to_completion()     # compiles; reset keeps the traces
     compiles = cold.prefill_retraces
@@ -57,6 +68,10 @@ def _drive(bundle, params, args, *, window, bucket, label, backend=None):
     if eng.backend == "paged":
         extra = (f", {stats.prefix_hit_tokens}/{stats.prompt_tokens} "
                  f"prefix-cached prompt tokens")
+    if stats.spec_steps:
+        extra += (f", {stats.accept_rate:.0%} draft accept rate "
+                  f"({stats.draft_accepted}/{stats.draft_tokens} over "
+                  f"{stats.spec_steps} verify dispatches)")
     print(f"  {label:10s} {stats.tokens_out/dt:8.1f} tok/s  "
           f"({stats.tokens_out} tokens in {dt:.2f}s; "
           f"{stats.decode_dispatches} decode dispatches, "
@@ -90,6 +105,23 @@ def main():
                     help="int8 KV cache (the paper's data-width lever; the "
                          "paged backend stores int8 pages + scale lanes and "
                          "derives a proportionally larger page)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy argmax; fused on "
+                         "device either way)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="keep only the k highest logits (0 = off)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus sampling mass (1.0 = off)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="PRNG seed; per-request streams are "
+                         "fold_in(PRNGKey(seed), rid)")
+    ap.add_argument("--draft", default=None, metavar="ARCH",
+                    help="speculative decoding draft model: 'self' "
+                         "(same params — every proposal accepted) or an "
+                         "arch name sharing the vocab; requires a pure "
+                         "full-attention --cache paged stack")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="draft tokens proposed per verify dispatch")
     args = ap.parse_args()
 
     cfg = smoke_config(ARCHS[args.arch])
@@ -100,16 +132,31 @@ def main():
     params = bundle.init(jax.random.PRNGKey(0))
     backend = None if args.cache == "auto" else args.cache
 
+    spec_kw = {}
+    if args.draft is not None:
+        if args.draft == "self":
+            draft_bundle, draft_params = bundle, params
+        else:
+            draft_bundle = build(smoke_config(ARCHS[args.draft]), flags)
+            draft_params = draft_bundle.init(jax.random.PRNGKey(1))
+        spec_kw = dict(draft_bundle=draft_bundle, draft_params=draft_params,
+                       spec_k=args.spec_k)
+        backend = "paged"   # speculative decoding rides the paged fast path
+
     print(f"=== {args.arch} (batch={args.batch}, cache={args.cache}, "
-          f"kv={'int8' if args.kv_int8 else 'native'}) ===")
+          f"kv={'int8' if args.kv_int8 else 'native'}, "
+          f"T={args.temperature}"
+          + (f", draft={args.draft} k={args.spec_k}" if spec_kw else "")
+          + ") ===")
     base, _ = _drive(bundle, params, args, window=1, bucket=False,
                      label="default", backend="dense")
     fast, eng = _drive(bundle, params, args, window=args.window,
                        bucket=None,    # auto: on for full-attention stacks
-                       label="fastpath", backend=backend)
+                       label="fastpath", backend=backend, **spec_kw)
     print(f"  speedup    {fast / base:8.2f}x  "
           f"(decode_many window={args.window} + prompt bucketing"
-          + (f" + paged KV pool" if eng.backend == "paged" else "") + ")")
+          + (" + paged KV pool" if eng.backend == "paged" else "")
+          + (" + speculative verify" if spec_kw else "") + ")")
 
 
 if __name__ == "__main__":

@@ -2,7 +2,7 @@
 
 - :mod:`repro.bench.schema` — ``BenchResult``/``BenchRun`` + JSON persistence
 - :mod:`repro.bench.registry` — sweep registry + :func:`run_sweeps` runner
-- :mod:`repro.bench.sweeps` — the thirteen registered sweeps (paper tables,
+- :mod:`repro.bench.sweeps` — the fourteen registered sweeps (paper tables,
   figures, and the PR 3 serve / kernel_plan proof sweeps)
 - :mod:`repro.bench.compare` — regression comparator over two saved runs
 - :mod:`repro.bench.calibrate` — measured mode: fit the memmodel constants

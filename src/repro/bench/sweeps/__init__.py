@@ -1,6 +1,7 @@
-"""The thirteen registered sweeps — one module per paper table/figure, plus
-the PR 3 tune->execute proof sweeps (``serve`` + ``kernel_plan``) and the
-PR 4 paged-KV serving sweep (``paged_serve``).
+"""The fourteen registered sweeps — one module per paper table/figure, plus
+the PR 3 tune->execute proof sweeps (``serve`` + ``kernel_plan``), the
+PR 4 paged-KV serving sweep (``paged_serve``), and the PR 6 speculative
+draft->verify sweep (``spec_serve``).
 
 Importing this package populates :data:`repro.bench.registry.REGISTRY` in
 the paper's presentation order.  ``benchmarks/bench_*.py`` are thin shims
@@ -9,10 +10,11 @@ any sweep programmatically via :func:`repro.bench.run_sweeps`.
 """
 from repro.bench.sweeps import (  # noqa: F401  (import order == run order)
     latency, outstanding, unit_size, stride, burst, num_kernels,
-    random_access, database, conv, roofline, serve, paged_serve,
+    random_access, database, conv, roofline, serve, paged_serve, spec_serve,
 )
 
 __all__ = [
     "latency", "outstanding", "unit_size", "stride", "burst", "num_kernels",
     "random_access", "database", "conv", "roofline", "serve", "paged_serve",
+    "spec_serve",
 ]

@@ -84,6 +84,12 @@ class ModelBundle:
                                                cache, tokens, pos, table,
                                                chunk_valid, slot)
 
+    def paged_verify(self, params, cache, tokens, pos, table, chunk_valid,
+                     plan=None):
+        """Multi-token speculative verify: per-position logits (B, C, V)."""
+        return transformer.paged_verify(params, self.cfg, self.flags, cache,
+                                        tokens, pos, table, chunk_valid, plan)
+
     # ------------------------------------------------------------------
     # abstract specs for the dry-run
     # ------------------------------------------------------------------

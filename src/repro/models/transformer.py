@@ -786,3 +786,29 @@ def paged_prefill_chunk(params, cfg: ModelConfig, flags: RuntimeFlags,
     last = x[jnp.arange(bsz), idx][:, None]
     logits = compute_logits(params, cfg, last)[:, 0]
     return new_cache, logits
+
+
+def paged_verify(params, cfg: ModelConfig, flags: RuntimeFlags, cache: dict,
+                 tokens: jax.Array, pos: jax.Array, table,
+                 chunk_valid: jax.Array, plan=None):
+    """Speculative k-token verification: one batched ``paged_extend`` read.
+
+    ``tokens`` (B, C) is ``[pending, draft_0 .. draft_{C-2}]`` per slot at
+    absolute offset ``pos`` (B,); ``chunk_valid`` (B,) caps how many
+    positions each slot may write (masked positions steer to the null
+    page exactly like chunked prefill).  Unlike
+    :func:`paged_prefill_chunk` this returns logits at EVERY position —
+    (B, C, V) — because the acceptance rule needs the target distribution
+    at each drafted offset, not just the last one.  Query position i
+    attends rows ``<= pos + i`` (causal over the gathered page view), so
+    row i's logits are bit-for-bit what ``paged_decode_step`` would have
+    produced after emitting the same prefix — one page-table gather
+    amortized over C positions instead of C serial single-token walks
+    (the paper's burst-length lever applied to verification).  ``plan``
+    is the engine's tuned verify-step :class:`repro.tune.KernelPlan`
+    (``bq`` = verify width, ``bkv`` = the pool's page)."""
+    x, new_cache, _ = forward(params, cfg, flags, tokens, mode="paged_extend",
+                              cache=cache, pos=pos, table=table,
+                              chunk_valid=chunk_valid, plan=plan)
+    logits = compute_logits(params, cfg, x)
+    return new_cache, logits

@@ -1,3 +1,5 @@
 from repro.serve.engine import Request, ServeEngine, ServeStats  # noqa: F401
 from repro.serve.kvcache import (PageAllocator, PagedKVCache,  # noqa: F401
                                  PoolExhausted, PrefixIndex, page_hashes)
+from repro.serve.sampling import (GREEDY, SamplingParams,  # noqa: F401
+                                  mask_logits, sample_token, sample_tokens)

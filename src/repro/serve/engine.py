@@ -18,13 +18,30 @@ Two interchangeable KV backends:
   (requests stay queued), never a crash.
 
 The fast path is the paper's §5 pointer-chase fix applied to our own
-scheduler: greedy sampling is fused into the decode dispatch, tokens and
-positions stay device arrays, and ``decode_many(n)`` runs n ticks under one
-``lax.fori_loop`` jit — one dispatch and one device->host transfer (the
-token block) per *window*, not per token.  The page size itself is a tuned
-knob: :func:`repro.tune.derive_paged_plan` derives it from the advisor's
-``unit_bytes >= 512B`` transaction-optimum rule, so calibration reshapes
-the pool exactly the way it reshapes attention blocks.
+scheduler: token selection — greedy argmax or full temperature/top-k/top-p
+sampling (:class:`~repro.serve.sampling.SamplingParams`, per-slot PRNG
+keys carried as device arrays) — is fused into the decode dispatch, tokens
+and positions stay device arrays, and ``decode_many(n)`` runs n ticks
+under one ``lax.fori_loop`` jit — one dispatch and one device->host
+transfer (the token block) per *window*, not per token.  The page size
+itself is a tuned knob: :func:`repro.tune.derive_paged_plan` derives it
+from the advisor's ``unit_bytes >= 512B`` transaction-optimum rule, so
+calibration reshapes the pool exactly the way it reshapes attention
+blocks.
+
+Speculative decoding (``draft_bundle``) rides the paged fast path: a
+small draft model proposes ``spec_k`` tokens per dispatch from a dense
+per-slot cache, the target verifies all of them in ONE batched
+``paged_extend`` read over the page tables (``paged_verify`` — the
+paper's burst-length lever: k+1 query positions amortize one table
+walk), and rejected suffixes roll back page-table state
+(:meth:`PageAllocator.truncate`) and per-slot keys.  Acceptance uses
+*coupled* sampling: the target's sample at each position is drawn with
+the same per-position subkey the vanilla fused loop would have used (one
+split per emitted token), and a draft token is accepted only when it
+equals that sample — so the emitted stream is bit-identical to the
+non-speculative engine, greedy and sampled alike, and trivially
+distribution-preserving.
 
 The memory system is the product here — KV caches are the dominant HBM
 consumer and the advisor classifies their access as the paper's `nest`
@@ -47,6 +64,8 @@ from repro.core.memmodel import next_pow2
 from repro.models.registry import ModelBundle
 from repro.serve.kvcache import (PageAllocator, PoolExhausted, PrefixIndex,
                                  page_hashes)
+from repro.serve.sampling import (GREEDY, SamplingParams, sample_token,
+                                  sample_tokens, split_keys, subkey_chain)
 
 
 @dataclass
@@ -75,10 +94,31 @@ class ServeStats:
     pages_peak: int = 0              # peak full-pool pages_in_use over the run
     ring_pages_peak: int = 0         # peak ring-pool pages_in_use (windowed)
     pool_stalls: int = 0             # admissions deferred by PoolExhausted
+    # -- speculative decoding ---------------------------------------------
+    spec_steps: int = 0              # draft->verify dispatches
+    draft_tokens: int = 0            # draft tokens proposed to the verifier
+    draft_accepted: int = 0          # proposals matching the coupled sample
+
+    @property
+    def accept_rate(self) -> float:
+        """Fraction of proposed draft tokens the target accepted."""
+        return self.draft_accepted / max(1, self.draft_tokens)
+
+    @property
+    def accepted_per_step(self) -> float:
+        """Mean accepted draft tokens per verify dispatch: the speedup
+        knob — every accepted token is a serial target pass amortized
+        into the batched verify read."""
+        return self.draft_accepted / max(1, self.spec_steps)
 
 
 class ServeEngine:
-    """greedy-decodes; batch-uniform architecture state handled per family.
+    """Continuous-batching engine; batch-uniform architecture state handled
+    per family.  Token selection is fused on device: greedy argmax by
+    default, or temperature/top-k/top-p sampling via ``sampling`` with
+    per-slot PRNG keys derived as ``fold_in(PRNGKey(seed), rid)`` — a
+    slot's stream depends only on the request, never on scheduling, and
+    masked/pending/budget-exhausted slots consume no PRNG state.
 
     ``window`` is the fused decode chunk: ``run_to_completion`` advances all
     active slots up to ``window`` tokens per dispatch.  ``bucket_prompts``
@@ -98,6 +138,15 @@ class ServeEngine:
     pages — the constant-memory bound however long windowed sequences run.
     ``prefill_chunk`` caps prompt tokens per prefill dispatch so decode
     ticks interleave with long prompts.
+
+    Speculative decoding: pass ``draft_bundle``/``draft_params`` (a small
+    pure full-attention decoder sharing the target's vocab) and the paged
+    engine switches ``decode_many`` to draft->verify dispatches of up to
+    ``spec_k`` proposed tokens each.  The emitted stream is bit-identical
+    to the non-speculative engine (coupled-sample verification), so the
+    draft only changes *throughput*, never output.  Requires a pure
+    full-attention target stack: ring rotation and recurrent state cannot
+    roll back a rejected suffix.
     """
 
     def __init__(self, bundle: ModelBundle, params, batch_size: int,
@@ -108,12 +157,23 @@ class ServeEngine:
                  num_pages: Optional[int] = None,
                  num_ring_pages: Optional[int] = None,
                  prefill_chunk: int = 32,
-                 prefix_cache: bool = True):
+                 prefix_cache: bool = True,
+                 sampling: Optional[SamplingParams] = None,
+                 seed: int = 0,
+                 draft_bundle: Optional[ModelBundle] = None,
+                 draft_params=None,
+                 spec_k: int = 4):
         self.bundle = bundle
         self.params = params
         self.bsz = batch_size
         self.max_len = max_len
         self.window = max(1, window)
+        self.sampling = sampling or GREEDY
+        self.seed = seed
+        self._base_key = jax.random.PRNGKey(seed)
+        self.draft = draft_bundle
+        self.draft_params = draft_params
+        self.spec_k = max(1, spec_k)
         if cache_backend is None:
             cache_backend = "paged" if bundle.paged_supported() else "dense"
         elif cache_backend not in ("dense", "paged"):
@@ -176,22 +236,74 @@ class ServeEngine:
                                            slot),
                 donate_argnums=(1,))
             self._paged_decode_many = jax.jit(
-                functools.partial(_paged_decode_many_impl, bundle, self.plan),
+                functools.partial(_paged_decode_many_impl, bundle, self.plan,
+                                  self.sampling),
                 static_argnums=(0,), donate_argnums=(2,))
         else:
             self._prefill = jax.jit(
                 lambda p, toks, vl: bundle.prefill(
                     p, dict(tokens=toks, valid_len=vl)))
             self._decode_many = jax.jit(
-                functools.partial(_decode_many_impl, bundle),
+                functools.partial(_decode_many_impl, bundle, self.sampling),
                 static_argnums=(0,), donate_argnums=(2,))
+        if draft_bundle is not None:
+            self._init_spec(draft_bundle)
         self._seen_prefill_shapes = set()
         self._init_state()
+
+    def _init_spec(self, draft: ModelBundle) -> None:
+        """Validate + compile the speculative draft->verify dispatch."""
+        cfg = self.bundle.cfg
+        if self.draft_params is None:
+            raise ValueError("draft_bundle needs draft_params")
+        if self.backend != "paged":
+            raise ValueError(
+                "speculative decoding rides the paged fast path; "
+                "cache_backend='paged' is required")
+        if not (self.has_full and self.attn_window is None
+                and not self.has_recurrent):
+            raise ValueError(
+                f"{cfg.name}: speculative verify needs suffix rollback, "
+                "which only pure full-attention page tables support (ring "
+                "rotation overwrites history and recurrent state cannot "
+                "rewind)")
+        if draft.cfg.vocab_size != cfg.vocab_size:
+            raise ValueError(
+                f"draft vocab {draft.cfg.vocab_size} != target vocab "
+                f"{cfg.vocab_size}: proposals must share the token space")
+        if not self._bucketable(draft.cfg):
+            raise ValueError(
+                f"{draft.cfg.name}: the draft must be a pure full-attention "
+                "decoder — its rollback is a position rewind over a dense "
+                "cache, which windows/recurrence cannot mask")
+        from repro.tune import plan_for
+        kv_store = ("int8" if self.bundle.flags.kv_dtype == "int8"
+                    else str(cfg.compute_dtype))
+        vplan = plan_for("paged_verify",
+                         shape_sig=(self.spec_k + 1, self.max_len,
+                                    cfg.resolved_head_dim),
+                         dtype=kv_store)
+        # the verify step reads the pool the engine laid out: an explicit
+        # page_size override must reach the verify plan too
+        self.vplan = (vplan if vplan.page_size == self.page
+                      else dataclasses.replace(vplan, bkv=self.page))
+        self._draft_prefill = jax.jit(
+            lambda p, toks, vl: self.draft.prefill(
+                p, dict(tokens=toks, valid_len=vl)))
+        self._spec_decode = jax.jit(
+            functools.partial(_spec_decode_many_impl, self.bundle, self.draft,
+                              self.vplan, self.sampling, self.spec_k),
+            donate_argnums=(2, 3))
 
     def _init_state(self) -> None:
         self.pos = jnp.zeros((self.bsz,), jnp.int32)       # device
         self.tokens = jnp.zeros((self.bsz, 1), jnp.int32)  # device
+        # per-slot PRNG keys (device): set at admission from (seed, rid),
+        # advanced one split per emitted token inside the fused loops
+        self.keys = jnp.zeros((self.bsz, 2), jnp.uint32)
         self._hpos = np.zeros((self.bsz,), np.int64)       # host mirror
+        if self.draft is not None:
+            self.draft_cache = self.draft.init_cache(self.bsz, self.max_len)
         self.slots: List[Optional[Request]] = [None] * self.bsz
         self.queue: List[Request] = []
         self.stats = ServeStats()
@@ -305,13 +417,54 @@ class ServeEngine:
         return None
 
     # ------------------------------------------------------------------
+    # sampling state
+    # ------------------------------------------------------------------
+    def _assign_key(self, slot: int, req: Request) -> None:
+        """Pin the slot's PRNG stream to the request: the key depends only
+        on ``(seed, rid)``, never on which slot the request landed in or
+        what ran there before — replays are churn-invariant."""
+        if self.sampling.greedy:
+            return  # greedy never touches PRNG state
+        self.keys = self.keys.at[slot].set(
+            jax.random.fold_in(self._base_key, req.rid))
+
+    def _seed_token(self, slot: int, logits_row) -> int:
+        """First decode token from the prefill logits, drawn with the same
+        one-split-per-token chain the fused loop continues."""
+        if self.sampling.greedy:
+            return int(np.argmax(np.asarray(logits_row)))
+        nk, sub = jax.random.split(self.keys[slot])
+        tok = int(sample_token(sub, jnp.asarray(logits_row), self.sampling))
+        self.keys = self.keys.at[slot].set(nk)
+        return tok
+
+    @staticmethod
+    def _scatter_slot_cache(cache, cache1, slot: int):
+        """Scatter a single-request prefill cache into the batch cache at
+        ``slot``.  Stacked leaves (under blocks/dec) carry batch at axis 1;
+        remainder leaves at axis 0.  Shorter prompt caches are padded
+        (zeros for k/v — masked by kv_valid_len; -1e9 for kpos = empty)."""
+
+        def place(path, tgt, upd):
+            names = [str(getattr(p, "key", getattr(p, "name", ""))) for p in path]
+            batch_ax = 1 if any(n in ("blocks", "dec") for n in names) else 0
+            for ax in range(upd.ndim):
+                if ax != batch_ax and upd.shape[ax] != tgt.shape[ax]:
+                    pad = [(0, 0)] * upd.ndim
+                    pad[ax] = (0, tgt.shape[ax] - upd.shape[ax])
+                    cv = -10**9 if upd.dtype == jnp.int32 else 0
+                    upd = jnp.pad(upd, pad, constant_values=cv)
+            return jax.lax.dynamic_update_slice_in_dim(
+                tgt, upd.astype(tgt.dtype), slot, batch_ax)
+
+        return jax.tree_util.tree_map_with_path(place, cache, cache1)
+
+    # ------------------------------------------------------------------
     # dense prefill (whole prompt, one dispatch)
     # ------------------------------------------------------------------
     def _prefill_into_slot(self, slot: int, req: Request):
         """Prefill a single request, then scatter its cache into the batch
-        cache at ``slot``.  Stacked leaves (under blocks/dec) carry batch at
-        axis 1; remainder leaves at axis 0.  Shorter prompt caches are padded
-        (zeros for k/v — masked by kv_valid_len; -1e9 for kpos = empty)."""
+        cache at ``slot``."""
         s = int(req.prompt.shape[0])
         if self.bucket_prompts:
             bucket = min(next_pow2(max(8, s)), self.max_len)
@@ -329,23 +482,12 @@ class ServeEngine:
             cache1, last_logits = self.bundle.prefill(
                 self.params, dict(tokens=req.prompt[None, :]))
 
-        def place(path, tgt, upd):
-            names = [str(getattr(p, "key", getattr(p, "name", ""))) for p in path]
-            batch_ax = 1 if any(n in ("blocks", "dec") for n in names) else 0
-            for ax in range(upd.ndim):
-                if ax != batch_ax and upd.shape[ax] != tgt.shape[ax]:
-                    pad = [(0, 0)] * upd.ndim
-                    pad[ax] = (0, tgt.shape[ax] - upd.shape[ax])
-                    cv = -10**9 if upd.dtype == jnp.int32 else 0
-                    upd = jnp.pad(upd, pad, constant_values=cv)
-            return jax.lax.dynamic_update_slice_in_dim(
-                tgt, upd.astype(tgt.dtype), slot, batch_ax)
-
-        self.cache = jax.tree_util.tree_map_with_path(place, self.cache, cache1)
+        self.cache = self._scatter_slot_cache(self.cache, cache1, slot)
         self.slots[slot] = req
         self.pos = self.pos.at[slot].set(s)
         self._hpos[slot] = s
-        tok0 = int(np.argmax(np.asarray(last_logits)[0]))
+        self._assign_key(slot, req)
+        tok0 = self._seed_token(slot, np.asarray(last_logits)[0])
         self.tokens = self.tokens.at[slot, 0].set(tok0)
         req.out_tokens.append(tok0)
         self.stats.prefills += 1
@@ -476,11 +618,31 @@ class ServeEngine:
         self._table_dirty = True
         self.pos = self.pos.at[slot].set(s)
         self._hpos[slot] = s
-        tok0 = int(np.argmax(np.asarray(logits)[0]))
+        self._assign_key(slot, req)
+        tok0 = self._seed_token(slot, np.asarray(logits)[0])
         self.tokens = self.tokens.at[slot, 0].set(tok0)
         req.out_tokens.append(tok0)
+        if self.draft is not None:
+            self._draft_prefill_slot(slot, req)
         self.stats.prefills += 1
         self.stats.tokens_out += 1
+
+    def _draft_prefill_slot(self, slot: int, req: Request) -> None:
+        """Build the draft model's dense cache for a freshly admitted slot.
+        The draft is pure full attention (validated in ``_init_spec``), so
+        the prompt buckets to a pow2 length and the padded tail is masked by
+        ``valid_len`` — one trace per bucket, like the target's prefill."""
+        s = int(req.prompt.shape[0])
+        bucket = min(next_pow2(max(8, s)), self.max_len)
+        if ("draft", bucket) not in self._seen_prefill_shapes:
+            self._seen_prefill_shapes.add(("draft", bucket))
+            self.stats.prefill_retraces += 1
+        padded = np.zeros((1, bucket), np.int32)
+        padded[0, :s] = req.prompt
+        dcache1, _ = self._draft_prefill(
+            self.draft_params, jnp.asarray(padded), jnp.int32(s))
+        self.draft_cache = self._scatter_slot_cache(
+            self.draft_cache, dcache1, slot)
 
     def _admit(self) -> None:
         while self.queue:
@@ -561,10 +723,14 @@ class ServeEngine:
         return blocked
 
     def decode_many(self, n: int) -> int:
-        """Run up to ``n`` decode ticks in ONE fused dispatch (greedy
-        sampling on device, per-slot budgets masked in-loop), then harvest
-        the produced token block with a single device->host transfer.
-        Returns the number of real tokens produced."""
+        """Run up to ``n`` decode ticks in ONE fused dispatch (sampling on
+        device, per-slot budgets masked in-loop), then harvest the produced
+        token block with a single device->host transfer.  With a draft
+        model attached the dispatch is one speculative draft->verify round
+        instead, emitting up to ``spec_k + 1`` tokens per slot.  Returns
+        the number of real tokens produced."""
+        if self.draft is not None:
+            n = min(n, self.spec_k + 1)
         budgets = self._budgets(n)
         blocked = (self._reserve_window_pages(budgets)
                    if self.backend == "paged"
@@ -595,6 +761,8 @@ class ServeEngine:
                     "free pages: the pool is smaller than the live working "
                     f"set ({in_use} pages in use)")
             return 0
+        if self.draft is not None:
+            return self._spec_dispatch(budgets)
         n_run = min(n, next_pow2(top))  # pow2 ticks: bounded trace count
         steps = jnp.asarray(np.minimum(budgets, n_run), jnp.int32)
         if self.backend == "paged":
@@ -602,12 +770,15 @@ class ServeEngine:
                 self._table = dict(full=jnp.asarray(self._htable),
                                    ring=jnp.asarray(self._hrtable))
                 self._table_dirty = False
-            self.cache, self.tokens, self.pos, out = self._paged_decode_many(
+            (self.cache, self.tokens, self.pos, self.keys,
+             out) = self._paged_decode_many(
                 n_run, self.params, self.cache, self.tokens, self.pos, steps,
-                self._table)
+                self.keys, self._table)
         else:
-            self.cache, self.tokens, self.pos, out = self._decode_many(
-                n_run, self.params, self.cache, self.tokens, self.pos, steps)
+            (self.cache, self.tokens, self.pos, self.keys,
+             out) = self._decode_many(
+                n_run, self.params, self.cache, self.tokens, self.pos, steps,
+                self.keys)
         self.stats.decode_steps += n_run
         self.stats.decode_dispatches += 1
 
@@ -620,6 +791,53 @@ class ServeEngine:
             req.out_tokens.extend(int(t) for t in out_np[:adv, i])
             self._hpos[i] += adv
             produced += adv
+            if req.done or self._hpos[i] >= self.max_len - 1:
+                self._release_finished(i)
+        self.stats.tokens_out += produced
+        return produced
+
+    def _spec_dispatch(self, budgets: np.ndarray) -> int:
+        """One speculative draft->verify round in a single fused dispatch.
+
+        The draft proposes ``spec_k`` tokens, the target verifies them all
+        (plus the pending token) in one batched multi-token
+        ``paged_verify`` step, and each slot advances by its accepted
+        prefix + 1 — coupled sampling (see :func:`_spec_decode_many_impl`)
+        guarantees the emitted stream is exactly what vanilla decode would
+        have produced.  Afterwards each slot's page reservation is rolled
+        back to its accepted length: pages covering only rejected suffix
+        rows return to the pool (shared prefix pages are refcounted, never
+        mutated)."""
+        if self._table_dirty:
+            self._table = dict(full=jnp.asarray(self._htable),
+                               ring=jnp.asarray(self._hrtable))
+            self._table_dirty = False
+        steps = jnp.asarray(budgets, jnp.int32)
+        (self.cache, self.draft_cache, self.tokens, self.pos, self.keys,
+         out, meta) = self._spec_decode(
+            self.params, self.draft_params, self.cache, self.draft_cache,
+            self.tokens, self.pos, steps, self.keys, self._table)
+        # one spec round always advances every unblocked slot >= 1 token,
+        # so a "tick" for progress accounting is one dispatch
+        self.stats.decode_steps += 1
+        self.stats.decode_dispatches += 1
+        self.stats.spec_steps += 1
+
+        out_np = np.asarray(out)    # (B, k+1) — the one host sync
+        meta_np = np.asarray(meta)  # (3, B): emitted / accepted / proposed
+        produced = 0
+        for i, req in enumerate(self.slots):
+            if req is None or i in self._pending or budgets[i] == 0:
+                continue
+            adv = int(meta_np[0, i])
+            req.out_tokens.extend(int(t) for t in out_np[i, :adv])
+            self._hpos[i] += adv
+            produced += adv
+            self.stats.draft_tokens += int(meta_np[2, i])
+            self.stats.draft_accepted += int(meta_np[1, i])
+            # rejected-suffix rollback: the window reservation ran ahead to
+            # hpos + budget; shrink it to what was actually emitted
+            self.alloc.truncate(req.rid, int(self._hpos[i]))
             if req.done or self._hpos[i] >= self.max_len - 1:
                 self._release_finished(i)
         self.stats.tokens_out += produced
@@ -667,30 +885,44 @@ class ServeEngine:
         return self.stats
 
 
-def _decode_many_impl(bundle: ModelBundle, n: int, params, cache, tokens,
-                      pos, steps):
-    """n fused greedy-decode ticks.  ``steps`` (B,) caps each slot: past its
-    budget a slot is masked — tokens/pos freeze, and its (discarded) cache
-    writes re-store the same k/v at the frozen position, which is idempotent.
-    Returns (cache, tokens, pos, out) with out (n, B) int32 (-1 = masked)."""
+def _select_next(sampling: SamplingParams, logits, keys, act):
+    """One in-loop token selection: greedy argmax (keys untouched — zero
+    PRNG state consumed) or one split-and-draw per active slot.  Masked
+    slots keep their key: a frozen slot replays identically no matter how
+    many masked ticks pass over it."""
+    if sampling.greedy:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), keys
+    nk, sub = split_keys(keys)
+    nxt = sample_tokens(sub, logits, sampling)
+    return nxt, jnp.where(act[:, None], nk, keys)
+
+
+def _decode_many_impl(bundle: ModelBundle, sampling: SamplingParams, n: int,
+                      params, cache, tokens, pos, steps, keys):
+    """n fused decode ticks.  ``steps`` (B,) caps each slot: past its
+    budget a slot is masked — tokens/pos/keys freeze, and its (discarded)
+    cache writes re-store the same k/v at the frozen position, which is
+    idempotent.  Returns (cache, tokens, pos, keys, out) with out (n, B)
+    int32 (-1 = masked)."""
     bsz = tokens.shape[0]
 
     def body(i, carry):
-        cache, tokens, pos, out = carry
+        cache, tokens, pos, keys, out = carry
         logits, cache = bundle.decode_step(params, cache, tokens, pos)
-        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)   # (B,)
         act = i < steps
+        nxt, keys = _select_next(sampling, logits, keys, act)
         tokens = jnp.where(act[:, None], nxt[:, None], tokens)
         pos = jnp.where(act, pos + 1, pos)
         out = out.at[i].set(jnp.where(act, nxt, -1))
-        return cache, tokens, pos, out
+        return cache, tokens, pos, keys, out
 
     out0 = jnp.full((n, bsz), -1, jnp.int32)
-    return jax.lax.fori_loop(0, n, body, (cache, tokens, pos, out0))
+    return jax.lax.fori_loop(0, n, body, (cache, tokens, pos, keys, out0))
 
 
-def _paged_decode_many_impl(bundle: ModelBundle, plan, n: int, params, cache,
-                            tokens, pos, steps, table):
+def _paged_decode_many_impl(bundle: ModelBundle, plan, sampling: SamplingParams,
+                            n: int, params, cache, tokens, pos, steps, keys,
+                            table):
     """The paged twin of :func:`_decode_many_impl`: each tick writes k/v
     through the (loop-constant) page table and dispatches the
     ``paged_attention`` kernel under the engine's tuned ``plan`` (the
@@ -701,15 +933,99 @@ def _paged_decode_many_impl(bundle: ModelBundle, plan, n: int, params, cache,
     bsz = tokens.shape[0]
 
     def body(i, carry):
-        cache, tokens, pos, out = carry
+        cache, tokens, pos, keys, out = carry
         act = i < steps
         logits, cache = bundle.paged_decode_step(params, cache, tokens, pos,
                                                  table, plan, act)
-        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)   # (B,)
+        nxt, keys = _select_next(sampling, logits, keys, act)
         tokens = jnp.where(act[:, None], nxt[:, None], tokens)
         pos = jnp.where(act, pos + 1, pos)
         out = out.at[i].set(jnp.where(act, nxt, -1))
-        return cache, tokens, pos, out
+        return cache, tokens, pos, keys, out
 
     out0 = jnp.full((n, bsz), -1, jnp.int32)
-    return jax.lax.fori_loop(0, n, body, (cache, tokens, pos, out0))
+    return jax.lax.fori_loop(0, n, body, (cache, tokens, pos, keys, out0))
+
+
+def _spec_decode_many_impl(bundle: ModelBundle, draft: ModelBundle, plan,
+                           sampling: SamplingParams, k: int, params, dparams,
+                           cache, dcache, tokens, pos, steps, keys, table):
+    """One speculative round, fully on device.
+
+    The draft proposes ``k`` tokens autoregressively from its dense cache;
+    the target verifies ``[pending, d_0 .. d_{k-1}]`` in ONE multi-token
+    ``paged_verify`` dispatch (per-position logits).  Coupled sampling
+    makes acceptance exact rather than approximate: both models draw from
+    the SAME per-position subkey chain the vanilla loop would walk (one
+    split per emitted token), the emitted token is always the *target's*
+    draw, and a draft proposal is accepted iff it equals that draw.  The
+    emitted stream — and the carried key after it — is therefore
+    bit-identical to vanilla decoding by construction; the draft only
+    controls how many tokens each dispatch advances.
+
+    steps (B,) budgets each slot's emission this round (0 = frozen).
+    Returns (cache, dcache, tokens, pos, keys, out, meta):
+      out  (B, k+1) int32 — emitted tokens left-packed, -1 past the count
+      meta (3, B)   int32 — [emitted m, accepted draft tokens, proposed]
+    """
+    bsz = tokens.shape[0]
+    cv = jnp.clip(steps, 0, k + 1)                 # verify width per slot
+    act = steps > 0
+
+    if sampling.greedy:
+        subs = jnp.zeros((bsz, k + 1, 2), jnp.uint32)
+        carried = jnp.zeros((bsz, k + 2, 2), jnp.uint32)
+    else:
+        subs, carried = subkey_chain(keys, k + 1)
+
+    # -- draft: k proposals + one extra step that only lands d_{k-1}'s KV
+    # row (the bonus token's next-round attention needs it) ---------------
+    def dbody(i, carry):
+        dcache, dtok, drafts = carry
+        dlogits, dcache = draft.decode_step(dparams, dcache, dtok, pos + i)
+        if sampling.greedy:
+            d = jnp.argmax(dlogits, axis=-1).astype(jnp.int32)
+        else:
+            d = sample_tokens(subs[:, i], dlogits, sampling)
+        d = jnp.where(i < k, d, -1)
+        drafts = jax.lax.dynamic_update_slice_in_dim(
+            drafts, d[None], i, axis=0)
+        return dcache, jnp.where(i < k, d, dtok[:, 0])[:, None], drafts
+
+    drafts0 = jnp.full((k + 1, bsz), -1, jnp.int32)
+    dcache, _, drafts = jax.lax.fori_loop(
+        0, k + 1, dbody, (dcache, tokens, drafts0))
+    drafts = drafts[:k].T                          # (B, k)
+
+    # -- target: one batched verify over [pending, d_0 .. d_{k-1}] --------
+    verify_tokens = jnp.concatenate([tokens, drafts], axis=1)  # (B, k+1)
+    cache, logits = bundle.paged_verify(params, cache, verify_tokens, pos,
+                                        table, cv, plan)       # (B, k+1, V)
+    if sampling.greedy:
+        tsamp = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # (B, k+1)
+    else:
+        tsamp = jax.vmap(
+            lambda s, l: sample_tokens(s, l, sampling))(subs, logits)
+
+    # -- acceptance: longest matching prefix, then the target's token -----
+    match = drafts == tsamp[:, :k]                 # (B, k)
+    j = jnp.where(jnp.all(match, axis=1), k,
+                  jnp.argmin(match.astype(jnp.int32), axis=1))  # first miss
+    m = jnp.where(act, jnp.minimum(j + 1, cv), 0)  # emitted this round
+    emit = jnp.arange(k + 1, dtype=jnp.int32)[None, :] < m[:, None]
+    out = jnp.where(emit, tsamp, -1)               # (B, k+1)
+
+    last = jnp.take_along_axis(
+        tsamp, jnp.maximum(m - 1, 0)[:, None], axis=1)         # (B, 1)
+    tokens = jnp.where((m > 0)[:, None], last, tokens)
+    pos = pos + m
+    if not sampling.greedy:
+        nk = jnp.take_along_axis(
+            carried, jnp.broadcast_to(m[:, None, None], (bsz, 1, 2)),
+            axis=1)[:, 0]
+        keys = jnp.where(act[:, None], nk, keys)
+
+    acc = jnp.minimum(m, j)                        # bonus token isn't a draft
+    prop = jnp.where(act, k, 0)
+    meta = jnp.stack([m, acc, prop]).astype(jnp.int32)
+    return cache, dcache, tokens, pos, keys, out, meta

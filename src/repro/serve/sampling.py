@@ -1,0 +1,136 @@
+"""Device-resident token sampling for the serving fast path.
+
+The fused decode loops (:mod:`repro.serve.engine`) carry per-slot PRNG
+keys as device arrays and draw each token inside the ``lax.fori_loop``
+body, so sampled serving keeps the PR 3 dispatch regime: one launch and
+one host sync per window, never per token.
+
+Semantics (all knobs compose, applied in this order):
+
+- ``temperature`` scales logits; ``0.0`` is *exact* greedy argmax — the
+  sampler never touches the key, so the greedy path stays bit-identical
+  to the pre-sampling engine and consumes no PRNG state.
+- ``top_k`` keeps the k highest logits (ties at the k-th value are all
+  kept — the threshold rule is deterministic and mirrored by the host
+  reference sampler in the tests).
+- ``top_p`` keeps the smallest prefix of the descending-sorted
+  distribution whose mass reaches p (the top-1 token is always kept).
+
+The final draw is ``jax.random.categorical`` (gumbel-max) over the
+masked logits.  Key discipline: one ``jax.random.split`` per *emitted*
+token — the carried key advances exactly with the output stream, which
+is what makes speculative decoding key-exact with vanilla sampling (the
+verify step derives the same per-position subkeys by iterating the same
+split chain).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+# large-negative instead of -inf: masked logits must stay NaN-free under
+# the gumbel add inside jax.random.categorical
+NEG_INF = jnp.float32(-1e30)
+
+
+@dataclass(frozen=True)
+class SamplingParams:
+    """Per-engine sampling configuration (hashable: it is baked into the
+    fused decode jits as a static closure argument).
+
+    ``temperature=0`` is greedy argmax; ``top_k=0`` and ``top_p=1.0``
+    disable their filters.
+    """
+
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+
+    def __post_init__(self):
+        if self.temperature < 0.0:
+            raise ValueError(f"temperature must be >= 0, got {self.temperature}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature == 0.0
+
+
+GREEDY = SamplingParams()
+
+
+def mask_logits(logits: jax.Array, params: SamplingParams) -> jax.Array:
+    """Temperature-scaled, top-k/top-p-masked logits for one (V,) row.
+
+    Kept entries are exactly ``logits / temperature`` (a single IEEE
+    division, so the host reference sampler reproduces them bit-for-bit);
+    dropped entries become :data:`NEG_INF`.
+    """
+    l = logits.astype(jnp.float32) / jnp.float32(params.temperature)
+    v = l.shape[-1]
+    if 0 < params.top_k < v:
+        kth = jnp.sort(l)[v - params.top_k]
+        l = jnp.where(l < kth, NEG_INF, l)
+    if params.top_p < 1.0:
+        sl = jnp.sort(l)[::-1]
+        probs = jax.nn.softmax(sl)
+        csum = jnp.cumsum(probs)
+        # keep while the *exclusive* prefix mass is below p: the smallest
+        # covering set, and the top-1 token is always in it
+        keep = (csum - probs) < params.top_p
+        cutoff = jnp.min(jnp.where(keep, sl, jnp.inf))
+        l = jnp.where(l < cutoff, NEG_INF, l)
+    return l
+
+
+def sample_token(key: jax.Array, logits: jax.Array,
+                 params: SamplingParams) -> jax.Array:
+    """Draw one token id from a (V,) logits row with a (2,) uint32 key."""
+    if params.greedy:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(key, mask_logits(logits, params)).astype(
+        jnp.int32)
+
+
+def sample_tokens(keys: jax.Array, logits: jax.Array,
+                  params: SamplingParams) -> jax.Array:
+    """Batched draw: keys (B, 2) uint32, logits (B, V) -> (B,) int32.
+
+    Greedy ignores the keys entirely (no PRNG state is consumed)."""
+    if params.greedy:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.vmap(lambda k, l: sample_token(k, l, params))(keys, logits)
+
+
+def split_keys(keys: jax.Array):
+    """Advance a (B, 2) key batch one step: returns (carried, subkeys)."""
+    s = jax.vmap(lambda k: jax.random.split(k, 2))(keys)
+    return s[:, 0], s[:, 1]
+
+
+def subkey_chain(keys: jax.Array, n: int):
+    """Iterate the per-slot split chain ``n`` steps without consuming it.
+
+    Returns ``(subs, carried)`` with subs (B, n, 2) — the subkey that
+    samples the i-th emitted token — and carried (B, n+1, 2) — the key
+    the slot holds *after* emitting i tokens (``carried[:, 0]`` is the
+    input key).  This is exactly the chain the fused vanilla loop walks
+    one split per token, which is what lets the speculative verify step
+    emit m tokens and land on ``carried[:, m]`` — key-exact with a
+    vanilla engine that emitted the same m tokens one tick at a time.
+    """
+
+    def chain(key):
+        def step(c, _):
+            nk, sub = jax.random.split(c)
+            return nk, (sub, nk)
+
+        _, (subs, carrs) = jax.lax.scan(step, key, None, length=n)
+        return subs, jnp.concatenate([key[None], carrs], axis=0)
+
+    return jax.vmap(chain)(keys)

@@ -151,6 +151,7 @@ def plan_for(kernel: str, *, shape_sig: Tuple[int, ...], dtype: str = "bfloat16"
       flash_attention   (sq, skv, head_dim)
       decode_attention  (cache_len, head_dim)
       paged_attention   (max_len, head_dim)   -- plan.page_size shapes the pool
+      paged_verify      (verify_tokens, max_len, head_dim)
       matmul            (m, n, k)
     """
     return default_cache().get_or_derive(kernel, shape_sig=shape_sig,

@@ -23,9 +23,11 @@ from repro.core.memmodel import (TPUSpec, V5E, next_pow2, predict_bw,
 from repro.core.patterns import Knobs, Pattern
 
 # the kernels a plan can target (ops.py wrappers consume these; for the
-# paged kernel the plan's bkv IS the page size — the pool is laid out from
-# the plan, so tuning reshapes serving memory itself)
-KERNELS = ("flash_attention", "decode_attention", "matmul", "paged_attention")
+# paged kernels the plan's bkv IS the page size — the pool is laid out from
+# the plan, so tuning reshapes serving memory itself; paged_verify is the
+# k-token speculative verify step over the same pool)
+KERNELS = ("flash_attention", "decode_attention", "matmul", "paged_attention",
+           "paged_verify")
 
 
 def auto_interpret() -> bool:
@@ -239,6 +241,33 @@ def derive_paged_plan(*, max_len: int, head_dim: int, dtype: str = "bfloat16",
         head_dim=head_dim, predicted_gbps=tuned.predicted_gbps, source=source)
 
 
+def derive_verify_plan(*, verify_tokens: int, max_len: int, head_dim: int,
+                       dtype: str = "bfloat16",
+                       spec: Optional[TPUSpec] = None, calibration=None,
+                       vmem_budget_fraction: float = 0.4) -> KernelPlan:
+    """Plan for the speculative k-token verify step.
+
+    Verification reads the page pool exactly like paged decode (`r_acc`
+    through the table), so the transaction unit — ``bkv``, the page —
+    must match the pool the engine laid out from
+    :func:`derive_paged_plan`.  The lever verification adds is *burst
+    length*: ``bq`` becomes the verify width (pending token + k drafts),
+    so one table walk serves ``verify_tokens`` query positions instead
+    of one — the paper's tokens-per-transaction amortization.  The
+    predicted bandwidth is the r_acc gather rate scaled by the reuse
+    factor (each fetched page row now feeds up to ``verify_tokens``
+    queries)."""
+    base = derive_paged_plan(max_len=max_len, head_dim=head_dim, dtype=dtype,
+                             spec=spec, calibration=calibration,
+                             vmem_budget_fraction=vmem_budget_fraction)
+    vt = max(1, int(verify_tokens))
+    return KernelPlan(
+        kernel="paged_verify", bq=vt, bkv=base.bkv,
+        pipeline_depth=base.pipeline_depth, dtype=dtype, interpret=None,
+        head_dim=head_dim, predicted_gbps=base.predicted_gbps * vt,
+        source=base.source)
+
+
 def derive_matmul_plan(*, m: int, n: int, k: int, dtype: str = "bfloat16",
                        spec: Optional[TPUSpec] = None, calibration=None,
                        vmem_budget_fraction: float = 0.4) -> KernelPlan:
@@ -282,6 +311,12 @@ def derive_plan(kernel: str, *, shape_sig: Tuple[int, ...], dtype: str,
         return derive_paged_plan(max_len=max_len, head_dim=head_dim,
                                  dtype=dtype, spec=spec,
                                  calibration=calibration)
+    if kernel == "paged_verify":
+        verify_tokens, max_len, head_dim = shape_sig
+        return derive_verify_plan(verify_tokens=verify_tokens,
+                                  max_len=max_len, head_dim=head_dim,
+                                  dtype=dtype, spec=spec,
+                                  calibration=calibration)
     if kernel == "matmul":
         m, n, k = shape_sig
         return derive_matmul_plan(m=m, n=n, k=k, dtype=dtype, spec=spec,

@@ -6,3 +6,16 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 # NOTE: no XLA_FLAGS here on purpose — smoke tests run single-device.
 # Multi-device scenarios run in subprocesses (tests/test_multidevice.py)
 # that set --xla_force_host_platform_device_count themselves.
+
+try:
+    from hypothesis import settings
+
+    # CI and local runs must explore the same example stream: the fuzz
+    # layer's speculative==vanilla properties are equivalence proofs, not
+    # coverage hunting, so a flaky example would mean a real bug — pin the
+    # profile (derandomized, no deadline: jit warm-up skews wall time).
+    settings.register_profile("repro", derandomize=True, deadline=None,
+                              print_blob=True)
+    settings.load_profile("repro")
+except ImportError:
+    pass  # hypothesis is a dev dependency; non-fuzz tests run without it

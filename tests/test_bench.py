@@ -190,11 +190,11 @@ def test_structural_gate_ignores_wallclock_noise(tmp_path, capsys):
 # registry smoke (the BENCH_FAST=1 campaign)
 # ---------------------------------------------------------------------------
 
-def test_registry_lists_thirteen_sweeps():
-    assert len(REGISTRY) == 13
+def test_registry_lists_fourteen_sweeps():
+    assert len(REGISTRY) == 14
     assert ORDER == ["latency", "outstanding", "unit_size", "stride", "burst",
                      "num_kernels", "random", "database", "conv", "roofline",
-                     "serve", "kernel_plan", "paged_serve"]
+                     "serve", "kernel_plan", "paged_serve", "spec_serve"]
 
 
 def test_registry_rejects_unknown_sweep():
@@ -204,7 +204,7 @@ def test_registry_rejects_unknown_sweep():
 
 @pytest.mark.slow
 def test_fast_campaign_every_sweep_emits(tmp_path):
-    """BENCH_FAST-scale smoke: all thirteen sweeps run, each emits >= 1
+    """BENCH_FAST-scale smoke: all fourteen sweeps run, each emits >= 1
     result, every row carries both bandwidth columns, and the run persists."""
     run = run_sweeps(fast=True, echo=False, out_dir=str(tmp_path))
     assert run.failures == {}

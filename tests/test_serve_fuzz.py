@@ -30,7 +30,7 @@ from hypothesis import given, settings, strategies as st  # noqa: E402
 from repro.configs import ARCHS, smoke_config  # noqa: E402
 from repro.models import RuntimeFlags, build  # noqa: E402
 from repro.serve import (PageAllocator, PoolExhausted, PrefixIndex,  # noqa: E402
-                         Request, ServeEngine)
+                         Request, SamplingParams, ServeEngine)
 
 FLAGS = RuntimeFlags(attn_impl="chunked", attn_bq=16, attn_bkv=16,
                      moe_impl="dense", loss_chunk=16)
@@ -145,6 +145,84 @@ def test_fuzz_paged_matches_dense_long_drain(stack, mix, seed):
 
 
 # ---------------------------------------------------------------------------
+# speculative decoding == vanilla decoding (tentpole equivalence layer)
+# ---------------------------------------------------------------------------
+#
+# Coupled-sample verification promises the spec engine's emitted stream is
+# bit-identical to the non-speculative engine — greedy AND sampled.  The
+# draft here is the same architecture with *different* params (PRNGKey(11)
+# vs 7), so proposals genuinely get rejected and every drain exercises
+# suffix rollback, not just the accept-everything fast lane.
+
+SPEC_STACKS = {
+    "gemma-2b": FLAGS,                # pure full attention (spec-eligible)
+    "gemma-2b-int8": INT8_FLAGS,      # int8 KV pages under the verify step
+}
+
+_SPEC_ENGINES = {}
+
+
+def _spec_engines(stack: str, variant: str):
+    """One (vanilla paged, speculative paged) pair per stack x variant,
+    sharing params, sampling, and seed — key-exact comparability."""
+    if (stack, variant) not in _SPEC_ENGINES:
+        arch = "gemma-2b" if stack == "gemma-2b-int8" else stack
+        cfg = smoke_config(ARCHS[arch])
+        bundle = build(cfg, SPEC_STACKS[stack])
+        params = bundle.init(jax.random.PRNGKey(7))
+        draft_params = bundle.init(jax.random.PRNGKey(11))
+        sampling = (None if variant == "greedy"
+                    else SamplingParams(temperature=0.9, top_p=0.95))
+        vanilla = ServeEngine(bundle, params, batch_size=BATCH,
+                              max_len=MAX_LEN, cache_backend="paged",
+                              prefill_chunk=8, sampling=sampling, seed=3)
+        spec = ServeEngine(bundle, params, batch_size=BATCH,
+                           max_len=MAX_LEN, cache_backend="paged",
+                           prefill_chunk=8, sampling=sampling, seed=3,
+                           draft_bundle=bundle, draft_params=draft_params,
+                           spec_k=3)
+        _SPEC_ENGINES[(stack, variant)] = (cfg, vanilla, spec)
+    return _SPEC_ENGINES[(stack, variant)]
+
+
+def _assert_spec_identical(stack, variant, mix, seed):
+    cfg, vanilla, spec = _spec_engines(stack, variant)
+    waves = _materialize(cfg, mix, seed)
+    want = _drive(vanilla, waves)
+    got = _drive(spec, waves)
+    assert got == want, (
+        f"{stack}/{variant}: speculative outputs diverged from vanilla "
+        f"for mix {mix}")
+    assert spec.stats.spec_steps > 0       # the draft path actually ran
+    # zero allocator-conservation violations after rollback churn
+    a = spec.alloc
+    assert a.pages_in_use + len(a.free) == a.num_pages - a.reserved
+    for pid, r in a.ref.items():
+        assert r >= 1
+
+
+@pytest.mark.parametrize("variant", ["greedy", "sampled"])
+@pytest.mark.parametrize("stack", sorted(SPEC_STACKS))
+@settings(max_examples=3, deadline=None)
+@given(mix=_mix(max_requests=3, max_prompt=12), seed=st.integers(0, 2**16))
+def test_fuzz_spec_matches_vanilla(stack, variant, mix, seed):
+    """Tier-1: T=0 speculative drains are token-identical to vanilla
+    paged drains; T>0 drains with shared per-slot keys are key-exact."""
+    _assert_spec_identical(stack, variant, mix, seed)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("variant", ["greedy", "sampled"])
+@pytest.mark.parametrize("stack", sorted(SPEC_STACKS))
+@settings(max_examples=5, deadline=None)
+@given(mix=_mix(max_requests=6, max_prompt=40), seed=st.integers(0, 2**16))
+def test_fuzz_spec_matches_vanilla_long_drain(stack, variant, mix, seed):
+    """Long speculative drains: slots churn through multiple requests,
+    rollbacks interleave with mid-drain admissions and prefix sharing."""
+    _assert_spec_identical(stack, variant, mix, seed)
+
+
+# ---------------------------------------------------------------------------
 # allocator + prefix-index conservation property (satellite)
 # ---------------------------------------------------------------------------
 
@@ -162,7 +240,7 @@ def _check_invariants(alloc: PageAllocator):
 
 OPS = st.lists(
     st.tuples(st.sampled_from(["alloc", "reserve", "fork", "release",
-                               "pin_evict"]),
+                               "pin_evict", "truncate"]),
               st.integers(0, 5), st.integers(1, 48)),
     min_size=1, max_size=40)
 
@@ -197,6 +275,12 @@ def _exercise_allocator(ops, num_pages, window):
             elif op == "release" and live:
                 rid = live.pop(pick % len(live))
                 alloc.release(rid)
+            elif op == "truncate" and live:
+                # speculative rollback: rewind to a shorter length — pages
+                # covering only the rejected suffix return to the pool,
+                # shared (forked) pages are decref'd, never freed early
+                rid = live[pick % len(live)]
+                alloc.truncate(rid, alloc.lengths[rid] % (length + 1))
             elif op == "pin_evict" and live and window is None:
                 rid = live[pick % len(live)]
                 for pid in alloc.tables[rid]:

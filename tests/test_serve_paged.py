@@ -492,3 +492,213 @@ def test_live_bytes_below_dense_footprint():
                                     prompts=prompts, max_new=4, bsz=4)
     assert paged_eng.live_kv_bytes_peak() < dense_eng.live_kv_bytes_peak()
     assert paged_eng.stats.pages_peak <= paged_eng.num_pages - 1
+
+
+# ---------------------------------------------------------------------------
+# speculative decoding: seeded twins of the fuzz equivalence layer
+# (test_serve_fuzz skips wholesale without hypothesis; these always run)
+# ---------------------------------------------------------------------------
+
+from repro.serve import SamplingParams  # noqa: E402
+
+
+@pytest.fixture(scope="module")
+def spec_env():
+    cfg = smoke_config(ARCHS["gemma-2b"])
+    bundle = build(cfg, FLAGS)
+    params = bundle.init(jax.random.PRNGKey(7))
+    # different params: proposals genuinely get rejected, so every drain
+    # exercises suffix rollback, not just the accept-everything fast lane
+    draft_params = bundle.init(jax.random.PRNGKey(11))
+    return cfg, bundle, params, draft_params
+
+
+def _seeded_mixes(cfg, n_mixes=3):
+    """Deterministic request mixes with shared prefixes and varied budgets."""
+    rng = np.random.default_rng(17)
+    common = rng.integers(0, cfg.vocab_size, size=9).astype(np.int32)
+    mixes = []
+    for _ in range(n_mixes):
+        reqs = []
+        for r in range(int(rng.integers(2, 4))):
+            plen = int(rng.integers(1, 13))
+            tail = rng.integers(0, cfg.vocab_size, size=plen).astype(np.int32)
+            prompt = (np.concatenate([common, tail])
+                      if rng.integers(0, 2) else tail)
+            reqs.append((prompt, int(rng.integers(1, 9))))
+        mixes.append(reqs)
+    return mixes
+
+
+def _drive_mix(eng, mix):
+    eng.reset()
+    reqs = []
+    first, rest = mix[:1], mix[1:]
+    for prompt, max_new in first:
+        r = Request(rid=len(reqs), prompt=prompt, max_new_tokens=max_new)
+        reqs.append(r)
+        eng.add_request(r)
+    eng.step()                      # later admissions land mid-drain
+    for prompt, max_new in rest:
+        r = Request(rid=len(reqs), prompt=prompt, max_new_tokens=max_new)
+        reqs.append(r)
+        eng.add_request(r)
+    eng.run_to_completion(max_ticks=5_000)
+    assert all(s is None for s in eng.slots)
+    return [r.out_tokens for r in reqs]
+
+
+@pytest.mark.parametrize("variant", ["greedy", "sampled"])
+def test_spec_matches_vanilla_seeded_mixes(spec_env, variant):
+    """T=0 speculative drains are token-identical to vanilla paged drains;
+    T>0 drains sharing per-slot keys are key-exact identical — and every
+    drain leaves the page pool conserved after rollback churn."""
+    cfg, bundle, params, draft_params = spec_env
+    sampling = (None if variant == "greedy"
+                else SamplingParams(temperature=0.9, top_p=0.95))
+    vanilla = ServeEngine(bundle, params, batch_size=2, max_len=64,
+                          cache_backend="paged", prefill_chunk=8,
+                          sampling=sampling, seed=3)
+    spec = ServeEngine(bundle, params, batch_size=2, max_len=64,
+                       cache_backend="paged", prefill_chunk=8,
+                       sampling=sampling, seed=3, draft_bundle=bundle,
+                       draft_params=draft_params, spec_k=3)
+    for mix in _seeded_mixes(cfg):
+        want = _drive_mix(vanilla, mix)
+        got = _drive_mix(spec, mix)
+        assert got == want
+        assert spec.stats.spec_steps > 0
+        a = spec.alloc
+        assert a.pages_in_use + len(a.free) == a.num_pages - a.reserved
+        assert all(r >= 1 for r in a.ref.values())
+    # the draft path must have seen real rejections, or this proved nothing
+    assert spec.stats.draft_accepted < spec.stats.draft_tokens
+
+
+def test_spec_stats_track_acceptance(spec_env):
+    """Self-draft greedy: every proposal matches the coupled sample, so the
+    accept rate is exactly 1 and each dispatch advances spec_k+1 tokens
+    per unblocked slot (modulo end-of-budget truncation)."""
+    cfg, bundle, params, _ = spec_env
+    eng = ServeEngine(bundle, params, batch_size=1, max_len=64,
+                      cache_backend="paged", prefill_chunk=8,
+                      draft_bundle=bundle, draft_params=params, spec_k=3)
+    req = Request(rid=0, prompt=np.arange(5, dtype=np.int32),
+                  max_new_tokens=12)
+    eng.add_request(req)
+    stats = eng.run_to_completion()
+    assert len(req.out_tokens) == 12
+    assert stats.accept_rate == 1.0
+    assert stats.spec_steps == stats.decode_dispatches
+    # 12 tokens = 1 prefill seed + 11 decoded; at k+1=4/dispatch that is
+    # ceil(11/4) = 3 verify dispatches
+    assert stats.spec_steps == 3
+    assert stats.accepted_per_step > 1.0
+
+
+def test_spec_validation_errors(spec_env):
+    cfg, bundle, params, draft_params = spec_env
+    with pytest.raises(ValueError, match="draft_params"):
+        ServeEngine(bundle, params, batch_size=1, max_len=64,
+                    draft_bundle=bundle)
+    ring_cfg = smoke_config(ARCHS["gemma2-27b"])     # sliding-window stack
+    ring_bundle = build(ring_cfg, FLAGS)
+    ring_params = ring_bundle.init(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="rollback"):
+        ServeEngine(ring_bundle, ring_params, batch_size=1, max_len=64,
+                    cache_backend="paged", draft_bundle=ring_bundle,
+                    draft_params=ring_params)
+    with pytest.raises(ValueError, match="paged"):
+        ServeEngine(bundle, params, batch_size=1, max_len=64,
+                    cache_backend="dense", draft_bundle=bundle,
+                    draft_params=draft_params)
+
+
+# ---------------------------------------------------------------------------
+# rollback mechanics: PageAllocator.truncate (tentpole support)
+# ---------------------------------------------------------------------------
+
+def test_truncate_frees_only_private_trailing_pages():
+    a = PageAllocator(10, 4, reserved=1)
+    a.alloc(0)
+    a.reserve(0, 14)                       # pages for 14 tokens: 4 pages
+    assert len(a.tables[0]) == 4
+    freed = a.truncate(0, 9)               # keep ceil(9/4) = 3 pages
+    assert len(freed) == 1 and len(a.tables[0]) == 3
+    assert a.pages_in_use + len(a.free) == 9
+    freed = a.truncate(0, 9)               # idempotent at the same length
+    assert freed == []
+    with pytest.raises(ValueError):
+        a.truncate(0, 10)                  # growth is reserve's job
+    a.release(0)
+    assert a.pages_in_use == 0
+
+
+def test_truncate_never_frees_or_mutates_shared_pages():
+    """Speculative rollback on a forked table: shared pages are decref'd,
+    never freed early — the sibling still owns them, byte-identical."""
+    a = PageAllocator(12, 4, reserved=1)
+    a.alloc(0)
+    a.reserve(0, 16)                       # 4 pages
+    a.fork(0, 1)                           # rid 1 shares all 4
+    src_table = list(a.tables[0])
+    freed = a.truncate(1, 5)               # drop rid 1 back to 2 pages
+    assert freed == []                     # shared: nothing returns to pool
+    assert a.tables[0] == src_table        # sibling table untouched
+    assert all(a.ref[p] == 2 for p in a.tables[1])
+    assert all(a.ref[p] == 1 for p in src_table[2:])
+    a.release(0)
+    # now rid 1's remaining pages are the last references
+    freed = a.truncate(1, 0)
+    assert sorted(freed) == sorted(src_table[:2])
+    a.release(1)
+    assert a.pages_in_use == 0
+
+
+def test_ring_truncate_only_rewinds_length():
+    a = PageAllocator(8, 4, reserved=1, window=8)
+    a.alloc(0)
+    a.reserve(0, 20)                       # rotates within ring_slots pages
+    held = list(a.tables[0])
+    a.truncate(0, 17)
+    assert a.tables[0] == held             # rotation handles regrowth
+    assert a.lengths[0] == 17
+    a.release(0)
+    assert a.pages_in_use == 0
+
+
+# ---------------------------------------------------------------------------
+# per-slot PRNG isolation under churn (satellite)
+# ---------------------------------------------------------------------------
+
+def test_prng_stream_is_churn_invariant(spec_env):
+    """A request's sampled stream depends only on (seed, rid) — masked
+    ticks, pending-prefill neighbours, budget-exhausted slots, and
+    mid-drain admissions must not consume its PRNG state."""
+    cfg, bundle, params, _ = spec_env
+    sp = SamplingParams(temperature=3.0, top_p=0.98)
+    prompt0 = np.asarray([5, 9, 2, 7, 1], np.int32)
+
+    eng = ServeEngine(bundle, params, batch_size=2, max_len=64,
+                      cache_backend="paged", prefill_chunk=8,
+                      sampling=sp, seed=21)
+    solo_req = Request(rid=0, prompt=prompt0, max_new_tokens=10)
+    eng.add_request(solo_req)
+    eng.run_to_completion()
+
+    eng.reset()
+    churn_req = Request(rid=0, prompt=prompt0, max_new_tokens=10)
+    eng.add_request(churn_req)
+    # a long-prompt neighbour: its chunked prefill interleaves masked
+    # decode ticks over rid 0's live slot
+    eng.add_request(Request(rid=1, prompt=np.arange(30, dtype=np.int32),
+                            max_new_tokens=2))
+    for _ in range(4):
+        eng.step()
+    # mid-drain admissions churn slot 1 through several occupants
+    eng.add_request(Request(rid=2, prompt=np.arange(7, dtype=np.int32),
+                            max_new_tokens=6))
+    eng.add_request(Request(rid=3, prompt=np.arange(3, dtype=np.int32),
+                            max_new_tokens=4))
+    eng.run_to_completion()
+    assert churn_req.out_tokens == solo_req.out_tokens

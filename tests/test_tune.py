@@ -17,6 +17,7 @@ SIGS = {
     "decode_attention": (4096, 128),
     "matmul": (512, 512, 256),
     "paged_attention": (4096, 128),
+    "paged_verify": (5, 4096, 128),
 }
 
 
@@ -66,6 +67,29 @@ def test_paged_plan_page_size_is_transaction_optimum():
     # a tiny max_len clamps: never a single page per sequence
     tiny = derive_plan("paged_attention", shape_sig=(16, 16), dtype="float32")
     assert tiny.page_size == 8
+
+
+def test_verify_plan_rides_the_paged_page():
+    """The speculative verify step reads the same pool paged decode laid
+    out, so its transaction unit (bkv = the page) must match the paged
+    plan for the same (max_len, head_dim, dtype); what it adds is burst
+    length — bq becomes the verify width (pending + k drafts) and the
+    predicted bandwidth scales with the per-transaction reuse."""
+    base = derive_plan("paged_attention", shape_sig=(4096, 128),
+                       dtype="bfloat16")
+    for vt in (2, 5, 9):
+        vplan = derive_plan("paged_verify", shape_sig=(vt, 4096, 128),
+                            dtype="bfloat16")
+        assert vplan.kernel == "paged_verify"
+        assert vplan.bkv == base.page_size       # same pool layout
+        assert vplan.bq == vt                    # burst = verify width
+        assert vplan.predicted_gbps == pytest.approx(
+            base.predicted_gbps * vt)
+    # plan_for caches verify plans under the 3-tuple signature
+    cached = plan_for("paged_verify", shape_sig=(5, 4096, 128),
+                      dtype="bfloat16")
+    assert cached == plan_for("paged_verify", shape_sig=(5, 4096, 128),
+                              dtype="bfloat16")
 
 
 def test_paged_plan_int8_widens_page_by_dtype_ratio():

@@ -11,4 +11,5 @@ from repro.dist.sharding import (  # noqa: F401
     ACT_RULES_SP, ACT_RULES_TP, BATCH_RULES, PARAM_RULES_FSDP, PARAM_RULES_TP,
     POLICIES, ShardingPolicy, param_shardings, spec_for,
 )
+from repro.dist.serve import ServeMesh  # noqa: F401
 from repro.dist import sharding  # noqa: F401

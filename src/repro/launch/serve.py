@@ -1,20 +1,116 @@
-"""Serving launcher: continuous-batching engine over a checkpoint (or fresh
-init at smoke scale).
+"""Serving launcher: continuous-batching engine(s) over a checkpoint (or
+fresh init at smoke scale), optionally spread across a TP x DP device mesh.
 
     PYTHONPATH=src python -m repro.launch.serve --arch phi4-mini-3.8b --smoke \
         --requests 8 --batch 4
+
+    # one engine sharded over 2 devices (TP), two such replicas (DP):
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --smoke \
+        --tp 2 --dp 2 --requests 16
+
+TP shards a single engine's params and KV page pools across a mesh axis
+(``dist.ServeMesh``); DP runs independent engine replicas — each on its own
+device group — behind one shared admission queue (:class:`ReplicaPool`),
+which dispatches every request to the least-loaded replica.  Replicas share
+no device state, so the DP axis is pure scheduling: in the paper's framing
+TP adds memory channels behind one request stream while DP adds whole
+ports, and the admission queue is the host-side arbiter between them.
 """
 import argparse
+import dataclasses
 import sys
 import time
+from typing import List, Optional, Sequence
 
 import jax
 import numpy as np
 
 from repro.configs import ARCHS, smoke_config
 from repro.models import RuntimeFlags, build
-from repro.serve import Request, ServeEngine
+from repro.serve import Request, ServeEngine, ServeStats
 from repro.train import CheckpointManager
+
+
+def device_groups(tp: int, dp: int,
+                  devices: Optional[Sequence] = None) -> List[list]:
+    """Split the visible devices into ``dp`` disjoint TP groups of ``tp``
+    devices each (replica ``i`` owns ``devices[i*tp:(i+1)*tp]``)."""
+    devs = list(jax.devices() if devices is None else devices)
+    if tp < 1 or dp < 1:
+        raise ValueError(f"tp={tp} and dp={dp} must be >= 1")
+    if tp * dp > len(devs):
+        raise ValueError(
+            f"tp={tp} x dp={dp} needs {tp * dp} devices, have {len(devs)}")
+    return [devs[i * tp:(i + 1) * tp] for i in range(dp)]
+
+
+class ReplicaPool:
+    """A shared admission queue over independent engine replicas (the DP
+    axis).  ``submit`` routes each request to the least-loaded replica
+    (queued + in-flight requests; ties go to the lowest replica index, so
+    an idle pool round-robins).  Replicas never share device state — the
+    pool is scheduling only, which is what makes DP scale linearly."""
+
+    def __init__(self, engines: Sequence[ServeEngine]):
+        if not engines:
+            raise ValueError("ReplicaPool needs at least one engine")
+        self.engines = list(engines)
+
+    @staticmethod
+    def _load(eng: ServeEngine) -> int:
+        return len(eng.queue) + sum(s is not None for s in eng.slots)
+
+    def submit(self, req: Request) -> int:
+        """Admit ``req`` to the least-loaded replica; returns its index."""
+        i = min(range(len(self.engines)),
+                key=lambda j: self._load(self.engines[j]))
+        self.engines[i].add_request(req)
+        return i
+
+    def drain(self, max_ticks: int = 100_000) -> ServeStats:
+        """Tick every replica that still has work until all are idle."""
+        ticks = 0
+        while True:
+            busy = [e for e in self.engines
+                    if e.queue or any(s is not None for s in e.slots)]
+            if not busy:
+                return self.stats()
+            for eng in busy:
+                eng.step()
+                ticks += 1
+                if ticks > max_ticks:
+                    raise RuntimeError(
+                        f"replica pool failed to drain in {max_ticks} ticks")
+
+    def stats(self) -> ServeStats:
+        """Aggregate counters across replicas (sums every ServeStats
+        field — peaks sum too: the pool's total live-page commitment)."""
+        agg = ServeStats()
+        for eng in self.engines:
+            for f in dataclasses.fields(ServeStats):
+                setattr(agg, f.name,
+                        getattr(agg, f.name) + getattr(eng.stats, f.name))
+        return agg
+
+
+def build_pool(bundle, params, *, tp: int = 1, dp: int = 1,
+               devices: Optional[Sequence] = None,
+               **engine_kw) -> ReplicaPool:
+    """``dp`` engine replicas, each TP-sharded over its own ``tp``-device
+    group.  With ``tp * dp == 1`` the single engine runs undistributed
+    (no mesh, any backend); any wider layout shards/pins KV page pools,
+    so the paged backend is required."""
+    from repro.dist import ServeMesh
+
+    if tp * dp == 1:
+        return ReplicaPool([ServeEngine(bundle, params, **engine_kw)])
+    engine_kw.setdefault("cache_backend", "paged")
+    groups = device_groups(tp, dp, devices)
+    engines = [ServeEngine(bundle, params, **engine_kw,
+                           dist=ServeMesh.tp(tp, devices=g))
+               for g in groups]
+    return ReplicaPool(engines)
 
 
 def main(argv=None):
@@ -29,6 +125,10 @@ def main(argv=None):
     ap.add_argument("--window", type=int, default=8,
                     help="fused decode ticks per dispatch")
     ap.add_argument("--kv-int8", action="store_true")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel width per engine replica")
+    ap.add_argument("--dp", type=int, default=1,
+                    help="independent engine replicas (device groups)")
     args = ap.parse_args(argv)
 
     cfg = smoke_config(ARCHS[args.arch]) if args.smoke else ARCHS[args.arch]
@@ -43,20 +143,22 @@ def main(argv=None):
     else:
         params = bundle.init(jax.random.PRNGKey(0))
 
-    eng = ServeEngine(bundle, params, batch_size=args.batch,
-                      max_len=args.max_len, window=args.window)
+    pool = build_pool(bundle, params, tp=args.tp, dp=args.dp,
+                      batch_size=args.batch, max_len=args.max_len,
+                      window=args.window)
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         prompt = rng.integers(0, cfg.vocab_size,
                               size=int(rng.integers(4, 24))).astype(np.int32)
-        eng.add_request(Request(rid=i, prompt=prompt,
-                                max_new_tokens=args.max_new))
+        pool.submit(Request(rid=i, prompt=prompt,
+                            max_new_tokens=args.max_new))
     t0 = time.perf_counter()
-    stats = eng.run_to_completion()
+    stats = pool.drain()
     dt = time.perf_counter() - t0
     print(f"{stats.tokens_out} tokens in {dt:.2f}s "
-          f"({stats.tokens_out/dt:.1f} tok/s), prefills={stats.prefills}, "
-          f"decode_steps={stats.decode_steps}, "
+          f"({stats.tokens_out/dt:.1f} tok/s) across "
+          f"{len(pool.engines)} replica(s) x tp={args.tp}, "
+          f"prefills={stats.prefills}, decode_steps={stats.decode_steps}, "
           f"decode_dispatches={stats.decode_dispatches}")
     return 0
 

@@ -124,6 +124,87 @@ def paged_gather_attention(q, k_pages, v_pages, page_table, p: AttnParams,
                            q_offset=q_offset, kv_valid_len=kv_valid_len)
 
 
+# ---------------------------------------------------------------------------
+# TP shard_map islands over the paged dispatches
+# ---------------------------------------------------------------------------
+# The serve-side tensor-parallel split (the paper's multi-bank / channel-
+# interleaving axis): attention heads and the KV page pools partition over
+# one mesh axis, page tables and valid lengths replicate, and each shard
+# walks ITS OWN slice of the pools — every device streams pages from its
+# own HBM stack, so aggregate KV bandwidth scales with the axis size.
+# Placement is explicit (shard_map, not GSPMD inference) because the Pallas
+# kernel's BlockSpec index_map dereferences the table: the partitioner
+# cannot see that page ids are head-invariant, so left to itself it would
+# all-gather the pools.  GQA stays shard-local: with tp dividing both Hq
+# and Hkv, contiguous head blocks keep every query group and its kv head on
+# the same shard (group size g = Hq/Hkv is shard-invariant).
+
+def tp_shardable(mesh, axis: str, hq: int, hkv: int) -> bool:
+    """True when the paged dispatches can run as per-shard islands."""
+    if mesh is None or axis not in mesh.shape:
+        return False
+    tp = mesh.shape[axis]
+    return tp > 1 and hq % tp == 0 and hkv % tp == 0
+
+
+def _tp_island(mesh, axis, body, args, in_specs, out_spec):
+    from jax.experimental.shard_map import shard_map
+    fn = shard_map(body, mesh=mesh, in_specs=tuple(in_specs),
+                   out_specs=out_spec, check_rep=False)
+    return fn(*args)
+
+
+def tp_paged_attention(mesh, axis: str, q, k_pages, v_pages, page_table,
+                       valid_len, *, scale=None, softcap=None, window=None,
+                       k_scale=None, v_scale=None, plan=None):
+    """Decode-mode island: q (B, Hq, D) and the pools partition on heads,
+    table/valid_len replicate; each shard dispatches the Pallas kernel over
+    its head slice.  Output stays head-partitioned — the o-projection's
+    contraction (GSPMD) reduces across shards."""
+    from jax.sharding import PartitionSpec as P
+    quant = k_scale is not None
+
+    def body(q_, kp_, vp_, tbl_, vl_, *sc):
+        ks_, vs_ = sc if quant else (None, None)
+        return kops.paged_attention(q_, kp_, vp_, tbl_, vl_, scale=scale,
+                                    softcap=softcap, window=window,
+                                    k_scale=ks_, v_scale=vs_, plan=plan)
+
+    pool = P(None, None, axis, None)
+    args = [q, k_pages, v_pages, page_table, valid_len]
+    specs = [P(None, axis, None), pool, pool, P(None, None), P(None)]
+    if quant:
+        args += [k_scale, v_scale]
+        specs += [P(None, None), P(None, None)]
+    return _tp_island(mesh, axis, body, args, specs, P(None, axis, None))
+
+
+def tp_paged_gather_attention(mesh, axis: str, q, k_pages, v_pages,
+                              page_table, p: AttnParams, q_offset,
+                              kv_valid_len, k_scale=None, v_scale=None):
+    """Extend/verify-mode island: q (B, C, Hq, D) partitions on heads; the
+    dense table gather runs per shard over its own pool slice, so chunked
+    prefill and multi-token verify never move another shard's pages."""
+    from jax.sharding import PartitionSpec as P
+    quant = k_scale is not None
+
+    def body(q_, kp_, vp_, tbl_, off_, vl_, *sc):
+        ks_, vs_ = sc if quant else (None, None)
+        return paged_gather_attention(q_, kp_, vp_, tbl_, p, q_offset=off_,
+                                      kv_valid_len=vl_, k_scale=ks_,
+                                      v_scale=vs_)
+
+    pool = P(None, None, axis, None)
+    args = [q, k_pages, v_pages, page_table, q_offset, kv_valid_len]
+    specs = [P(None, None, axis, None), pool, pool, P(None, None), P(None),
+             P(None)]
+    if quant:
+        args += [k_scale, v_scale]
+        specs += [P(None, None), P(None, None)]
+    return _tp_island(mesh, axis, body, args, specs,
+                      P(None, None, axis, None))
+
+
 def chunked_attention(q, k, v, p: AttnParams, q_offset=0, kv_valid_len=None):
     """Online-softmax double scan (the `nest` transformation) with a
     flash-style custom VJP: the backward recomputes score blocks from

@@ -54,6 +54,11 @@ class RuntimeFlags:
     #                                  the paper's unit-size lever on the KV
     #                                  stream — halves cache bytes)
     shd: Sharder = no_shard
+    # serve-side tensor parallelism: a jax Mesh turns the paged dispatches
+    # into shard_map islands (heads + KV pools partitioned over tp_axis,
+    # page tables replicated — see attention.tp_paged_attention)
+    mesh: Any = None
+    tp_axis: str = "model"
 
 
 def paged_supported(cfg: ModelConfig, kv_dtype: str = "native") -> bool:
@@ -259,17 +264,34 @@ def _paged_attn(q, k, v, cache, ap, spec, pos, table, chunk_valid, cfg,
         new_cache["k_scale"] = cache["k_scale"].at[pids, slots].set(ks)
         new_cache["v_scale"] = cache["v_scale"].at[pids, slots].set(vs)
 
+    tp = attn_mod.tp_shardable(flags.mesh, flags.tp_axis,
+                               q.shape[2], kp.shape[2])
     if mode == "paged_decode":  # S == 1: the kernel's regime
-        o = kops.paged_attention(
-            q[:, 0], kp, vp, tbl, posv + 1, scale=ap.scale,
-            softcap=ap.softcap, window=spec.sliding_window,
-            k_scale=new_cache.get("k_scale"),
-            v_scale=new_cache.get("v_scale"), plan=plan)[:, None]
+        if tp:
+            o = attn_mod.tp_paged_attention(
+                flags.mesh, flags.tp_axis, q[:, 0], kp, vp, tbl, posv + 1,
+                scale=ap.scale, softcap=ap.softcap,
+                window=spec.sliding_window,
+                k_scale=new_cache.get("k_scale"),
+                v_scale=new_cache.get("v_scale"), plan=plan)[:, None]
+        else:
+            o = kops.paged_attention(
+                q[:, 0], kp, vp, tbl, posv + 1, scale=ap.scale,
+                softcap=ap.softcap, window=spec.sliding_window,
+                k_scale=new_cache.get("k_scale"),
+                v_scale=new_cache.get("v_scale"), plan=plan)[:, None]
     elif not ring:  # paged_extend: chunked prefill over the gathered view
-        o = attn_mod.paged_gather_attention(
-            q, kp, vp, tbl, ap, q_offset=posv, kv_valid_len=posv + valid,
-            k_scale=new_cache.get("k_scale"),
-            v_scale=new_cache.get("v_scale"))
+        if tp:
+            o = attn_mod.tp_paged_gather_attention(
+                flags.mesh, flags.tp_axis, q, kp, vp, tbl, ap,
+                q_offset=posv, kv_valid_len=posv + valid,
+                k_scale=new_cache.get("k_scale"),
+                v_scale=new_cache.get("v_scale"))
+        else:
+            o = attn_mod.paged_gather_attention(
+                q, kp, vp, tbl, ap, q_offset=posv, kv_valid_len=posv + valid,
+                k_scale=new_cache.get("k_scale"),
+                v_scale=new_cache.get("v_scale"))
     return o, new_cache
 
 

@@ -147,6 +147,17 @@ class ServeEngine:
     draft only changes *throughput*, never output.  Requires a pure
     full-attention target stack: ring rotation and recurrent state cannot
     roll back a rejected suffix.
+
+    Tensor parallelism: pass ``dist`` (a :class:`repro.dist.ServeMesh`)
+    and this ONE engine spans the mesh — params shard by the ``tp``
+    policy, the KV page pools split on their kv-heads dim (every shard
+    holds its head-stripe of every page; one global page-id space, tables
+    replicated), and the paged dispatches run as ``shard_map`` islands.
+    Logits are all-gathered before token selection, so a TP=N drain is
+    token-identical to the single-device engine — greedy, sampled, and
+    speculative.  Requires ``cache_backend="paged"`` and ``tp`` dividing
+    both head counts.  DP is a scheduling concern, not an engine one:
+    see ``launch/serve.py:ReplicaPool``.
     """
 
     def __init__(self, bundle: ModelBundle, params, batch_size: int,
@@ -162,7 +173,8 @@ class ServeEngine:
                  seed: int = 0,
                  draft_bundle: Optional[ModelBundle] = None,
                  draft_params=None,
-                 spec_k: int = 4):
+                 spec_k: int = 4,
+                 dist=None):
         self.bundle = bundle
         self.params = params
         self.bsz = batch_size
@@ -184,6 +196,29 @@ class ServeEngine:
                 "(enc-dec and frontend stacks keep the dense cache; see "
                 "ModelBundle.paged_supported)")
         self.backend = cache_backend
+        # -- tensor parallelism (dist = a repro.dist.ServeMesh) ------------
+        # one engine spans the mesh: params shard by the tp policy, the KV
+        # page pools split on their kv-heads dim, page tables + sampling
+        # state replicate, and the paged dispatches run as shard_map
+        # islands.  The host-side allocator keeps ONE global page-id space,
+        # so every bit of scheduling below is mesh-oblivious.
+        self.dist = dist
+        self.tp = 1
+        if dist is not None:
+            if self.backend != "paged":
+                raise ValueError(
+                    "dist serving shards the KV page pools; "
+                    "cache_backend='paged' is required")
+            dist.validate(bundle.cfg)
+            bundle = self.bundle = dist.bind(bundle)
+            params = self.params = dist.shard_params(bundle, params)
+            if draft_bundle is not None:
+                dist.validate(draft_bundle.cfg)
+                draft_bundle = self.draft = dist.bind(draft_bundle)
+                if draft_params is not None:
+                    draft_params = self.draft_params = dist.shard_params(
+                        draft_bundle, draft_params)
+            self.tp = dist.tp_degree
         self.bucket_prompts = (self._bucketable(bundle.cfg)
                                if bucket_prompts is None else bucket_prompts)
 
@@ -206,8 +241,14 @@ class ServeEngine:
             # plan from the dtype the pool actually stores
             kv_store = ("int8" if bundle.flags.kv_dtype == "int8"
                         else str(cfg.compute_dtype))
-            base = plan_for("paged_attention", shape_sig=(max_len, hd),
-                            dtype=kv_store)
+            # under TP the plan cache keys by the PER-SHARD kv-head count:
+            # each shard's kernel walks its own pool slice, so a calibrated
+            # multi-device host derives its plan independently of the
+            # single-device one (page geometry itself is per-head-row and
+            # does not change)
+            sig = ((max_len, hd) if self.tp == 1
+                   else (max_len, hd, cfg.num_kv_heads // self.tp))
+            base = plan_for("paged_attention", shape_sig=sig, dtype=kv_store)
             self.page = int(page_size or base.page_size)
             # an explicit page_size overrides the derived one; the plan the
             # kernel receives must describe the pool actually laid out
@@ -230,11 +271,13 @@ class ServeEngine:
             pure_full = self.has_full and not windows and not self.has_recurrent
             self.prefix: Optional[PrefixIndex] = (
                 PrefixIndex() if prefix_cache and pure_full else None)
-            self._paged_prefill = jax.jit(
-                lambda p, cache, toks, off, tbl, cv, slot:
-                bundle.paged_prefill_chunk(p, cache, toks, off, tbl, cv,
-                                           slot),
-                donate_argnums=(1,))
+            def _prefill_impl(p, cache, toks, off, tbl, cv, slot,
+                              bundle=bundle):
+                cache, logits = bundle.paged_prefill_chunk(
+                    p, cache, toks, off, tbl, cv, slot)
+                return cache, _gather_logits(bundle, logits)
+
+            self._paged_prefill = jax.jit(_prefill_impl, donate_argnums=(1,))
             self._paged_decode_many = jax.jit(
                 functools.partial(_paged_decode_many_impl, bundle, self.plan,
                                   self.sampling),
@@ -279,10 +322,10 @@ class ServeEngine:
         from repro.tune import plan_for
         kv_store = ("int8" if self.bundle.flags.kv_dtype == "int8"
                     else str(cfg.compute_dtype))
-        vplan = plan_for("paged_verify",
-                         shape_sig=(self.spec_k + 1, self.max_len,
-                                    cfg.resolved_head_dim),
-                         dtype=kv_store)
+        vsig = (self.spec_k + 1, self.max_len, cfg.resolved_head_dim)
+        if self.tp > 1:  # keyed per shard, like the decode plan
+            vsig += (cfg.num_kv_heads // self.tp,)
+        vplan = plan_for("paged_verify", shape_sig=vsig, dtype=kv_store)
         # the verify step reads the pool the engine laid out: an explicit
         # page_size override must reach the verify plan too
         self.vplan = (vplan if vplan.page_size == self.page
@@ -296,14 +339,17 @@ class ServeEngine:
             donate_argnums=(2, 3))
 
     def _init_state(self) -> None:
-        self.pos = jnp.zeros((self.bsz,), jnp.int32)       # device
-        self.tokens = jnp.zeros((self.bsz, 1), jnp.int32)  # device
+        self.pos = self._dev(jnp.zeros((self.bsz,), jnp.int32))
+        self.tokens = self._dev(jnp.zeros((self.bsz, 1), jnp.int32))
         # per-slot PRNG keys (device): set at admission from (seed, rid),
-        # advanced one split per emitted token inside the fused loops
-        self.keys = jnp.zeros((self.bsz, 2), jnp.uint32)
+        # advanced one split per emitted token inside the fused loops.
+        # Under TP they replicate across the mesh — token selection runs on
+        # all-gathered logits, so every shard walks the same chain
+        self.keys = self._dev(jnp.zeros((self.bsz, 2), jnp.uint32))
         self._hpos = np.zeros((self.bsz,), np.int64)       # host mirror
         if self.draft is not None:
-            self.draft_cache = self.draft.init_cache(self.bsz, self.max_len)
+            self.draft_cache = self._dev(
+                self.draft.init_cache(self.bsz, self.max_len))
         self.slots: List[Optional[Request]] = [None] * self.bsz
         self.queue: List[Request] = []
         self.stats = ServeStats()
@@ -319,13 +365,15 @@ class ServeEngine:
                 self.num_pages if self.has_full else 1, self.page,
                 batch=self.bsz,
                 ring_pages=self.num_ring_pages)
+            if self.dist is not None:
+                # the per-shard pool slice: same page ids on every shard,
+                # each holding its own kv-heads stripe of every page
+                self.cache = self.dist.shard_paged_cache(self.cache)
             self._htable = np.zeros((self.bsz, max(1, self.pages_per_seq)),
                                     np.int32)
             self._hrtable = np.zeros((self.bsz, max(1, self.ring_slots)),
                                      np.int32)
-            self._table = dict(full=jnp.asarray(self._htable),
-                               ring=jnp.asarray(self._hrtable))
-            self._table_dirty = False
+            self._sync_table()
             self._pending: Dict[int, int] = {}   # slot -> next prefill offset
             self._hashes: Dict[int, List[str]] = {}  # rid -> full-page hashes
         else:
@@ -339,6 +387,18 @@ class ServeEngine:
         self._init_state()
         # _seen_prefill_shapes survives: those shapes remain compiled, so a
         # post-reset drain reports only genuinely new compiles
+
+    def _dev(self, x):
+        """Place host/engine state on the mesh (replicated) under TP; a
+        no-op single-device."""
+        return x if self.dist is None else self.dist.replicated(x)
+
+    def _sync_table(self) -> None:
+        """Publish the host table mirrors as the device table dict (page
+        tables replicate across the mesh — page ids are global)."""
+        self._table = dict(full=self._dev(jnp.asarray(self._htable)),
+                           ring=self._dev(jnp.asarray(self._hrtable)))
+        self._table_dirty = False
 
     @staticmethod
     def _bucketable(cfg) -> bool:
@@ -359,9 +419,12 @@ class ServeEngine:
         return int(sum(x.size * x.dtype.itemsize
                        for x in jax.tree_util.tree_leaves(self.cache)))
 
-    def _page_bytes_by_kind(self):
+    def _page_bytes_by_kind(self, per_shard: bool = False):
         """(full, ring) HBM bytes of ONE page summed over every layer of
-        that kind (k + v, plus the int8 scale lanes)."""
+        that kind (k + v, plus the int8 scale lanes).  ``per_shard``
+        reports one TP shard's slice: the pools split on kv-heads, so page
+        bytes divide by ``tp``; the scale lanes replicate (they are
+        per-token, reduced over heads) and do not."""
         cfg = self.bundle.cfg
         nb = cfg.num_pattern_blocks
         n_full = n_ring = 0
@@ -375,7 +438,8 @@ class ServeEngine:
                 n_ring += mult
         int8 = self.bundle.flags.kv_dtype == "int8"
         itm = 1 if int8 else jnp.dtype(cfg.compute_dtype).itemsize
-        per_layer = (2 * self.page * cfg.num_kv_heads
+        heads = cfg.num_kv_heads // (self.tp if per_shard else 1)
+        per_layer = (2 * self.page * heads
                      * cfg.resolved_head_dim * itm
                      + (2 * self.page * 4 if int8 else 0))
         return n_full * per_layer, n_ring * per_layer
@@ -394,13 +458,16 @@ class ServeEngine:
                  + (self.num_ring_pages * ring_pb if self.ralloc else 0))
         return self.kv_bytes() - pools
 
-    def live_kv_bytes_peak(self) -> int:
+    def live_kv_bytes_peak(self, per_shard: bool = False) -> int:
         """Peak *live-token* HBM bytes: what the cache actually held, vs the
         ``batch x max_len`` footprint the dense backend commits upfront.
         Ring layers are the headline win: however long a windowed sequence
-        runs, its pages stay bounded by ``ceil(window/page)+1``."""
+        runs, its pages stay bounded by ``ceil(window/page)+1``.
+        ``per_shard`` reports one TP shard's slice (pool bytes divide by
+        the mesh width; replicated recurrent state does not) — the
+        per-channel footprint in the paper's multi-bank framing."""
         if self.backend == "paged":
-            full_pb, ring_pb = self._page_bytes_by_kind()
+            full_pb, ring_pb = self._page_bytes_by_kind(per_shard)
             return (self.stats.pages_peak * full_pb
                     + self.stats.ring_pages_peak * ring_pb
                     + self._recurrent_state_bytes())
@@ -537,7 +604,8 @@ class ServeEngine:
                 # cap at (s-1) tokens: the last token must be computed so
                 # the final chunk yields the logits that seed decoding
                 usable = (s - 1) // self.page
-                pages = self.prefix.lookup(hashes[:usable])
+                pages = self.prefix.lookup(hashes[:usable],
+                                           alloc=self.alloc)
                 if pages:
                     hit_len = len(pages) * self.page
                     self.alloc.attach(req.rid, pages, hit_len)
@@ -767,9 +835,7 @@ class ServeEngine:
         steps = jnp.asarray(np.minimum(budgets, n_run), jnp.int32)
         if self.backend == "paged":
             if self._table_dirty:
-                self._table = dict(full=jnp.asarray(self._htable),
-                                   ring=jnp.asarray(self._hrtable))
-                self._table_dirty = False
+                self._sync_table()
             (self.cache, self.tokens, self.pos, self.keys,
              out) = self._paged_decode_many(
                 n_run, self.params, self.cache, self.tokens, self.pos, steps,
@@ -809,9 +875,7 @@ class ServeEngine:
         rows return to the pool (shared prefix pages are refcounted, never
         mutated)."""
         if self._table_dirty:
-            self._table = dict(full=jnp.asarray(self._htable),
-                               ring=jnp.asarray(self._hrtable))
-            self._table_dirty = False
+            self._sync_table()
         steps = jnp.asarray(budgets, jnp.int32)
         (self.cache, self.draft_cache, self.tokens, self.pos, self.keys,
          out, meta) = self._spec_decode(
@@ -885,6 +949,19 @@ class ServeEngine:
         return self.stats
 
 
+def _gather_logits(bundle: ModelBundle, logits):
+    """TP: constrain the step's final logits replicated — ONE all-gather
+    per step, placed so token selection (argmax or sample) runs on full
+    replicated rows.  The per-slot PRNG chains therefore never see the
+    mesh, which is what keeps a sharded drain bitwise identical to the
+    single-device engine.  No-op off-mesh."""
+    mesh = getattr(bundle.flags, "mesh", None)
+    if mesh is None:
+        return logits
+    return jax.lax.with_sharding_constraint(
+        logits, jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec()))
+
+
 def _select_next(sampling: SamplingParams, logits, keys, act):
     """One in-loop token selection: greedy argmax (keys untouched — zero
     PRNG state consumed) or one split-and-draw per active slot.  Masked
@@ -937,7 +1014,8 @@ def _paged_decode_many_impl(bundle: ModelBundle, plan, sampling: SamplingParams,
         act = i < steps
         logits, cache = bundle.paged_decode_step(params, cache, tokens, pos,
                                                  table, plan, act)
-        nxt, keys = _select_next(sampling, logits, keys, act)
+        nxt, keys = _select_next(sampling, _gather_logits(bundle, logits),
+                                 keys, act)
         tokens = jnp.where(act[:, None], nxt[:, None], tokens)
         pos = jnp.where(act, pos + 1, pos)
         out = out.at[i].set(jnp.where(act, nxt, -1))
@@ -983,6 +1061,7 @@ def _spec_decode_many_impl(bundle: ModelBundle, draft: ModelBundle, plan,
     def dbody(i, carry):
         dcache, dtok, drafts = carry
         dlogits, dcache = draft.decode_step(dparams, dcache, dtok, pos + i)
+        dlogits = _gather_logits(draft, dlogits)
         if sampling.greedy:
             d = jnp.argmax(dlogits, axis=-1).astype(jnp.int32)
         else:
@@ -1001,6 +1080,7 @@ def _spec_decode_many_impl(bundle: ModelBundle, draft: ModelBundle, plan,
     verify_tokens = jnp.concatenate([tokens, drafts], axis=1)  # (B, k+1)
     cache, logits = bundle.paged_verify(params, cache, verify_tokens, pos,
                                         table, cv, plan)       # (B, k+1, V)
+    logits = _gather_logits(bundle, logits)
     if sampling.greedy:
         tsamp = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # (B, k+1)
     else:

@@ -85,6 +85,10 @@ class PageAllocator:
         self.tables: Dict[int, List[int]] = {}
         self.lengths: Dict[int, int] = {}
         self.ref: Dict[int, int] = {}
+        # pages holding a prefix-index reference: the index's claim on a
+        # page is explicit, so eviction can tell "my pin keeps this alive"
+        # from "the pool re-issued this id to someone else"
+        self.pinned: set = set()
 
     # ------------------------------------------------------------------
     def alloc(self, rid: int) -> None:
@@ -103,6 +107,15 @@ class PageAllocator:
         return pid
 
     def _free_page(self, pid: int) -> None:
+        if pid in self.pinned:
+            # a pinned page's refcount includes the index's +1, so hitting
+            # zero means something decref'd the pinned prefix below its
+            # floor (double release / rollback past an attached prefix) —
+            # freeing it here would hand a still-indexed page to the next
+            # reserve and silently serve foreign KV rows
+            raise RuntimeError(
+                f"page {pid} freed while pinned by the prefix index "
+                "(refcount underflow on a shared prefix page)")
         bisect.insort(self.free, pid)
         del self.ref[pid]
 
@@ -255,10 +268,23 @@ class PageAllocator:
     # -- prefix-index pinning ------------------------------------------
     def pin(self, pid: int) -> None:
         """Extra reference held by the prefix index: the page outlives its
-        owning request so later prompts can share it."""
+        owning request so later prompts can share it.  Membership is
+        tracked so :meth:`unpin` and eviction act only on pages this
+        allocator actually pinned — never on a re-issued page id."""
+        if pid not in self.ref:
+            raise KeyError(f"pin of unallocated page {pid}")
+        if pid in self.pinned:
+            raise ValueError(f"page {pid} already pinned")
         self.ref[pid] += 1
+        self.pinned.add(pid)
 
     def unpin(self, pid: int) -> None:
+        if pid not in self.pinned:
+            # refusing here is the whole point: a stale index entry whose
+            # page id was freed and re-issued must not decref the NEW
+            # owner's only reference
+            raise KeyError(f"unpin of page {pid} that holds no pin")
+        self.pinned.discard(pid)
         self.ref[pid] -= 1
         if self.ref[pid] == 0:
             self._free_page(pid)
@@ -288,11 +314,22 @@ class PrefixIndex:
     def __len__(self) -> int:
         return len(self._by_hash)
 
-    def lookup(self, hashes: Sequence[str]) -> List[int]:
-        """Longest run of leading hashes present; returns their page ids."""
+    def lookup(self, hashes: Sequence[str],
+               alloc: Optional[PageAllocator] = None) -> List[int]:
+        """Longest run of leading hashes present; returns their page ids.
+
+        With ``alloc`` the run is additionally validated against the
+        allocator's pin registry: an entry whose page the pool has freed
+        (and possibly re-issued to a new request) is a *miss*, not a hit —
+        attaching it would share a foreign request's KV rows.  Stale
+        entries found this way are dropped on the spot."""
         pages: List[int] = []
         for h in hashes:
             pid = self._by_hash.get(h)
+            if pid is not None and alloc is not None \
+                    and pid not in alloc.pinned:
+                del self._by_hash[h]  # stale: freed/re-issued since indexed
+                pid = None
             if pid is None:
                 self.misses += 1
                 break
@@ -309,13 +346,23 @@ class PrefixIndex:
         return True
 
     def evict_unused(self, alloc: PageAllocator) -> int:
-        """Drop every entry whose page is only kept alive by the index
-        (ref == 1): the deterministic response to pool pressure.  Returns
-        the number of pages freed."""
-        drop = [h for h, pid in self._by_hash.items() if alloc.ref.get(pid) == 1]
-        for h in drop:
-            alloc.unpin(self._by_hash.pop(h))
-        return len(drop)
+        """Drop every entry whose page is only kept alive by the index's
+        pin (pinned and ref == 1): the deterministic response to pool
+        pressure.  Entries whose page lost its pin (freed while indexed,
+        possibly already re-issued to a new request) are *self-healed* —
+        dropped without touching refcounts, because ``ref == 1`` on such a
+        page means the NEW owner's only reference, not ours.  Returns the
+        number of pages freed back to the pool."""
+        freed = 0
+        for h, pid in list(self._by_hash.items()):
+            if pid not in alloc.pinned:
+                del self._by_hash[h]  # stale: not our reference to drop
+                continue
+            if alloc.ref.get(pid) == 1:
+                del self._by_hash[h]
+                alloc.unpin(pid)
+                freed += 1
+        return freed
 
 
 @dataclass

@@ -307,12 +307,16 @@ def derive_plan(kernel: str, *, shape_sig: Tuple[int, ...], dtype: str,
                                   dtype=dtype, spec=spec,
                                   calibration=calibration)
     if kernel == "paged_attention":
-        max_len, head_dim = shape_sig
+        # optional trailing element: per-shard kv-head count under serve-side
+        # TP — it never changes the page geometry (the 512B rule is per head
+        # row) but keys the cache, so a calibration made on an N-way engine
+        # re-derives independently of the single-device plan
+        max_len, head_dim = shape_sig[:2]
         return derive_paged_plan(max_len=max_len, head_dim=head_dim,
                                  dtype=dtype, spec=spec,
                                  calibration=calibration)
     if kernel == "paged_verify":
-        verify_tokens, max_len, head_dim = shape_sig
+        verify_tokens, max_len, head_dim = shape_sig[:3]
         return derive_verify_plan(verify_tokens=verify_tokens,
                                   max_len=max_len, head_dim=head_dim,
                                   dtype=dtype, spec=spec,

@@ -170,6 +170,127 @@ def scenario_decode_sharded():
     assert bool(jnp.all(jnp.isfinite(logits)))
 
 
+def _serve_fixture():
+    """Shared smoke fixture for the serve scenarios: gemma-2b with
+    kv-heads widened to 2 (smoke is MQA; TP=2 must divide both head
+    counts), a deterministic request mix, and a drain helper."""
+    from repro.configs import ARCHS, override, smoke_config
+    from repro.models import RuntimeFlags, build
+    from repro.serve import Request
+
+    flags = RuntimeFlags(attn_impl="chunked", attn_bq=16, attn_bkv=16,
+                         moe_impl="dense", loss_chunk=16)
+    cfg = override(smoke_config(ARCHS["gemma-2b"]), num_kv_heads=2)
+    bundle = build(cfg, flags)
+    params = bundle.init(jax.random.PRNGKey(0))
+
+    rng = np.random.default_rng(3)
+    common = rng.integers(0, cfg.vocab_size, size=18).astype(np.int32)
+    prompts = []
+    for i in range(5):
+        tail = rng.integers(0, cfg.vocab_size,
+                            size=int(rng.integers(3, 11))).astype(np.int32)
+        prompts.append(np.concatenate([common, tail]) if i % 2 == 0
+                       else tail)
+
+    def reqs():
+        return [Request(rid=i, prompt=p, max_new_tokens=8)
+                for i, p in enumerate(prompts)]
+
+    return bundle, params, reqs
+
+
+def scenario_serve_tp():
+    """TP=2 ServeEngine drains token-identical to single-device, greedy
+    and sampled; one shard holds exactly half the live KV bytes."""
+    from repro.dist import ServeMesh
+    from repro.serve import SamplingParams, ServeEngine
+
+    bundle, params, reqs = _serve_fixture()
+    sm = ServeMesh.tp(2)
+
+    def drain(dist=None, sampling=None):
+        eng = ServeEngine(bundle, params, batch_size=2, max_len=64,
+                          cache_backend="paged", prefill_chunk=8,
+                          sampling=sampling, seed=0, dist=dist)
+        rs = reqs()
+        for r in rs:
+            eng.add_request(r)
+        eng.run_to_completion()
+        return [r.out_tokens for r in rs], eng
+
+    for samp in (None, SamplingParams(temperature=0.9, top_k=11)):
+        want, e1 = drain(sampling=samp)
+        got, e2 = drain(dist=sm, sampling=samp)
+        assert want == got, (samp, want, got)
+        assert e2.live_kv_bytes_peak() == e1.live_kv_bytes_peak()
+        assert e2.live_kv_bytes_peak() == (
+            2 * e2.live_kv_bytes_peak(per_shard=True))
+    # the pools are genuinely partitioned across devices
+    leaves = jax.tree_util.tree_leaves_with_path(e2.cache)
+    pool = [x for p, x in leaves
+            if "k_pages" in jax.tree_util.keystr(p)][0]
+    assert len(pool.sharding.device_set) == 2
+    assert not pool.sharding.is_fully_replicated
+
+
+def scenario_serve_tp_spec():
+    """Speculative decoding under TP=2: draft + verify stay
+    token-identical to the single-device non-speculative drain."""
+    from repro.dist import ServeMesh
+    from repro.serve import SamplingParams, ServeEngine
+
+    bundle, params, reqs = _serve_fixture()
+    draft_params = bundle.init(jax.random.PRNGKey(5))
+    sm = ServeMesh.tp(2)
+
+    def drain(dist=None, spec=False,
+              sampling=SamplingParams(temperature=0.9, top_k=11)):
+        kw = (dict(draft_bundle=bundle, draft_params=draft_params,
+                   spec_k=3) if spec else {})
+        eng = ServeEngine(bundle, params, batch_size=2, max_len=64,
+                          cache_backend="paged", prefill_chunk=8,
+                          sampling=sampling, seed=0, dist=dist, **kw)
+        rs = reqs()
+        for r in rs:
+            eng.add_request(r)
+        eng.run_to_completion()
+        return [r.out_tokens for r in rs], eng
+
+    want, _ = drain()
+    got, eng = drain(dist=sm, spec=True)
+    assert want == got, (want, got)
+    assert eng.stats.spec_steps > 0
+
+
+def scenario_serve_dp_pool():
+    """DP=2 replica pool behind the shared admission queue reproduces the
+    single-engine greedy streams; both replicas take work."""
+    from repro.launch.serve import build_pool
+    from repro.serve import ServeEngine
+
+    bundle, params, reqs = _serve_fixture()
+    single = ServeEngine(bundle, params, batch_size=2, max_len=64,
+                         cache_backend="paged", prefill_chunk=8, seed=0)
+    rs = reqs()
+    for r in rs:
+        single.add_request(r)
+    single.run_to_completion()
+    want = [r.out_tokens for r in rs]
+
+    pool = build_pool(bundle, params, tp=1, dp=2,
+                      devices=jax.devices()[:2], batch_size=2, max_len=64,
+                      prefill_chunk=8, seed=0)
+    rs = reqs()
+    for r in rs:
+        pool.submit(r)
+    stats = pool.drain()
+    assert [r.out_tokens for r in rs] == want
+    assert stats.tokens_out == sum(len(t) for t in want)
+    # the least-loaded queue actually spread the mix over both replicas
+    assert all(e.stats.tokens_out > 0 for e in pool.engines)
+
+
 SCENARIOS = {k[len("scenario_"):]: v for k, v in list(globals().items())
              if k.startswith("scenario_")}
 

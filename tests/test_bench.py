@@ -190,11 +190,12 @@ def test_structural_gate_ignores_wallclock_noise(tmp_path, capsys):
 # registry smoke (the BENCH_FAST=1 campaign)
 # ---------------------------------------------------------------------------
 
-def test_registry_lists_fourteen_sweeps():
-    assert len(REGISTRY) == 14
+def test_registry_lists_fifteen_sweeps():
+    assert len(REGISTRY) == 15
     assert ORDER == ["latency", "outstanding", "unit_size", "stride", "burst",
                      "num_kernels", "random", "database", "conv", "roofline",
-                     "serve", "kernel_plan", "paged_serve", "spec_serve"]
+                     "serve", "kernel_plan", "paged_serve", "spec_serve",
+                     "dist_serve"]
 
 
 def test_registry_rejects_unknown_sweep():
@@ -204,11 +205,15 @@ def test_registry_rejects_unknown_sweep():
 
 @pytest.mark.slow
 def test_fast_campaign_every_sweep_emits(tmp_path):
-    """BENCH_FAST-scale smoke: all fourteen sweeps run, each emits >= 1
-    result, every row carries both bandwidth columns, and the run persists."""
+    """BENCH_FAST-scale smoke: every registered sweep runs, each emits
+    >= 1 result (dist_serve needs >= 2 devices and is exempt on fewer),
+    every row carries both bandwidth columns, and the run persists."""
+    import jax
     run = run_sweeps(fast=True, echo=False, out_dir=str(tmp_path))
     assert run.failures == {}
     for name in REGISTRY:
+        if name == "dist_serve" and len(jax.devices()) < 2:
+            continue
         rows = run.by_sweep(name)
         assert rows, f"sweep {name} emitted no results"
     for r in run.results:

@@ -18,6 +18,7 @@ def _run(name, timeout=420):
 
 
 @pytest.mark.parametrize("scenario", [
-    "sharded_train", "elastic_reshard", "dp_compression", "decode_sharded"])
+    "sharded_train", "elastic_reshard", "dp_compression", "decode_sharded",
+    "serve_tp", "serve_tp_spec", "serve_dp_pool"])
 def test_multidevice(scenario):
     _run(scenario)

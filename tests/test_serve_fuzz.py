@@ -223,6 +223,63 @@ def test_fuzz_spec_matches_vanilla_long_drain(stack, variant, mix, seed):
 
 
 # ---------------------------------------------------------------------------
+# sharded (TP) engine == single-device engine (PR 7 tentpole)
+# ---------------------------------------------------------------------------
+#
+# The dist backend shards params and KV page pools over a 2-device TP mesh
+# (shard_map islands around the paged dispatches, logits all-gathered
+# before token selection).  The contract is the same as paged-vs-dense
+# above: whatever the mix, the sharded drain is token-identical to the
+# single-device paged drain — greedy AND sampled, because the per-slot
+# PRNG chains never see the mesh.  Skipped on single-device hosts; the CI
+# tier-1 matrix forces a multi-device host platform.
+
+_DIST_ENGINES = {}
+
+
+def _dist_engines(variant: str):
+    """One (single-device paged, TP=2 paged) pair per sampling variant,
+    sharing params and seed."""
+    from repro.configs import override
+    from repro.dist import ServeMesh
+
+    if variant not in _DIST_ENGINES:
+        # smoke gemma-2b is MQA; TP=2 needs kv-heads divisible by 2
+        cfg = override(smoke_config(ARCHS["gemma-2b"]), num_kv_heads=2)
+        bundle = build(cfg, FLAGS)
+        params = bundle.init(jax.random.PRNGKey(7))
+        sampling = (None if variant == "greedy"
+                    else SamplingParams(temperature=0.9, top_k=11))
+        single = ServeEngine(bundle, params, batch_size=BATCH,
+                             max_len=MAX_LEN, cache_backend="paged",
+                             prefill_chunk=8, sampling=sampling, seed=5)
+        tp = ServeEngine(bundle, params, batch_size=BATCH,
+                         max_len=MAX_LEN, cache_backend="paged",
+                         prefill_chunk=8, sampling=sampling, seed=5,
+                         dist=ServeMesh.tp(2))
+        _DIST_ENGINES[variant] = (cfg, single, tp)
+    return _DIST_ENGINES[variant]
+
+
+@pytest.mark.skipif(len(jax.devices()) < 2,
+                    reason="TP fuzz needs >=2 devices (CI forces a "
+                           "multi-device host platform)")
+@pytest.mark.parametrize("variant", ["greedy", "sampled"])
+@settings(max_examples=3, deadline=None)
+@given(mix=_mix(max_requests=3, max_prompt=12), seed=st.integers(0, 2**16))
+def test_fuzz_sharded_matches_single_device(variant, mix, seed):
+    """Tier-1: TP=2 drains are token-identical to single-device paged
+    drains for arbitrary request mixes, greedy and sampled."""
+    cfg, single, tp = _dist_engines(variant)
+    waves = _materialize(cfg, mix, seed)
+    want = _drive(single, waves)
+    got = _drive(tp, waves)
+    assert got == want, (
+        f"{variant}: TP=2 outputs diverged from single-device for "
+        f"mix {mix}")
+
+
+# ---------------------------------------------------------------------------
 # allocator + prefix-index conservation property (satellite)
 # ---------------------------------------------------------------------------
 

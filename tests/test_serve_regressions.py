@@ -1,0 +1,226 @@
+"""Regression tests for the single-device engine seams (ISSUE 7 satellites).
+
+Three seams, each with the failure it pins down:
+
+1. ``ServeEngine.reset()`` must zero every ``ServeStats`` field — a warm
+   benchmark rerun must not report the previous drain's ``pages_peak`` /
+   ``ring_pages_peak`` (and through them ``live_kv_bytes_peak``).
+2. Speculative rollback over a shared (pinned) prefix: ``truncate`` +
+   ``_release_finished`` in one tick must never decref the pinned prefix
+   below its pin floor.  The allocator now *refuses* to free a pinned page
+   (refcount-underflow guard) instead of silently re-issuing it.
+3. ``PrefixIndex`` staleness: an entry whose page was freed while indexed
+   and re-issued to a new request must (a) MISS on lookup rather than
+   attach the foreign page, and (b) be self-healed by ``evict_unused``
+   rather than decref the new owner's only reference.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, smoke_config
+from repro.models import RuntimeFlags, build
+from repro.serve import (PageAllocator, PrefixIndex, Request, SamplingParams,
+                         ServeEngine, ServeStats, page_hashes)
+
+FLAGS = RuntimeFlags(attn_impl="chunked", attn_bq=16, attn_bkv=16,
+                     moe_impl="dense", loss_chunk=16)
+
+
+@pytest.fixture(scope="module")
+def env():
+    cfg = smoke_config(ARCHS["gemma-2b"])
+    bundle = build(cfg, FLAGS)
+    params = bundle.init(jax.random.PRNGKey(0))
+    draft_params = bundle.init(jax.random.PRNGKey(3))
+    return cfg, bundle, params, draft_params
+
+
+def _prompts(cfg, sizes, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, size=int(n)).astype(np.int32)
+            for n in sizes]
+
+
+# ---------------------------------------------------------------------------
+# satellite 1: reset() zeroes peak stats
+# ---------------------------------------------------------------------------
+
+def test_reset_then_drain_reports_only_the_new_drain(env):
+    """Warm-benchmark shape: drain, reset, drain a *smaller* load — the
+    second drain's peaks (and live_kv_bytes_peak) must reflect only the
+    second drain, not the bigger first one."""
+    cfg, bundle, params, _ = env
+    eng = ServeEngine(bundle, params, batch_size=2, max_len=64,
+                      cache_backend="paged", prefill_chunk=8)
+    for i, p in enumerate(_prompts(cfg, (20, 24, 17, 22))):
+        eng.add_request(Request(rid=i, prompt=p, max_new_tokens=8))
+    eng.run_to_completion()
+    big_peak = eng.stats.pages_peak
+    big_bytes = eng.live_kv_bytes_peak()
+    assert big_peak > 0 and big_bytes > 0
+
+    eng.reset()
+    # EVERY stats field resets — compare against a fresh ServeStats, field
+    # by field, so new counters can't silently opt out of reset()
+    for f in dataclasses.fields(ServeStats):
+        assert getattr(eng.stats, f.name) == getattr(ServeStats(), f.name), \
+            f"ServeStats.{f.name} survived reset()"
+    assert eng.stats.pages_peak == 0 and eng.stats.ring_pages_peak == 0
+    # with no pages ever allocated, peak live bytes is the always-resident
+    # recurrent state only (zero for this pure-attention stack)
+    assert eng.live_kv_bytes_peak() == eng._recurrent_state_bytes()
+
+    eng.add_request(Request(rid=100, prompt=_prompts(cfg, (4,), seed=1)[0],
+                            max_new_tokens=2))
+    eng.run_to_completion()
+    assert 0 < eng.stats.pages_peak < big_peak
+    assert 0 < eng.live_kv_bytes_peak() < big_bytes
+
+
+# ---------------------------------------------------------------------------
+# satellite 2: spec rollback over pinned shared prefixes
+# ---------------------------------------------------------------------------
+
+def _alloc_invariants(eng):
+    a = eng.alloc
+    assert len(a.free) + len(a.ref) == a.num_pages - a.reserved, \
+        "page conservation broken"
+    assert a.free == sorted(set(a.free)), "free list dup/unsorted"
+    assert all(r >= 1 for r in a.ref.values())
+    for pid in a.pinned:
+        assert pid in a.ref and pid not in a.free, \
+            f"pinned page {pid} freed while pinned"
+    if eng.prefix is not None:
+        for h, pid in eng.prefix._by_hash.items():
+            assert pid in a.pinned, f"indexed page {pid} lost its pin"
+
+
+@pytest.mark.parametrize("variant", ["greedy", "sampled"])
+def test_spec_rollback_shared_prefix_rejected_suffix(env, variant):
+    """Shared-prefix + rejected-suffix drain: every spec tick runs
+    ``truncate`` (suffix rollback) and finished slots run
+    ``_release_finished`` in the same tick, over prefix pages the index
+    pins.  Streams must equal vanilla and no pinned page may underflow
+    (the allocator raises if one does)."""
+    cfg, bundle, params, draft_params = env
+    sampling = (None if variant == "greedy"
+                else SamplingParams(temperature=0.9, top_k=11))
+    rng = np.random.default_rng(7)
+    common = rng.integers(0, cfg.vocab_size, size=18).astype(np.int32)
+    reqs = []
+    for i in range(6):
+        tail = rng.integers(0, cfg.vocab_size,
+                            size=int(rng.integers(3, 9))).astype(np.int32)
+        prompt = (np.concatenate([common, tail]) if i % 2 == 0
+                  else np.concatenate([tail, tail, tail]))
+        reqs.append((prompt, 10))
+
+    def drain(**extra):
+        eng = ServeEngine(bundle, params, batch_size=2, max_len=64,
+                          cache_backend="paged", prefill_chunk=8,
+                          sampling=sampling, seed=0, **extra)
+        rs = [Request(rid=i, prompt=p, max_new_tokens=m)
+              for i, (p, m) in enumerate(reqs)]
+        for r in rs:
+            eng.add_request(r)
+        eng.run_to_completion()
+        return [r.out_tokens for r in rs], eng
+
+    want, _ = drain()
+    # tiny pool: rollback/release churn under pool pressure + eviction
+    got, spec = drain(draft_bundle=bundle, draft_params=draft_params,
+                      spec_k=3, num_pages=12)
+    assert got == want, "speculative drain diverged from vanilla"
+    assert spec.stats.spec_steps > 0
+    _alloc_invariants(spec)
+    # after the drain only the pinned prefix pages remain live
+    assert spec.alloc.pages_in_use == len(spec.alloc.pinned)
+    assert len(spec.prefix._by_hash) == len(spec.alloc.pinned)
+
+
+# ---------------------------------------------------------------------------
+# satellite 3: stale prefix-index entries after evict/reuse
+# ---------------------------------------------------------------------------
+
+def _stale_entry(n_pages=6, page=4):
+    """Build the stale-entry state: a page registered in the index, freed
+    (pin discipline slipped: registered without pin), then re-issued to a
+    NEW request by the lowest-id-first free list."""
+    a = PageAllocator(n_pages, page, reserved=1)
+    idx = PrefixIndex()
+    prompt = np.arange(2 * page, dtype=np.int64)
+    hashes = page_hashes(prompt, page)
+    a.alloc(1)
+    a.reserve(1, 2 * page)
+    pid = a.tables[1][0]
+    idx.register(hashes[0], pid)    # indexed but NOT pinned
+    a.release(1)                    # page freed while still indexed
+    a.alloc(2)
+    a.reserve(2, page)              # lowest-first reuse: same id, new owner
+    assert a.tables[2][0] == pid
+    return a, idx, hashes, pid
+
+
+def test_lookup_after_evict_reuse_misses_not_foreign_page():
+    a, idx, hashes, pid = _stale_entry()
+    # the re-issued page holds request 2's KV rows — attaching it to a new
+    # request via the stale hash would serve foreign context
+    assert idx.lookup(hashes[:1], alloc=a) == []
+    assert hashes[0] not in idx._by_hash  # stale entry self-healed
+    assert a.ref[pid] == 1                # new owner's ref untouched
+
+
+def test_evict_unused_self_heals_stale_entries():
+    a, idx, hashes, pid = _stale_entry()
+    freed = idx.evict_unused(a)
+    # the stale entry is dropped WITHOUT decrefing the new owner (ref==1
+    # here is request 2's only reference, not the index's)
+    assert freed == 0
+    assert len(idx) == 0
+    assert a.ref[pid] == 1 and pid not in a.free
+    a.release(2)                          # still releasable exactly once
+
+
+def test_evict_unused_drops_entries_for_freed_pages():
+    a = PageAllocator(6, 4, reserved=1)
+    idx = PrefixIndex()
+    a.alloc(1)
+    a.reserve(1, 4)
+    pid = a.tables[1][0]
+    idx.register("h", pid)
+    a.release(1)                          # freed, never re-issued
+    assert idx.evict_unused(a) == 0       # heals: no unpin of a free page
+    assert len(idx) == 0
+    assert idx.lookup(["h"], alloc=a) == []
+
+
+def test_unpin_refuses_without_a_pin():
+    a, idx, hashes, pid = _stale_entry()
+    with pytest.raises(KeyError):
+        a.unpin(pid)                      # would decref the new owner
+    a.alloc(3)
+    a.reserve(3, 4)
+    a.pin(a.tables[3][0])
+    a.unpin(a.tables[3][0])               # matched pin/unpin is fine
+    with pytest.raises(KeyError):
+        a.unpin(a.tables[3][0])           # double unpin is not
+
+
+def test_pinned_page_refcount_underflow_is_refused():
+    """The sat-2 guard at its root: a buggy rollback/release path that
+    drives a pinned page's refcount to zero must raise, not return the
+    page (still indexed!) to the free list."""
+    a = PageAllocator(6, 4, reserved=1)
+    a.alloc(1)
+    a.reserve(1, 4)
+    pid = a.tables[1][0]
+    a.pin(pid)
+    a.release(1)                          # ref: pin only (floor)
+    a.ref[pid] -= 1                       # simulate the underflow bug
+    with pytest.raises(RuntimeError):
+        a._free_page(pid)
+    with pytest.raises(ValueError):
+        a.pin(pid)                        # double pin is API misuse too

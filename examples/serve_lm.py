@@ -13,9 +13,17 @@ temperature 0 is exact greedy), and ``--draft self`` (or an arch name)
 switches the paged fast path to speculative draft->verify dispatches —
 the accept rate prints alongside throughput.
 
+``--priority mixed`` tags alternating requests low/high — the scheduler
+admits high first and preempts low under pool pressure — and
+``--num-pages N`` undersizes the pool to force it; preemption, host-tier
+swap, and resume counters print per engine (the drains stay bitwise
+identical to the unpreempted run).
+
     PYTHONPATH=src python examples/serve_lm.py [--requests N] [--batch B]
                                                [--cache {auto,dense,paged}]
                                                [--temperature T] [--draft self]
+                                               [--priority mixed]
+                                               [--num-pages N]
 """
 import argparse
 import os
@@ -32,6 +40,10 @@ from repro.models import RuntimeFlags, build
 from repro.serve import Request, SamplingParams, ServeEngine
 
 
+_PRIORITY_MIX = {"off": lambda i: 0, "low": lambda i: 0,
+                 "high": lambda i: 1, "mixed": lambda i: i % 2}
+
+
 def _enqueue(eng, args):
     rng = np.random.default_rng(0)
     common = rng.integers(0, eng.bundle.cfg.vocab_size,
@@ -43,7 +55,8 @@ def _enqueue(eng, args):
         # serves those tokens from read-only pages
         prompt = np.concatenate([common, tail]) if i % 2 == 0 else tail
         eng.add_request(Request(rid=i, prompt=prompt,
-                                max_new_tokens=args.max_new))
+                                max_new_tokens=args.max_new,
+                                priority=_PRIORITY_MIX[args.priority](i)))
 
 
 def _drive(bundle, params, args, *, window, bucket, label, backend=None,
@@ -86,6 +99,16 @@ def _drive(bundle, params, args, *, window, bucket, label, backend=None,
         pages = " (dense: committed upfront)"
     print(f"  {'':10s} KV HBM: {eng.kv_bytes()/1024:.0f} KiB allocated, "
           f"{eng.live_kv_bytes_peak()/1024:.0f} KiB live-token peak" + pages)
+    if args.priority != "off" or stats.preemptions:
+        resumes = (f"{stats.swap_ins} swap + {stats.recompute_resumes} "
+                   f"recompute resumes")
+        if stats.swap_fallbacks:
+            resumes += f" ({stats.swap_fallbacks} swap fallbacks)"
+        print(f"  {'':10s} scheduler: {stats.preemptions} preemptions "
+              f"({stats.preempt_restarts} mid-prefill restarts), "
+              f"{stats.swap_outs} swap-outs "
+              f"({stats.swap_bytes/1024:.0f} KiB through the host tier), "
+              f"{resumes}, {stats.pool_stalls} pool stalls")
     return stats.tokens_out / dt, eng
 
 
@@ -115,6 +138,18 @@ def main():
     ap.add_argument("--seed", type=int, default=0,
                     help="PRNG seed; per-request streams are "
                          "fold_in(PRNGKey(seed), rid)")
+    ap.add_argument("--priority", default="off",
+                    choices=sorted(_PRIORITY_MIX),
+                    help="scheduler priority classes for the request mix: "
+                         "'mixed' alternates low/high (high admits first "
+                         "and preempts low under pool pressure), "
+                         "'low'/'high' pin one class; preemption/swap "
+                         "counters print per engine")
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="undersize the paged pool to watch preemption: "
+                         "victims' pages are evicted and the request "
+                         "resumes via host-tier swap or prefix-cache "
+                         "recompute (cost model picks per victim)")
     ap.add_argument("--draft", default=None, metavar="ARCH",
                     help="speculative decoding draft model: 'self' "
                          "(same params — every proposal accepted) or an "
@@ -150,9 +185,11 @@ def main():
           + ") ===")
     base, _ = _drive(bundle, params, args, window=1, bucket=False,
                      label="default", backend="dense")
+    pool_kw = {} if args.num_pages is None else {"num_pages": args.num_pages}
     fast, eng = _drive(bundle, params, args, window=args.window,
                        bucket=None,    # auto: on for full-attention stacks
-                       label="fastpath", backend=backend, **spec_kw)
+                       label="fastpath", backend=backend, **spec_kw,
+                       **pool_kw)
     print(f"  speedup    {fast / base:8.2f}x  "
           f"(decode_many window={args.window} + prompt bucketing"
           + (" + paged KV pool" if eng.backend == "paged" else "")

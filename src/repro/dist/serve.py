@@ -119,3 +119,19 @@ class ServeMesh:
 
     def shard_paged_cache(self, cache):
         return jax.device_put(cache, self.paged_cache_shardings(cache))
+
+    # ------------------------------------------------------------------
+    def page_swap_shardings(self, cache):
+        """Shardings governing the host-tier page swap on this mesh.
+
+        Swap-out gathers whole pages along the *page* axis while the pools
+        shard on *kv-heads*, so the gather's output keeps the same
+        head-stripe layout as the resident pools — each shard moves only
+        its own stripe, and the engine's ``device_get`` assembles full
+        pages host-side.  Swap-in is the transpose: the scatter's output
+        is pinned to these shardings (``jit(..., out_shardings=...)``) so
+        streaming host bytes back can never silently replicate a pool
+        across the mesh.  This per-shard gather/scatter pair is the page
+        transfer primitive disaggregated prefill/decode will reuse to move
+        KV between meshes."""
+        return self.paged_cache_shardings(cache)

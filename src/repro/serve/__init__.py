@@ -1,5 +1,9 @@
+from repro.serve.chaos import ChaosConfig, ChaosEngine  # noqa: F401
 from repro.serve.engine import Request, ServeEngine, ServeStats  # noqa: F401
+from repro.serve.hosttier import HostKVTier  # noqa: F401
 from repro.serve.kvcache import (PageAllocator, PagedKVCache,  # noqa: F401
                                  PoolExhausted, PrefixIndex, page_hashes)
 from repro.serve.sampling import (GREEDY, SamplingParams,  # noqa: F401
                                   mask_logits, sample_token, sample_tokens)
+from repro.serve.scheduler import (PRIORITY_HIGH, PRIORITY_LOW,  # noqa: F401
+                                   Scheduler, SchedulerConfig, SwapCostModel)

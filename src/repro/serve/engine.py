@@ -62,10 +62,12 @@ import numpy as np
 from repro.configs.base import ATTN
 from repro.core.memmodel import next_pow2
 from repro.models.registry import ModelBundle
+from repro.serve.hosttier import HostKVTier, page_axis
 from repro.serve.kvcache import (PageAllocator, PoolExhausted, PrefixIndex,
                                  page_hashes)
 from repro.serve.sampling import (GREEDY, SamplingParams, sample_token,
                                   sample_tokens, split_keys, subkey_chain)
+from repro.serve.scheduler import Scheduler, SwapCostModel, VictimInfo
 
 
 @dataclass
@@ -73,11 +75,27 @@ class Request:
     rid: int
     prompt: np.ndarray               # (S,) int32
     max_new_tokens: int = 16
+    priority: int = 0                # scheduler class: higher admits first
     out_tokens: List[int] = field(default_factory=list)
 
     @property
     def done(self) -> bool:
         return len(self.out_tokens) >= self.max_new_tokens
+
+
+@dataclass
+class _Resume:
+    """What a preempted request needs to pick up exactly where it left
+    off.  ``ctx`` is the KV context (``prompt ++ out_tokens[:-1]``) whose
+    rows the resume must restore — by re-prefilling it (``recompute``,
+    prefix cache serving the surviving prompt pages) or by streaming the
+    swapped pages back (``swap``; the page data lives in the host tier).
+    ``pending`` is ``out_tokens[-1]``: the already-emitted token the next
+    decode tick feeds, so resume must NOT re-seed from prefill logits."""
+
+    kind: str                        # "swap" | "recompute"
+    ctx: np.ndarray                  # (hpos,) int32
+    pending: int
 
 
 @dataclass
@@ -98,6 +116,15 @@ class ServeStats:
     spec_steps: int = 0              # draft->verify dispatches
     draft_tokens: int = 0            # draft tokens proposed to the verifier
     draft_accepted: int = 0          # proposals matching the coupled sample
+    # -- scheduler / preemption ---------------------------------------------
+    preemptions: int = 0             # mid-flight evictions (all modes)
+    preempt_restarts: int = 0        # mid-prefill victims requeued from scratch
+    swap_outs: int = 0               # victims whose pages moved to the host tier
+    swap_ins: int = 0                # resumes streamed back through the table
+    swap_bytes: int = 0              # bytes moved across the host tier, both ways
+    recompute_resumes: int = 0       # resumes that re-prefilled their context
+    swap_fallbacks: int = 0          # checksum-failed swaps recovered by recompute
+    prefill_burst_max: int = 0       # max prefill chunks between decode windows
 
     @property
     def accept_rate(self) -> float:
@@ -174,7 +201,9 @@ class ServeEngine:
                  draft_bundle: Optional[ModelBundle] = None,
                  draft_params=None,
                  spec_k: int = 4,
-                 dist=None):
+                 dist=None,
+                 scheduler: Optional[Scheduler] = None,
+                 host_tier: Optional[HostKVTier] = None):
         self.bundle = bundle
         self.params = params
         self.bsz = batch_size
@@ -291,8 +320,30 @@ class ServeEngine:
                 static_argnums=(0,), donate_argnums=(2,))
         if draft_bundle is not None:
             self._init_spec(draft_bundle)
+        # -- scheduler: priority admission + mid-flight preemption ---------
+        # swap-resume needs whole-page state capture, which only pure
+        # full-attention stacks offer (ring rotation and recurrent state
+        # are not in the full pool); everything else resumes by recompute.
+        self.sched = scheduler or Scheduler()
+        self._swappable = (self.backend == "paged" and self.has_full
+                           and self.attn_window is None
+                           and not self.has_recurrent)
+        self.host_tier: Optional[HostKVTier] = None
+        if self._swappable and self.sched.config.swap:
+            self.host_tier = host_tier or HostKVTier()
         self._seen_prefill_shapes = set()
         self._init_state()
+        if self.host_tier is not None:
+            self._gather_pages = jax.jit(_gather_pages_impl)
+            # pin the scatter's output sharding under TP so a swap-in
+            # cannot silently replicate the pools
+            if self.dist is None:
+                self._scatter_pages = jax.jit(_scatter_pages_impl,
+                                              donate_argnums=(0,))
+            else:
+                self._scatter_pages = jax.jit(
+                    _scatter_pages_impl, donate_argnums=(0,),
+                    out_shardings=self.dist.page_swap_shardings(self.cache))
 
     def _init_spec(self, draft: ModelBundle) -> None:
         """Validate + compile the speculative draft->verify dispatch."""
@@ -353,6 +404,15 @@ class ServeEngine:
         self.slots: List[Optional[Request]] = [None] * self.bsz
         self.queue: List[Request] = []
         self.stats = ServeStats()
+        # scheduler state: resume records for preempted requests, arrival
+        # sequence (priority ties admit FIFO), and the chunks-since-decode
+        # counter behind stats.prefill_burst_max
+        self._resume: Dict[int, _Resume] = {}
+        self._arrival: Dict[int, int] = {}
+        self._arrival_seq = 0
+        self._chunks_since_decode = 0
+        if self.host_tier is not None:
+            self.host_tier.clear()
         if self.backend == "paged":
             self.alloc = (PageAllocator(self.num_pages, self.page, reserved=1)
                           if self.has_full else None)
@@ -380,10 +440,14 @@ class ServeEngine:
             self.cache = self.bundle.init_cache(self.bsz, self.max_len)
 
     def reset(self) -> None:
-        """Clear all serving state (cache, pool, slots, queue, stats) but
-        KEEP the compiled prefill/decode callables and their trace caches —
-        benchmark drivers drain once to warm the jit caches, reset, then
-        time a steady-state drain."""
+        """Clear all serving state (cache, pool, slots, queue, stats —
+        including the speculative accept-rate counters and the per-slot
+        PRNG keys, both rebuilt from scratch in ``_init_state`` — plus
+        resume records and the host swap tier) but KEEP the compiled
+        prefill/decode callables and their trace caches — benchmark
+        drivers drain once to warm the jit caches, reset, then time a
+        steady-state drain.  A warm drain after a preempted one therefore
+        starts with zeroed accept-rate stats and virgin key state."""
         self._init_state()
         # _seen_prefill_shapes survives: those shapes remain compiled, so a
         # post-reset drain reports only genuinely new compiles
@@ -475,6 +539,9 @@ class ServeEngine:
 
     # ------------------------------------------------------------------
     def add_request(self, req: Request):
+        if req.rid not in self._arrival:
+            self._arrival[req.rid] = self._arrival_seq
+            self._arrival_seq += 1
         self.queue.append(req)
 
     def _free_slot(self) -> Optional[int]:
@@ -505,6 +572,208 @@ class ServeEngine:
         self.keys = self.keys.at[slot].set(nk)
         return tok
 
+    def _replay_key(self, slot: int, req: Request) -> None:
+        """Restore the slot's PRNG chain after a resume: re-derive the
+        admission key from ``(seed, rid)`` and advance it one split per
+        token the request has already emitted — the carried key is then
+        bitwise the one an unpreempted run would hold, so the continued
+        stream (sampled or speculative) cannot diverge."""
+        if self.sampling.greedy:
+            return  # greedy consumes zero PRNG state
+        n = len(req.out_tokens)
+        base = jax.random.fold_in(self._base_key, req.rid)
+        if n:
+            _, carried = subkey_chain(base[None], n)
+            base = carried[0, n]
+        self.keys = self.keys.at[slot].set(base)
+
+    # ------------------------------------------------------------------
+    # preemption: victim choice, page swap, resume
+    # ------------------------------------------------------------------
+    def _cost_model(self) -> SwapCostModel:
+        """The scheduler's swap-vs-recompute pricer, lazily derived from
+        this engine's own geometry when the caller didn't inject a
+        calibrated one: weight bytes (each prefill chunk re-streams them)
+        and KV bytes per token (what a swap moves per context row)."""
+        if self.sched.cost_model is None:
+            wb = sum(x.size * x.dtype.itemsize
+                     for x in jax.tree_util.tree_leaves(self.params))
+            if self.backend == "paged":
+                kv_tok = self.bytes_per_page / self.page
+                chunk = self.prefill_chunk
+            else:
+                kv_tok = self.kv_bytes() / (self.bsz * self.max_len)
+                chunk = self.max_len  # dense prefill is one dispatch
+            self.sched.cost_model = SwapCostModel(
+                weight_bytes=wb, kv_bytes_per_token=kv_tok,
+                prefill_chunk=chunk,
+                host_link_bw=self.sched.config.host_link_bw)
+        return self.sched.cost_model
+
+    def _swap_ok(self) -> bool:
+        return self.host_tier is not None
+
+    def _victims(self, exclude=()) -> List[VictimInfo]:
+        """Preemption candidacies of every active slot, as the scheduler's
+        policy sees them.  Mid-prefill slots count the tokens already
+        chunked in as their recompute cost (a restart redoes them)."""
+        cands = []
+        for i, req in enumerate(self.slots):
+            if req is None or i in exclude or req.done:
+                continue
+            pages = 0
+            if self.backend == "paged":
+                for a in (self.alloc, self.ralloc):
+                    if a is not None:
+                        pages += len(a.tables.get(req.rid, ()))
+                ctx = (self._pending[i] if i in self._pending
+                       else int(self._hpos[i]))
+            else:
+                ctx = int(self._hpos[i])
+            cands.append(VictimInfo(slot=i, rid=req.rid, priority=req.priority,
+                                    ctx_tokens=ctx, pages=pages))
+        return cands
+
+    def _pick_victim(self, below: Optional[int] = None) -> Optional[int]:
+        v = self.sched.pick_victim(self._victims(), below=below,
+                                   swappable=self._swap_ok())
+        if v is None:
+            return None
+        self._cost_model()  # materialize before preempt() prices the resume
+        return v.slot
+
+    def preempt(self, slot: int, mode: Optional[str] = None) -> str:
+        """Evict the request in ``slot`` mid-flight and requeue it.
+
+        Returns the eviction mode used: ``"restart"`` (mid-prefill — the
+        partial pages are dropped and the prompt re-admits from scratch,
+        minus whatever the prefix cache retained), ``"recompute"`` (the
+        resume re-prefills ``prompt ++ emitted[:-1]``), or ``"swap"`` (the
+        pages moved to the host tier and stream back on resume).  ``mode``
+        forces the choice; default defers to the scheduler's cost model.
+        Either way the resumed request drains token-identically to an
+        unpreempted run: KV rows are restored exactly (swap) or recomputed
+        row-for-row (chunked prefill is position-wise), the pending token
+        is re-fed rather than re-sampled, and the PRNG chain is replayed
+        to the carried key."""
+        req = self.slots[slot]
+        if req is None:
+            raise ValueError(f"preempt of empty slot {slot}")
+        self.stats.preemptions += 1
+        if self.backend == "paged" and slot in self._pending:
+            # prompt still building: nothing emitted, no resume state —
+            # drop the partial pages and let admission redo the prompt
+            del self._pending[slot]
+            self._hashes.pop(req.rid, None)
+            if self.alloc is not None:
+                self.alloc.release(req.rid)
+            if self.ralloc is not None:
+                self.ralloc.release(req.rid)
+            self.slots[slot] = None
+            self._htable[slot, :] = 0
+            self._hrtable[slot, :] = 0
+            self._table_dirty = True
+            self.stats.preempt_restarts += 1
+            self.queue.append(req)
+            return "restart"
+        hpos = int(self._hpos[slot])
+        ctx = np.concatenate(
+            [np.asarray(req.prompt, np.int32),
+             np.asarray(req.out_tokens[:-1], np.int32)])
+        assert len(ctx) == hpos, "context/KV length drift"
+        if mode is None:
+            mode = self._cost_model().choose(hpos, self._swap_ok())
+        elif mode == "swap" and not self._swap_ok():
+            mode = "recompute"
+        if mode == "swap":
+            # capture exactly the live rows: drop window-reservation pages
+            # past hpos first, then gather the table (shared prefix pages
+            # are read-only — gathering them is safe, and resume owns
+            # private copies)
+            self.alloc.truncate(req.rid, hpos)
+            pids = list(self.alloc.tables[req.rid])
+            data = self._gather_to_host(pids)
+            entry = self.host_tier.put(req.rid, data, len(pids), length=hpos)
+            self.stats.swap_outs += 1
+            self.stats.swap_bytes += entry.nbytes
+        self._resume[req.rid] = _Resume(mode, ctx, int(req.out_tokens[-1]))
+        if self.backend == "paged":
+            if self.alloc is not None:
+                self.alloc.release(req.rid)
+            if self.ralloc is not None:
+                self.ralloc.release(req.rid)
+            self._hashes.pop(req.rid, None)
+            self._htable[slot, :] = 0
+            self._hrtable[slot, :] = 0
+            self._table_dirty = True
+        self.slots[slot] = None
+        self.queue.append(req)
+        return mode
+
+    def _gather_to_host(self, pids: List[int]):
+        """Device->host page gather: one fused take over every pool leaf
+        (k/v pages + int8 scale lanes), page list padded to a power of two
+        with null-page ids (bounded trace count; the null page's junk is
+        outside the checksummed span).  Under TP each shard gathers its
+        own kv-heads stripe and ``device_get`` assembles the full pages on
+        host — the per-shard half of the disaggregation primitive."""
+        m = next_pow2(max(1, len(pids)))
+        idx = jnp.asarray(list(pids) + [0] * (m - len(pids)), jnp.int32)
+        return jax.device_get(self._gather_pages(self.cache, self._dev(idx)))
+
+    def _swap_in_slot(self, slot: int, req: Request, res: _Resume) -> bool:
+        """Stream a swapped-out request's pages back through the page
+        table: reserve fresh pages (ids may differ — the table indirection
+        is what makes that free), scatter the host bytes, republish the
+        row, and restore pos/pending-token/PRNG state.  False when the
+        checksum no longer matches: the entry is dropped and the caller
+        degrades to recompute-resume (chaos-injected corruption lands
+        here)."""
+        entry, ok = self.host_tier.get(req.rid)
+        if not ok:
+            self.host_tier.pop(req.rid)
+            self.stats.swap_fallbacks += 1
+            res.kind = "recompute"
+            return False
+        s = len(res.ctx)
+        self.alloc.alloc(req.rid)
+        try:
+            try:
+                self.alloc.reserve(req.rid, s)
+            except PoolExhausted:
+                if (self.prefix is None
+                        or not self.prefix.evict_unused(self.alloc)):
+                    raise
+                self.alloc.reserve(req.rid, s)
+        except PoolExhausted:
+            self.alloc.release(req.rid)
+            raise
+        pids = self.alloc.tables[req.rid]
+        assert len(pids) == entry.n_pages, "swap-in page count drift"
+        m = next_pow2(max(1, len(pids)))
+        idx = jnp.asarray(list(pids) + [0] * (m - len(pids)), jnp.int32)
+        self.cache = self._scatter_pages(self.cache, self._dev(idx),
+                                         entry.data)
+        self.host_tier.pop(req.rid)
+        self._resume.pop(req.rid)
+        self.slots[slot] = req
+        self._htable[slot, :] = 0
+        self._htable[slot, :len(pids)] = pids
+        self._table_dirty = True
+        self.pos = self.pos.at[slot].set(s)
+        self._hpos[slot] = s
+        self._replay_key(slot, req)
+        self.tokens = self.tokens.at[slot, 0].set(res.pending)
+        if self.draft is not None:
+            # the draft's dense cache was not swapped (it is derived state:
+            # a prefill over the context rebuilds it, and coupled sampling
+            # means draft differences can never change emitted tokens)
+            self._draft_prefill_slot(slot, req, tokens=res.ctx)
+        self.stats.swap_ins += 1
+        self.stats.swap_bytes += entry.nbytes
+        self._track_peaks()
+        return True
+
     @staticmethod
     def _scatter_slot_cache(cache, cache1, slot: int):
         """Scatter a single-request prefill cache into the batch cache at
@@ -531,12 +800,16 @@ class ServeEngine:
     # ------------------------------------------------------------------
     def _prefill_into_slot(self, slot: int, req: Request):
         """Prefill a single request, then scatter its cache into the batch
-        cache at ``slot``."""
-        s = int(req.prompt.shape[0])
+        cache at ``slot``.  A preempted request resumes here by
+        re-prefilling its recorded context (prompt + emitted tokens) and
+        re-feeding — not re-sampling — its pending token."""
+        res = self._resume.get(req.rid)
+        prompt = req.prompt if res is None else res.ctx
+        s = int(prompt.shape[0])
         if self.bucket_prompts:
             bucket = min(next_pow2(max(8, s)), self.max_len)
             padded = np.zeros((1, bucket), np.int32)
-            padded[0, :s] = req.prompt
+            padded[0, :s] = prompt
             if bucket not in self._seen_prefill_shapes:
                 self._seen_prefill_shapes.add(bucket)
                 self.stats.prefill_retraces += 1
@@ -547,19 +820,25 @@ class ServeEngine:
                 self._seen_prefill_shapes.add(s)
                 self.stats.prefill_retraces += 1
             cache1, last_logits = self.bundle.prefill(
-                self.params, dict(tokens=req.prompt[None, :]))
+                self.params, dict(tokens=prompt[None, :]))
 
         self.cache = self._scatter_slot_cache(self.cache, cache1, slot)
         self.slots[slot] = req
         self.pos = self.pos.at[slot].set(s)
         self._hpos[slot] = s
-        self._assign_key(slot, req)
-        tok0 = self._seed_token(slot, np.asarray(last_logits)[0])
+        if res is None:
+            self._assign_key(slot, req)
+            tok0 = self._seed_token(slot, np.asarray(last_logits)[0])
+            req.out_tokens.append(tok0)
+            self.stats.prompt_tokens += s
+            self.stats.tokens_out += 1
+        else:
+            self._resume.pop(req.rid)
+            self._replay_key(slot, req)
+            tok0 = int(res.pending)
+            self.stats.recompute_resumes += 1
         self.tokens = self.tokens.at[slot, 0].set(tok0)
-        req.out_tokens.append(tok0)
         self.stats.prefills += 1
-        self.stats.prompt_tokens += s
-        self.stats.tokens_out += 1
 
     # ------------------------------------------------------------------
     # paged admission + chunked prefill
@@ -576,8 +855,19 @@ class ServeEngine:
         """Attach the cached prompt prefix (shared read-only pages), then
         reserve pages for the whole prompt on every pool the stack uses
         (full table + windowed ring) — all-or-nothing, so admission either
-        sticks or backs off cleanly (:class:`PoolExhausted`)."""
-        s = int(req.prompt.shape[0])
+        sticks or backs off cleanly (:class:`PoolExhausted`).
+
+        Preempted requests re-enter here: swap-resumes stream their pages
+        back (falling back to recompute if the host copy fails its
+        checksum), recompute-resumes ride the normal chunked-prefill path
+        over their recorded context — the original prompt pages typically
+        hit the prefix cache, so only the generated tail recomputes."""
+        res = self._resume.get(req.rid)
+        if res is not None and res.kind == "swap" \
+                and self._swap_in_slot(slot, req, res):
+            return
+        prompt = req.prompt if res is None else res.ctx
+        s = int(prompt.shape[0])
         if s > self.max_len:
             raise ValueError(f"prompt ({s}) exceeds max_len ({self.max_len})")
         if self.alloc is not None:
@@ -600,7 +890,7 @@ class ServeEngine:
         if self.alloc is not None:
             self.alloc.alloc(req.rid)
             if self.prefix is not None:
-                hashes = page_hashes(req.prompt, self.page)
+                hashes = page_hashes(prompt, self.page)
                 # cap at (s-1) tokens: the last token must be computed so
                 # the final chunk yields the logits that seed decoding
                 usable = (s - 1) // self.page
@@ -632,8 +922,9 @@ class ServeEngine:
         self.slots[slot] = req
         self._pending[slot] = hit_len
         self._hpos[slot] = 0  # no stale position while the prompt builds
-        self.stats.prompt_tokens += s
-        self.stats.prefix_hit_tokens += hit_len
+        if res is None:  # a resume's context was already counted admitted
+            self.stats.prompt_tokens += s
+            self.stats.prefix_hit_tokens += hit_len
         self._track_peaks()
         # the batch table row stays null until prefill completes: masked
         # decode ticks must not write through a half-built row
@@ -643,7 +934,9 @@ class ServeEngine:
         run_to_completion interleaves these with decode windows, so a long
         prompt admits without stalling in-flight decodes."""
         req = self.slots[slot]
-        s = int(req.prompt.shape[0])
+        res = self._resume.get(req.rid)
+        prompt = req.prompt if res is None else res.ctx
+        s = int(prompt.shape[0])
         off = self._pending[slot]
         c = min(self.prefill_chunk, s - off)
         cb = (min(next_pow2(max(8, c)), self.prefill_chunk)
@@ -652,7 +945,7 @@ class ServeEngine:
             self._seen_prefill_shapes.add(("chunk", cb))
             self.stats.prefill_retraces += 1
         chunk = np.zeros((1, cb), np.int32)
-        chunk[0, :c] = req.prompt[off:off + c]
+        chunk[0, :c] = prompt[off:off + c]
         row = self.alloc.tables[req.rid] if self.alloc is not None else []
         trow = np.zeros((1, max(1, self.pages_per_seq)), np.int32)
         trow[0, :len(row)] = row
@@ -666,6 +959,7 @@ class ServeEngine:
             dict(full=jnp.asarray(trow), ring=jnp.asarray(rrow)),
             jnp.asarray([c], jnp.int32), jnp.int32(slot))
         self.stats.prefill_chunks += 1
+        self._chunks_since_decode += 1
         off += c
         if off < s:
             self._pending[slot] = off
@@ -686,27 +980,42 @@ class ServeEngine:
         self._table_dirty = True
         self.pos = self.pos.at[slot].set(s)
         self._hpos[slot] = s
-        self._assign_key(slot, req)
-        tok0 = self._seed_token(slot, np.asarray(logits)[0])
+        if res is None:
+            self._assign_key(slot, req)
+            tok0 = self._seed_token(slot, np.asarray(logits)[0])
+            req.out_tokens.append(tok0)
+            self.stats.tokens_out += 1
+        else:
+            # recompute-resume: the context's last logits re-derive a token
+            # that was already emitted — re-feed it, never re-sample, and
+            # fast-forward the PRNG chain to where the preempted run stood
+            self._resume.pop(req.rid)
+            self._replay_key(slot, req)
+            tok0 = int(res.pending)
+            self.stats.recompute_resumes += 1
         self.tokens = self.tokens.at[slot, 0].set(tok0)
-        req.out_tokens.append(tok0)
         if self.draft is not None:
-            self._draft_prefill_slot(slot, req)
+            self._draft_prefill_slot(slot, req,
+                                     tokens=None if res is None else res.ctx)
         self.stats.prefills += 1
-        self.stats.tokens_out += 1
 
-    def _draft_prefill_slot(self, slot: int, req: Request) -> None:
-        """Build the draft model's dense cache for a freshly admitted slot.
+    def _draft_prefill_slot(self, slot: int, req: Request,
+                            tokens: Optional[np.ndarray] = None) -> None:
+        """Build the draft model's dense cache for a freshly admitted slot
+        (or, with ``tokens``, rebuild it over a resumed request's context —
+        the draft cache is derived state, and coupled-sample verification
+        means a rebuilt draft can only change throughput, never output).
         The draft is pure full attention (validated in ``_init_spec``), so
         the prompt buckets to a pow2 length and the padded tail is masked by
         ``valid_len`` — one trace per bucket, like the target's prefill."""
-        s = int(req.prompt.shape[0])
+        toks = req.prompt if tokens is None else tokens
+        s = int(toks.shape[0])
         bucket = min(next_pow2(max(8, s)), self.max_len)
         if ("draft", bucket) not in self._seen_prefill_shapes:
             self._seen_prefill_shapes.add(("draft", bucket))
             self.stats.prefill_retraces += 1
         padded = np.zeros((1, bucket), np.int32)
-        padded[0, :s] = req.prompt
+        padded[0, :s] = toks
         dcache1, _ = self._draft_prefill(
             self.draft_params, jnp.asarray(padded), jnp.int32(s))
         self.draft_cache = self._scatter_slot_cache(
@@ -714,22 +1023,38 @@ class ServeEngine:
 
     def _admit(self) -> None:
         while self.queue:
+            if len(self.queue) > 1:
+                self.sched.order_queue(self.queue, self._arrival)
+            req = self.queue[0]
             slot = self._free_slot()
             if slot is None:
-                break
+                # no slot: a strictly-lower-priority victim yields its seat
+                # (uniform priorities — the default — never preempt here)
+                victim = self._pick_victim(below=req.priority)
+                if victim is None:
+                    break
+                self.preempt(victim)
+                continue
             if self.backend == "paged":
                 try:
-                    self._paged_admit_slot(slot, self.queue[0])
+                    self._paged_admit_slot(slot, req)
                 except PoolExhausted:
-                    # backpressure: the request stays queued; pages free as
-                    # in-flight requests finish
-                    self.stats.pool_stalls += 1
-                    break
+                    victim = self._pick_victim(below=req.priority)
+                    if victim is None:
+                        # backpressure: the request stays queued; pages
+                        # free as in-flight requests finish
+                        self.stats.pool_stalls += 1
+                        break
+                    self.preempt(victim)
+                    continue
                 self.queue.pop(0)
             else:
-                self._prefill_into_slot(slot, self.queue.pop(0))
+                self.queue.pop(0)
+                self._prefill_into_slot(slot, req)
         if self.backend == "paged":
-            for slot in sorted(self._pending):
+            for slot in self.sched.prefill_order(
+                    list(self._pending),
+                    lambda i: self.slots[i].priority):
                 self._prefill_tick(slot)
 
     # ------------------------------------------------------------------
@@ -821,14 +1146,38 @@ class ServeEngine:
         top = int(budgets.max(initial=0))
         if top == 0:
             if blocked.any() and not self._pending:
-                in_use = sum(a.pages_in_use
-                             for a in (self.alloc, self.ralloc)
-                             if a is not None)
-                raise PoolExhausted(
-                    "every active slot is pool-blocked and nothing can "
-                    "free pages: the pool is smaller than the live working "
-                    f"set ({in_use} pages in use)")
-            return 0
+                # controlled shedding before the hard stop: preempt ONE
+                # victim (any priority — everyone is blocked) so the
+                # survivors inherit its pages; a lone blocked slot has
+                # nobody to yield to, so the raise below still guards the
+                # truly-undersized pool
+                active = [i for i, r in enumerate(self.slots) if r is not None]
+                victim = (self._pick_victim() if len(active) > 1 else None)
+                if victim is not None:
+                    self.preempt(victim)
+                    budgets = self._budgets(n)
+                    blocked = self._reserve_window_pages(budgets)
+                    top = int(budgets.max(initial=0))
+            if top == 0:
+                if blocked.any() and not self._pending:
+                    in_use = sum(a.pages_in_use
+                                 for a in (self.alloc, self.ralloc)
+                                 if a is not None)
+                    free = sum(len(a.free)
+                               for a in (self.alloc, self.ralloc)
+                               if a is not None)
+                    raise PoolExhausted(
+                        "every active slot is pool-blocked and nothing can "
+                        "free pages: the pool is smaller than the live "
+                        "working set", pool="engine",
+                        num_pages=(self.num_pages
+                                   + (self.num_ring_pages if self.ralloc
+                                      else 0)),
+                        live_pages=in_use, free_pages=free)
+                return 0
+        self.stats.prefill_burst_max = max(self.stats.prefill_burst_max,
+                                           self._chunks_since_decode)
+        self._chunks_since_decode = 0
         if self.draft is not None:
             return self._spec_dispatch(budgets)
         n_run = min(n, next_pow2(top))  # pow2 ticks: bounded trace count
@@ -947,6 +1296,33 @@ class ServeEngine:
             # zero-budget slots (pool-blocked slots wait on those releases)
             self.decode_many(self.window)
         return self.stats
+
+
+def _gather_pages_impl(cache, pids):
+    """Take ``pids`` along every pool leaf's page axis: the device half of
+    a swap-out.  Under TP the pools are sharded on kv-heads, the gather
+    axis is pages — each shard gathers its own head stripe."""
+
+    def take(path, leaf):
+        return jnp.take(leaf, pids, axis=page_axis(path, leaf))
+
+    return jax.tree_util.tree_map_with_path(take, cache)
+
+
+def _scatter_pages_impl(cache, pids, data):
+    """Write gathered page data back at (new) page ids: the device half of
+    a swap-in.  Padding lanes all target the reserved null page with the
+    bytes it held at gather time — duplicate writes of one value, so the
+    scatter stays deterministic and live pages are never touched."""
+
+    def put(path, leaf, upd):
+        ax = page_axis(path, leaf)
+        upd = jnp.asarray(upd, leaf.dtype)
+        if ax == 0:
+            return leaf.at[pids].set(upd)
+        return leaf.at[:, pids].set(upd)
+
+    return jax.tree_util.tree_map_with_path(put, cache, data)
 
 
 def _gather_logits(bundle: ModelBundle, logits):

@@ -1,0 +1,159 @@
+"""Host-memory KV tier: the swap target for preempted requests.
+
+One level further down the paper's memory hierarchy than the page pools:
+when the scheduler evicts a victim whose context is expensive to
+recompute, the engine gathers the victim's whole pages (k/v plus the int8
+scale lanes) device->host and parks them here; resume reserves fresh
+pages and streams the bytes back through the page table.  The tier is
+pure host state — numpy pytrees keyed by rid — so it survives device
+cache donation and TP resharding untouched.
+
+Every entry carries a CRC32 over its *real* pages (the gather pads the
+page list to a power of two with null-page ids; those padding lanes are
+excluded — the null page legitimately changes under masked decode
+writes).  ``get`` re-verifies the checksum, so a corrupted swap (the
+chaos harness injects exactly this) is detected before a single stale
+row reaches the device and the engine falls back to recompute-resume.
+"""
+from __future__ import annotations
+
+import time
+import zlib
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def page_axis(path, leaf) -> int:
+    """Which axis of a paged-cache leaf indexes pages.
+
+    Pool leaves are ``*_pages`` ``(..., P, page, Hkv, D)`` and int8 scale
+    lanes are ``*_scale`` ``(..., P, page)``; stacked pattern-block leaves
+    carry a leading layer axis.  Swappable stacks are pure full attention
+    (validated by the engine), so every leaf is one of the two.
+    """
+    name = ""
+    for p in path:
+        name = str(getattr(p, "key", getattr(p, "name", name)))
+    if name.endswith("_pages"):
+        ax = leaf.ndim - 4
+    elif name.endswith("_scale"):
+        ax = leaf.ndim - 2
+    else:
+        raise ValueError(
+            f"leaf {name!r} is not a page-pool leaf: host swap serves pure "
+            "full-attention stacks whose cache is pages + scale lanes only")
+    if ax not in (0, 1):
+        raise ValueError(f"leaf {name!r}: unexpected rank {leaf.ndim}")
+    return ax
+
+
+def _real_page_bytes(data, n_pages: int):
+    """Iterate the checksummed byte ranges: each leaf's first ``n_pages``
+    along its page axis, in deterministic flatten order."""
+    leaves = jax.tree_util.tree_flatten_with_path(data)[0]
+    for path, leaf in leaves:
+        ax = page_axis(path, leaf)
+        sl = (slice(None),) * ax + (slice(0, n_pages),)
+        yield np.ascontiguousarray(leaf[sl]).tobytes()
+
+
+def checksum_pages(data, n_pages: int) -> int:
+    crc = 0
+    for chunk in _real_page_bytes(data, n_pages):
+        crc = zlib.crc32(chunk, crc)
+    return crc
+
+
+@dataclass
+class HostKVEntry:
+    rid: int
+    n_pages: int          # real pages (data is padded to pow2 beyond this)
+    length: int           # live KV rows the pages cover
+    data: Any             # pytree of host numpy arrays
+    checksum: int
+    nbytes: int
+
+
+@dataclass
+class HostKVTier:
+    """rid -> swapped page data, with checksum-verified readback.
+
+    ``latency_s`` sleeps on every put/get — the chaos harness uses it to
+    model a slow staging link and prove the schedule (not just the data)
+    tolerates a laggy tier.
+    """
+
+    latency_s: float = 0.0
+    _entries: Dict[int, HostKVEntry] = field(default_factory=dict)
+    bytes_out: int = 0     # cumulative device->host
+    bytes_in: int = 0      # cumulative host->device (verified gets)
+
+    def _stall(self) -> None:
+        if self.latency_s > 0:
+            time.sleep(self.latency_s)
+
+    def put(self, rid: int, data, n_pages: int, length: int) -> HostKVEntry:
+        """Own a host copy of the gathered pages (writable — the chaos
+        harness corrupts entries in place) and checksum the real-page
+        span."""
+        self._stall()
+        host = jax.tree_util.tree_map(lambda x: np.array(x), data)
+        nbytes = int(sum(x.nbytes for x in jax.tree_util.tree_leaves(host)))
+        entry = HostKVEntry(rid=rid, n_pages=n_pages, length=length,
+                            data=host, checksum=checksum_pages(host, n_pages),
+                            nbytes=nbytes)
+        self._entries[rid] = entry
+        self.bytes_out += nbytes
+        return entry
+
+    def get(self, rid: int) -> Tuple[Optional[HostKVEntry], bool]:
+        """(entry, ok).  ``ok`` is False when the stored checksum no longer
+        matches — the caller must fall back to recompute and :meth:`pop`
+        the entry.  The entry stays resident until popped so a failed
+        swap-in never loses the (only remaining) eviction record."""
+        self._stall()
+        entry = self._entries.get(rid)
+        if entry is None:
+            return None, False
+        ok = checksum_pages(entry.data, entry.n_pages) == entry.checksum
+        if ok:
+            self.bytes_in += entry.nbytes
+        return entry, ok
+
+    def pop(self, rid: int) -> None:
+        self._entries.pop(rid, None)
+
+    def rids(self) -> list:
+        return list(self._entries)
+
+    def clear(self) -> None:
+        self._entries.clear()
+        self.bytes_out = 0
+        self.bytes_in = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, rid: int) -> bool:
+        return rid in self._entries
+
+    @property
+    def bytes_held(self) -> int:
+        return sum(e.nbytes for e in self._entries.values())
+
+    # -- fault injection -------------------------------------------------
+    def corrupt(self, rid: int) -> bool:
+        """Flip one byte inside the checksummed span of ``rid``'s entry
+        (the chaos harness's bit-rot model).  Returns False when the rid
+        holds no entry."""
+        entry = self._entries.get(rid)
+        if entry is None:
+            return False
+        leaf = jax.tree_util.tree_leaves(entry.data)[0]
+        # byte 0 is element [0, ..., 0] — page index 0 of the gathered
+        # data, i.e. the victim's first real page: always checksummed
+        leaf.view(np.uint8).flat[0] ^= 0xFF
+        return True

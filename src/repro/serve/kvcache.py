@@ -33,7 +33,45 @@ import numpy as np
 
 class PoolExhausted(MemoryError):
     """No free pages left.  The engine catches this and keeps the request
-    queued (backpressure) instead of crashing the serving loop."""
+    queued (backpressure) instead of crashing the serving loop.
+
+    The exception carries structured context — which pool, how full it
+    was, who asked for how much — so operators (and the chaos harness's
+    assertions) see *why* admission stalled instead of a bare raise:
+
+    - ``pool``: ``"full"`` / ``"ring"`` (allocator kind) or ``"engine"``
+      for the decode-time all-slots-blocked raise
+    - ``num_pages`` / ``free_pages`` / ``live_pages``: pool census at the
+      moment of the raise (live excludes the reserved null page)
+    - ``rid`` / ``need_pages``: the requester and its unmet page demand
+      (``None`` when the raise is not tied to one request)
+    """
+
+    def __init__(self, msg: str = "", *, pool: str = "full",
+                 num_pages: Optional[int] = None,
+                 free_pages: Optional[int] = None,
+                 live_pages: Optional[int] = None,
+                 rid: Optional[int] = None,
+                 need_pages: Optional[int] = None):
+        self.pool = pool
+        self.num_pages = num_pages
+        self.free_pages = free_pages
+        self.live_pages = live_pages
+        self.rid = rid
+        self.need_pages = need_pages
+        bits = [f"pool={pool}"]
+        if num_pages is not None:
+            bits.append(f"pages={num_pages}")
+        if live_pages is not None:
+            bits.append(f"live={live_pages}")
+        if free_pages is not None:
+            bits.append(f"free={free_pages}")
+        if rid is not None:
+            bits.append(f"rid={rid}")
+        if need_pages is not None:
+            bits.append(f"need={need_pages}")
+        super().__init__(f"{msg} [{', '.join(bits)}]" if msg
+                         else f"[{', '.join(bits)}]")
 
 
 def page_hashes(tokens: np.ndarray, page_size: int) -> List[str]:
@@ -79,6 +117,7 @@ class PageAllocator:
         self.page_size = page_size
         self.reserved = reserved
         self.window = window
+        self.kind = "full" if window is None else "ring"
         self.ring_slots = (None if window is None
                            else -(-window // page_size) + 1)
         self.free: List[int] = list(range(reserved, num_pages))  # kept sorted
@@ -97,11 +136,19 @@ class PageAllocator:
         self.tables[rid] = []
         self.lengths[rid] = 0
 
+    def exhausted(self, msg: str, rid: Optional[int] = None,
+                  need: Optional[int] = None) -> PoolExhausted:
+        """A :class:`PoolExhausted` pre-filled with this pool's census."""
+        return PoolExhausted(msg, pool=self.kind, num_pages=self.num_pages,
+                             free_pages=len(self.free),
+                             live_pages=self.pages_in_use,
+                             rid=rid, need_pages=need)
+
     def _take_page(self) -> int:
         if not self.free:
-            raise PoolExhausted(
+            raise self.exhausted(
                 f"KV page pool exhausted ({self.num_pages} pages of "
-                f"{self.page_size} tokens)")
+                f"{self.page_size} tokens)", need=1)
         pid = self.free.pop(0)  # lowest id first: deterministic reuse order
         self.ref[pid] = 1
         return pid
@@ -176,9 +223,9 @@ class PageAllocator:
             steps = self._ring_growth(rid, new_len)
             cost = sum(1 for _, kind in steps if kind != 1)
             if cost > len(self.free):
-                raise PoolExhausted(
+                raise self.exhausted(
                     f"need {cost} ring pages for rid {rid}, only "
-                    f"{len(self.free)} free")
+                    f"{len(self.free)} free", rid=rid, need=cost)
             fresh: List[int] = []
             for logical, kind in steps:
                 slot = logical % self.ring_slots
@@ -198,8 +245,9 @@ class PageAllocator:
         need = -(-new_len // self.page_size)
         grow = need - len(table)
         if grow > len(self.free):
-            raise PoolExhausted(
-                f"need {grow} pages for rid {rid}, only {len(self.free)} free")
+            raise self.exhausted(
+                f"need {grow} pages for rid {rid}, only {len(self.free)} "
+                "free", rid=rid, need=grow)
         fresh = [self._take_page() for _ in range(max(0, grow))]
         table.extend(fresh)
         self.lengths[rid] = max(self.lengths[rid], new_len)
@@ -432,9 +480,10 @@ class PagedKVCache(PageAllocator):
                 if (li % self.ring_slots) not in touched
                 and self.is_shared(table[li % self.ring_slots]))
         if need_fresh + need_cow > len(self.free):
-            raise PoolExhausted(
+            raise self.exhausted(
                 f"append of {s} tokens needs {need_fresh} fresh + "
-                f"{need_cow} copy-on-write pages, only {len(self.free)} free")
+                f"{need_cow} copy-on-write pages, only {len(self.free)} "
+                "free", rid=rid, need=need_fresh + need_cow)
         self.reserve(rid, start + s)
         off = 0
         while off < s:

@@ -1,0 +1,169 @@
+"""SLO-aware scheduling policy for the serving engine: priority classes,
+prefill/decode interleave bounds, and mid-flight preemption.
+
+The paper's memory-hierarchy argument — bandwidth is only achievable if
+you manage which tier data lives in and when it moves — applied one level
+up: under pool pressure the engine no longer just backpressures the
+admission queue.  It picks a *victim* by (priority, resume cost, page
+footprint), evicts the victim's pages through the refcounted
+:class:`~repro.serve.kvcache.PageAllocator` release path, and brings the
+request back later by whichever move the memory hierarchy prices cheaper:
+
+- **recompute** — re-prefill ``prompt ++ emitted[:-1]`` in chunks (the
+  prefix cache serves the original prompt pages when they survived), at
+  the cost of re-streaming the weights once per chunk; or
+- **swap** — gather the victim's whole pages (+ int8 scale lanes) to a
+  host-memory :class:`~repro.serve.hosttier.HostKVTier` and stream them
+  back through the page table on resume, at the cost of two traversals
+  of the device<->host staging link.
+
+:class:`SwapCostModel` prices both against the same
+:class:`~repro.core.memmodel.TPUSpec` the bench subsystem calibrates, so
+``run_sweeps(calibration=...)`` reshapes this decision exactly the way it
+reshapes kernel block geometry.  Everything here is pure policy — the
+mechanism (page gather/scatter, PRNG replay, table republication) lives
+in :class:`~repro.serve.engine.ServeEngine`.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence
+
+from repro.core.memmodel import TPUSpec, V5E
+
+# priority classes: higher admits (and holds its slot) first under
+# pressure.  Plain ints so callers can invent finer gradations.
+PRIORITY_LOW = 0
+PRIORITY_HIGH = 1
+
+
+@dataclass(frozen=True)
+class SchedulerConfig:
+    """Policy knobs.  The defaults reproduce the pre-scheduler engine for
+    uniform-priority workloads: FIFO admission (priority ties break by
+    arrival), no preemption ever triggers (admission preempts only
+    strictly-lower-priority victims), and every pending prefill advances
+    one chunk per admit round."""
+
+    preempt: bool = True
+    swap: bool = True                 # allow host-tier swap resumes
+    # SLO bound: at most this many chunked-prefill dispatches between
+    # consecutive decode windows (None = unbounded, the legacy behavior).
+    # Under a prefill-heavy mix this caps the decode-tick gap — the TPOT
+    # tail — at a known number of chunk dispatches.
+    prefill_chunks_per_tick: Optional[int] = None
+    # device<->host staging-link bandwidth for the swap path (PCIe-class;
+    # the HBM spec comes from the — possibly calibrated — TPUSpec).
+    host_link_bw: float = 32e9
+
+
+@dataclass(frozen=True)
+class VictimInfo:
+    """One active slot's preemption candidacy, as the engine sees it."""
+
+    slot: int
+    rid: int
+    priority: int
+    ctx_tokens: int        # live KV rows a resume must restore
+    pages: int             # page footprint across pools (freed on evict)
+
+
+class SwapCostModel:
+    """Price recompute-resume vs swap-resume for a victim with ``ctx``
+    live tokens.
+
+    Recompute re-runs chunked prefill over the context: each chunk
+    re-streams the weights from HBM once (the dominant term for short
+    chunks) and rewrites the context's KV rows.  Swap moves the victim's
+    KV bytes across the host staging link twice (out + back).  Both sides
+    use the same ``spec`` the calibrated bench model fits, so a
+    measured-mode calibration moves this break-even point too.
+    """
+
+    def __init__(self, *, weight_bytes: float, kv_bytes_per_token: float,
+                 prefill_chunk: int, spec: TPUSpec = V5E,
+                 host_link_bw: float = 32e9, calibration=None):
+        if calibration is not None:
+            # a bench CalibrationResult: adopt its fitted spec and scale
+            # the staging link by the same measured/modeled bandwidth ratio
+            spec = calibration.spec
+            host_link_bw *= calibration.bandwidth_scale
+        self.weight_bytes = float(weight_bytes)
+        self.kv_bytes_per_token = float(kv_bytes_per_token)
+        self.prefill_chunk = max(1, int(prefill_chunk))
+        self.spec = spec
+        self.host_link_bw = float(host_link_bw)
+
+    def recompute_s(self, ctx_tokens: int) -> float:
+        """Modeled chunked-prefill time for ``ctx_tokens``: one weight
+        stream per chunk + one KV-row write per token."""
+        chunks = -(-max(1, ctx_tokens) // self.prefill_chunk)
+        return (chunks * self.weight_bytes
+                + ctx_tokens * self.kv_bytes_per_token) / self.spec.hbm_bw
+
+    def swap_s(self, ctx_tokens: int) -> float:
+        """Modeled page-swap time: the victim's KV bytes cross the host
+        staging link twice (gather out, stream back)."""
+        return 2.0 * ctx_tokens * self.kv_bytes_per_token / self.host_link_bw
+
+    def resume_s(self, ctx_tokens: int, swappable: bool) -> float:
+        """Cheapest resume the hierarchy offers this victim."""
+        r = self.recompute_s(ctx_tokens)
+        return min(r, self.swap_s(ctx_tokens)) if swappable else r
+
+    def choose(self, ctx_tokens: int, swappable: bool) -> str:
+        """``"swap"`` or ``"recompute"`` for a victim with ``ctx`` live
+        tokens.  Ring/hybrid victims are never swappable: rotation and
+        recurrent state are not captured by full-pool pages."""
+        if swappable and self.swap_s(ctx_tokens) < self.recompute_s(ctx_tokens):
+            return "swap"
+        return "recompute"
+
+
+@dataclass
+class Scheduler:
+    """Priority ordering + victim selection.  Mutable so the engine can
+    lazily attach a cost model derived from its own geometry (weight
+    bytes, page bytes) when the caller didn't supply a calibrated one."""
+
+    config: SchedulerConfig = field(default_factory=SchedulerConfig)
+    cost_model: Optional[SwapCostModel] = None
+
+    # ------------------------------------------------------------------
+    def order_queue(self, queue: List, arrival) -> None:
+        """Stable priority order: higher priority first, FIFO within a
+        class (``arrival`` maps rid -> admission sequence number, which a
+        preempted request keeps — it resumes ahead of later arrivals of
+        its own class, behind whatever displaced it)."""
+        queue.sort(key=lambda r: (-r.priority, arrival.get(r.rid, 0)))
+
+    def prefill_order(self, slots: Sequence[int], priorities) -> List[int]:
+        """Which pending-prefill slots advance a chunk this admit round:
+        high-priority prompts first, capped at ``prefill_chunks_per_tick``
+        so decode windows keep their cadence under prefill load."""
+        order = sorted(slots, key=lambda i: (-priorities(i), i))
+        cap = self.config.prefill_chunks_per_tick
+        return order if cap is None else order[:max(1, cap)]
+
+    def pick_victim(self, cands: Sequence[VictimInfo], *,
+                    below: Optional[int] = None,
+                    swappable: bool = False) -> Optional[VictimInfo]:
+        """The ISSUE's ordering: lowest priority class first, then the
+        cheapest modeled resume, then the largest page footprint (free the
+        most pool per eviction).  ``below`` restricts to victims strictly
+        below a priority (admission-pressure preemption never cannibalizes
+        peers); window-pressure shedding passes ``below=None``."""
+        if not self.config.preempt:
+            return None
+        pool = [v for v in cands
+                if below is None or v.priority < below]
+        if not pool:
+            return None
+        cm = self.cost_model
+
+        def key(v: VictimInfo):
+            cost = (cm.resume_s(v.ctx_tokens, swappable)
+                    if cm is not None else v.ctx_tokens)
+            return (v.priority, cost, -v.pages, v.slot)
+
+        return min(pool, key=key)

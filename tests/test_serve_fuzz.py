@@ -29,8 +29,9 @@ from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.configs import ARCHS, smoke_config  # noqa: E402
 from repro.models import RuntimeFlags, build  # noqa: E402
-from repro.serve import (PageAllocator, PoolExhausted, PrefixIndex,  # noqa: E402
-                         Request, SamplingParams, ServeEngine)
+from repro.serve import (ChaosConfig, ChaosEngine, PageAllocator,  # noqa: E402
+                         PoolExhausted, PrefixIndex, Request, SamplingParams,
+                         ServeEngine)
 
 FLAGS = RuntimeFlags(attn_impl="chunked", attn_bq=16, attn_bkv=16,
                      moe_impl="dense", loss_chunk=16)
@@ -280,6 +281,141 @@ def test_fuzz_sharded_matches_single_device(variant, mix, seed):
 
 
 # ---------------------------------------------------------------------------
+# preemption/swap/resume == unpreempted (scheduler tentpole)
+# ---------------------------------------------------------------------------
+#
+# The robustness claim: ANY schedule of mid-flight preemptions (page
+# eviction + recompute-resume or host-tier swap-resume), forced pool
+# exhaustion, and swap corruption drains token-identically — bitwise,
+# including the per-slot PRNG key chains and the speculative paths — to
+# the run nothing ever interrupted.  ChaosEngine additionally asserts
+# allocator conservation (live + free == pool, refcounts >= 1, every
+# table page live) after every fault round.  Priorities ride along
+# (rid % 2) so admission-pressure preemption and queue reordering are
+# exercised, not just the forced storms.
+
+CHAOS_ENGINES = {           # backend -> (cfg, engine), lazily built
+    "paged-int8": lambda: _engines("gemma-2b-int8")[::2],
+    "ring": lambda: _engines("gemma2-27b")[::2],
+    "dense": lambda: _engines("gemma-2b-int8")[:2],
+    "sampled": lambda: _spec_engines("gemma-2b", "sampled")[:2],
+    "spec": lambda: _spec_engines("gemma-2b", "greedy")[::2],
+}
+
+
+def _drive_chaos(eng, waves, ccfg):
+    """The chaos twin of :func:`_drive`: same waves, same priorities, but
+    the drain runs under fault injection."""
+    eng.reset()
+    chaos = ChaosEngine(eng, ccfg)
+    reqs = []
+    for prompt, max_new in waves[0]:
+        r = Request(rid=len(reqs), prompt=prompt, max_new_tokens=max_new,
+                    priority=len(reqs) % 2)
+        reqs.append(r)
+        chaos.add_request(r)
+    if waves[1]:
+        for _ in range(3):
+            chaos.step()
+        for prompt, max_new in waves[1]:
+            r = Request(rid=len(reqs), prompt=prompt, max_new_tokens=max_new,
+                        priority=len(reqs) % 2)
+            reqs.append(r)
+            chaos.add_request(r)
+    chaos.run_to_completion()
+    if eng.host_tier is not None:
+        eng.host_tier.latency_s = 0.0    # engines are cached across examples
+    return [r.out_tokens for r in reqs]
+
+
+def _drive_prio(eng, waves):
+    """Unpreempted reference with the same rid%2 priorities the chaos
+    drive assigns (priority reorders scheduling, never tokens)."""
+    eng.reset()
+    reqs = []
+    for prompt, max_new in waves[0]:
+        r = Request(rid=len(reqs), prompt=prompt, max_new_tokens=max_new,
+                    priority=len(reqs) % 2)
+        reqs.append(r)
+        eng.add_request(r)
+    if waves[1]:
+        for _ in range(3):
+            eng.step()
+        for prompt, max_new in waves[1]:
+            r = Request(rid=len(reqs), prompt=prompt, max_new_tokens=max_new,
+                        priority=len(reqs) % 2)
+            reqs.append(r)
+            eng.add_request(r)
+    eng.run_to_completion(max_ticks=5_000)
+    assert all(s is None for s in eng.slots)
+    return [r.out_tokens for r in reqs]
+
+
+@pytest.mark.chaos
+@pytest.mark.parametrize("backend", sorted(CHAOS_ENGINES))
+@settings(max_examples=2, deadline=None)
+@given(mix=_mix(max_requests=3, max_prompt=12),
+       seed=st.integers(0, 2**16), chaos_seed=st.integers(0, 2**16),
+       mode=st.sampled_from([None, "swap", "recompute"]))
+def test_fuzz_chaos_drain_matches_unpreempted(backend, mix, seed,
+                                              chaos_seed, mode):
+    """Tier-1 + chaos-smoke: random preemption/swap/resume schedules are
+    lossless on every backend the acceptance criteria name."""
+    cfg, eng = CHAOS_ENGINES[backend]()
+    waves = _materialize(cfg, mix, seed)
+    want = _drive_prio(eng, waves)
+    ccfg = ChaosConfig(seed=chaos_seed, preempt_prob=0.35, exhaust_prob=0.3,
+                       corrupt_prob=0.3, mode=mode)
+    got = _drive_chaos(eng, waves, ccfg)
+    assert got == want, (
+        f"{backend}: chaos drain diverged from unpreempted reference for "
+        f"mix {mix} (chaos_seed={chaos_seed}, mode={mode})")
+
+
+@pytest.mark.chaos
+@pytest.mark.slow
+@pytest.mark.parametrize("backend", sorted(CHAOS_ENGINES))
+@settings(max_examples=4, deadline=None)
+@given(mix=_mix(max_requests=6, max_prompt=40),
+       seed=st.integers(0, 2**16), chaos_seed=st.integers(0, 2**16),
+       mode=st.sampled_from([None, "swap", "recompute"]))
+def test_fuzz_chaos_drain_matches_unpreempted_long(backend, mix, seed,
+                                                   chaos_seed, mode):
+    """Long chaos drains: storms hit requests holding many pages, swaps
+    move multi-page contexts, slots churn through preempted requeues."""
+    cfg, eng = CHAOS_ENGINES[backend]()
+    waves = _materialize(cfg, mix, seed)
+    want = _drive_prio(eng, waves)
+    ccfg = ChaosConfig(seed=chaos_seed, preempt_prob=0.35, exhaust_prob=0.3,
+                       corrupt_prob=0.3, swap_latency_s=1e-4, mode=mode)
+    got = _drive_chaos(eng, waves, ccfg)
+    assert got == want, (
+        f"{backend}: long chaos drain diverged for mix {mix} "
+        f"(chaos_seed={chaos_seed}, mode={mode})")
+
+
+@pytest.mark.chaos
+@pytest.mark.skipif(len(jax.devices()) < 2,
+                    reason="TP chaos needs >=2 devices (CI forces a "
+                           "multi-device host platform)")
+@settings(max_examples=2, deadline=None)
+@given(mix=_mix(max_requests=3, max_prompt=12),
+       seed=st.integers(0, 2**16), chaos_seed=st.integers(0, 2**16))
+def test_fuzz_chaos_sharded_matches_single_device(mix, seed, chaos_seed):
+    """Preemption under TP: per-shard page swap (gather/scatter of each
+    shard's kv-head stripe) drains token-identically to the untouched
+    single-device engine."""
+    cfg, single, tp = _dist_engines("greedy")
+    waves = _materialize(cfg, mix, seed)
+    want = _drive_prio(single, waves)
+    ccfg = ChaosConfig(seed=chaos_seed, preempt_prob=0.35, exhaust_prob=0.3,
+                       corrupt_prob=0.3)
+    got = _drive_chaos(tp, waves, ccfg)
+    assert got == want, (
+        f"TP chaos drain diverged for mix {mix} (chaos_seed={chaos_seed})")
+
+
+# ---------------------------------------------------------------------------
 # allocator + prefix-index conservation property (satellite)
 # ---------------------------------------------------------------------------
 
@@ -297,7 +433,7 @@ def _check_invariants(alloc: PageAllocator):
 
 OPS = st.lists(
     st.tuples(st.sampled_from(["alloc", "reserve", "fork", "release",
-                               "pin_evict", "truncate"]),
+                               "pin_evict", "truncate", "evict"]),
               st.integers(0, 5), st.integers(1, 48)),
     min_size=1, max_size=40)
 
@@ -338,6 +474,13 @@ def _exercise_allocator(ops, num_pages, window):
                 # shared (forked) pages are decref'd, never freed early
                 rid = live[pick % len(live)]
                 alloc.truncate(rid, alloc.lengths[rid] % (length + 1))
+            elif op == "evict" and live:
+                # scheduler preemption: rewind to the victim's live length
+                # then release everything — shared pages must survive via
+                # their refcounts, ring pools must only rewind length
+                rid = live.pop(pick % len(live))
+                alloc.truncate(rid, alloc.lengths[rid] // 2)
+                alloc.release(rid)
             elif op == "pin_evict" and live and window is None:
                 rid = live[pick % len(live)]
                 for pid in alloc.tables[rid]:

@@ -112,9 +112,10 @@ def test_append_cow_budget_is_all_or_nothing():
 def test_allocator_random_ops_conserve_pages_without_hypothesis():
     """Hypothesis-free twin of the test_serve_fuzz conservation property
     (that module skips entirely when hypothesis is absent): 120 seeded
-    random alloc/reserve/fork/release sequences over full and ring
-    allocators must conserve pages, keep refcounts >= 1, and respect the
-    ring bound."""
+    random alloc/reserve/fork/release/truncate/evict sequences over full
+    and ring allocators must conserve pages, keep refcounts >= 1, and
+    respect the ring bound.  The evict op is the scheduler's preemption
+    release path: truncate to the victim's live length, then release."""
     rng = np.random.default_rng(3)
     for trial in range(120):
         num_pages = int(rng.integers(4, 25))
@@ -122,7 +123,7 @@ def test_allocator_random_ops_conserve_pages_without_hypothesis():
         a = PageAllocator(num_pages, 4, reserved=1, window=window)
         live, next_rid = [], 0
         for _ in range(int(rng.integers(1, 40))):
-            op = int(rng.integers(0, 4))
+            op = int(rng.integers(0, 6))
             try:
                 if op == 0:
                     a.alloc(next_rid)
@@ -138,6 +139,15 @@ def test_allocator_random_ops_conserve_pages_without_hypothesis():
                     next_rid += 1
                 elif op == 3 and live:
                     a.release(live.pop(int(rng.integers(0, len(live)))))
+                elif op == 4 and live:
+                    # speculative rollback: rewind to a random shorter length
+                    rid = live[int(rng.integers(0, len(live)))]
+                    a.truncate(rid, int(rng.integers(0, a.lengths[rid] + 1)))
+                elif op == 5 and live:
+                    # preemption eviction: truncate-then-release the victim
+                    rid = live.pop(int(rng.integers(0, len(live))))
+                    a.truncate(rid, a.lengths[rid] // 2)
+                    a.release(rid)
             except PoolExhausted:
                 pass     # backpressure is legal; corruption is not
             assert a.pages_in_use + len(a.free) == num_pages - 1
@@ -664,6 +674,46 @@ def test_ring_truncate_only_rewinds_length():
     assert a.tables[0] == held             # rotation handles regrowth
     assert a.lengths[0] == 17
     a.release(0)
+    assert a.pages_in_use == 0
+
+
+def test_ring_evict_never_frees_rotated_shared_page_early():
+    """Satellite: the scheduler's eviction path (truncate to the live
+    length, then release) on a windowed victim whose ring has rotated and
+    whose pages a sibling still shares.  The sibling must keep every one
+    of its pages referenced and byte-consistent through the eviction —
+    rotation makes trailing slot indices ambiguous, so only refcounts
+    (never position arithmetic) may decide what returns to the pool."""
+    a = PageAllocator(10, 4, reserved=1, window=8)   # ring_slots = 3
+    a.alloc(0)
+    a.reserve(0, 20)                       # grown past the window: rotated
+    victim_pages = list(a.tables[0])
+    assert len(victim_pages) == a.ring_slots
+    # a sibling attaches the victim's rotated table (the engine's ring
+    # fork: attach a copy of the slot-indexed table at the same length)
+    a.alloc(1)
+    a.attach(1, list(a.tables[0]), a.lengths[0])
+    assert all(a.ref[p] == 2 for p in set(victim_pages))
+    before = {p: a.ref[p] for p in set(victim_pages)}
+
+    # evict the victim mid-flight: rewind (possibly into rotated history),
+    # then release its references
+    a.truncate(0, 9)
+    assert a.tables[0] == victim_pages     # ring truncate rewinds length only
+    a.release(0)
+
+    # the sibling's pages all survive with exactly one reference left;
+    # nothing the sibling can still read was freed early
+    for p in set(victim_pages):
+        assert a.ref[p] == before[p] - 1 == 1
+    assert not set(a.tables[1]) & set(a.free)
+    assert a.pages_in_use + len(a.free) == a.num_pages - a.reserved
+
+    # sibling continues growing through its (rotating) ring unharmed
+    a.reserve(1, 24)
+    assert len(a.tables[1]) <= a.ring_slots
+    assert all(a.ref[p] >= 1 for p in a.tables[1])
+    a.release(1)
     assert a.pages_in_use == 0
 
 

@@ -1,0 +1,538 @@
+"""Scheduler, host KV tier, and preemption tests.
+
+Three layers:
+
+1. pure policy units — :class:`SwapCostModel` break-even behavior,
+   priority/FIFO queue ordering, victim selection, structured
+   :class:`PoolExhausted` context, :class:`HostKVTier` checksum round
+   trips;
+2. engine integration — preempt/resume (both modes) must be bitwise
+   lossless, corrupted swaps must degrade to recompute, high-priority
+   traffic must displace low under pool pressure, ``reset()`` must wipe
+   every scheduler/speculative trace (warm-benchmark regression);
+3. seeded chaos twins (``-m chaos``) — hypothesis-free fault-injection
+   drains that run even where the dev dependency is absent; the
+   hypothesis differential property lives in ``test_serve_fuzz``.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, smoke_config
+from repro.core.memmodel import TPUSpec
+from repro.models import RuntimeFlags, build
+from repro.serve import (ChaosConfig, ChaosEngine, HostKVTier, PageAllocator,
+                         PoolExhausted, Request, SamplingParams, Scheduler,
+                         SchedulerConfig, ServeEngine, SwapCostModel)
+from repro.serve.hosttier import checksum_pages, page_axis
+from repro.serve.scheduler import VictimInfo
+
+# ---------------------------------------------------------------------------
+# SwapCostModel
+# ---------------------------------------------------------------------------
+
+# production-ish numbers: 2.5B bf16 params, gemma-2b KV row, v5e HBM,
+# PCIe-class staging link
+PROD = dict(weight_bytes=5e9, kv_bytes_per_token=18_432, prefill_chunk=256)
+
+
+def test_cost_model_swap_beats_recompute_on_long_ctx():
+    cm = SwapCostModel(**PROD)
+    long_ctx = 8192
+    assert cm.swap_s(long_ctx) < cm.recompute_s(long_ctx)
+    assert cm.choose(long_ctx, swappable=True) == "swap"
+    # and the advantage grows with context: recompute re-streams the
+    # weights once per chunk, swap only moves the KV bytes
+    r1 = cm.recompute_s(1024) / cm.swap_s(1024)
+    r8 = cm.recompute_s(8192) / cm.swap_s(8192)
+    assert r8 >= r1 > 1.0
+
+
+def test_cost_model_slow_link_prefers_recompute():
+    # a glacial staging link flips the decision back to recompute
+    cm = SwapCostModel(**PROD, host_link_bw=1e6)
+    assert cm.choose(4096, swappable=True) == "recompute"
+    assert cm.resume_s(4096, swappable=True) == cm.recompute_s(4096)
+
+
+def test_cost_model_unswappable_always_recomputes():
+    cm = SwapCostModel(**PROD)
+    assert cm.choose(8192, swappable=False) == "recompute"
+    assert cm.resume_s(8192, swappable=False) == cm.recompute_s(8192)
+
+
+def test_cost_model_monotonic_and_chunked():
+    cm = SwapCostModel(weight_bytes=1e9, kv_bytes_per_token=1e4,
+                       prefill_chunk=64)
+    xs = [1, 63, 64, 65, 512, 4096]
+    rec = [cm.recompute_s(x) for x in xs]
+    swp = [cm.swap_s(x) for x in xs]
+    assert rec == sorted(rec) and swp == sorted(swp)
+    # crossing a chunk boundary costs one extra weight stream
+    bump = cm.recompute_s(65) - cm.recompute_s(64)
+    assert bump > 0.9 * 1e9 / cm.spec.hbm_bw
+
+
+def test_cost_model_adopts_spec():
+    fast = SwapCostModel(**PROD, spec=TPUSpec(hbm_bw=2 * 819e9))
+    slow = SwapCostModel(**PROD, spec=TPUSpec(hbm_bw=819e9))
+    assert fast.recompute_s(4096) < slow.recompute_s(4096)
+    assert fast.swap_s(4096) == slow.swap_s(4096)  # link, not HBM
+
+
+# ---------------------------------------------------------------------------
+# Scheduler policy
+# ---------------------------------------------------------------------------
+
+def _req(rid, priority=0):
+    return Request(rid=rid, prompt=np.zeros((4,), np.int32), priority=priority)
+
+
+def test_order_queue_priority_then_fifo():
+    sched = Scheduler()
+    q = [_req(0, 0), _req(1, 1), _req(2, 0), _req(3, 1)]
+    arrival = {r.rid: i for i, r in enumerate(q)}
+    sched.order_queue(q, arrival)
+    assert [r.rid for r in q] == [1, 3, 0, 2]
+
+
+def test_order_queue_preempted_keeps_arrival_seat():
+    # a preempted rid keeps its original sequence number: it resumes
+    # ahead of later arrivals of its own class
+    sched = Scheduler()
+    q = [_req(7, 0), _req(2, 0)]          # rid 2 was admitted first, evicted
+    arrival = {2: 0, 7: 5}
+    sched.order_queue(q, arrival)
+    assert [r.rid for r in q] == [2, 7]
+
+
+def test_prefill_order_priority_first_and_capped():
+    sched = Scheduler(SchedulerConfig(prefill_chunks_per_tick=2))
+    prio = {0: 0, 1: 1, 2: 0, 3: 1}
+    order = sched.prefill_order([0, 1, 2, 3], lambda i: prio[i])
+    assert order == [1, 3]                # high-priority slots, capped at 2
+    uncapped = Scheduler().prefill_order([0, 1, 2, 3], lambda i: prio[i])
+    assert uncapped == [1, 3, 0, 2]
+
+
+def test_pick_victim_ordering():
+    sched = Scheduler()
+    # no cost model: resume cost falls back to ctx tokens
+    a = VictimInfo(slot=0, rid=0, priority=1, ctx_tokens=4, pages=1)
+    b = VictimInfo(slot=1, rid=1, priority=0, ctx_tokens=90, pages=9)
+    c = VictimInfo(slot=2, rid=2, priority=0, ctx_tokens=10, pages=2)
+    d = VictimInfo(slot=3, rid=3, priority=0, ctx_tokens=10, pages=5)
+    # lowest priority class first, then cheapest resume, then most pages
+    assert sched.pick_victim([a, b, c, d]) == d
+    # below= restricts to strictly lower priorities
+    assert sched.pick_victim([a], below=1) is None
+    assert sched.pick_victim([a, b], below=1) == b
+    assert sched.pick_victim([a, b], below=2) == b
+
+
+def test_pick_victim_disabled():
+    sched = Scheduler(SchedulerConfig(preempt=False))
+    v = VictimInfo(slot=0, rid=0, priority=0, ctx_tokens=4, pages=1)
+    assert sched.pick_victim([v]) is None
+
+
+def test_pick_victim_uses_cost_model():
+    cm = SwapCostModel(**PROD)
+    sched = Scheduler(cost_model=cm)
+    # with the model, a short-ctx victim resumes cheaper than a long one
+    short = VictimInfo(slot=0, rid=0, priority=0, ctx_tokens=8, pages=1)
+    long_ = VictimInfo(slot=1, rid=1, priority=0, ctx_tokens=4096, pages=99)
+    assert sched.pick_victim([short, long_], swappable=True) == short
+
+
+# ---------------------------------------------------------------------------
+# structured PoolExhausted (satellite)
+# ---------------------------------------------------------------------------
+
+def test_pool_exhausted_carries_structured_context():
+    exc = PoolExhausted("no room", pool="ring", num_pages=8, free_pages=0,
+                        live_pages=7, rid=3, need_pages=2)
+    assert (exc.pool, exc.num_pages, exc.free_pages) == ("ring", 8, 0)
+    assert (exc.live_pages, exc.rid, exc.need_pages) == (7, 3, 2)
+    msg = str(exc)
+    for frag in ("no room", "pool=ring", "pages=8", "live=7", "free=0",
+                 "rid=3", "need=2"):
+        assert frag in msg
+
+
+def test_pool_exhausted_census_from_full_allocator():
+    alloc = PageAllocator(4, 4, reserved=1)     # 3 usable pages
+    alloc.alloc(0)
+    alloc.reserve(0, 12)                        # takes all 3
+    alloc.alloc(1)
+    with pytest.raises(PoolExhausted) as ei:
+        alloc.reserve(1, 8)                     # needs 2, none free
+    exc = ei.value
+    assert exc.pool == "full" and exc.rid == 1 and exc.need_pages == 2
+    assert exc.num_pages == 4 and exc.free_pages == 0 and exc.live_pages == 3
+
+
+def test_pool_exhausted_census_from_ring_allocator():
+    alloc = PageAllocator(3, 4, reserved=1, window=8)   # ring_slots=3, 2 free
+    alloc.alloc(0)
+    with pytest.raises(PoolExhausted) as ei:
+        alloc.reserve(0, 12)                    # wants 3 ring slots, 2 exist
+    exc = ei.value
+    assert exc.pool == "ring" and exc.rid == 0
+    assert exc.need_pages == 3 and exc.free_pages == 2
+
+
+# ---------------------------------------------------------------------------
+# HostKVTier
+# ---------------------------------------------------------------------------
+
+def _fake_pages(n_pages=3, pad_to=4):
+    """A miniature paged-cache pytree: one pool + one scale lane, padded
+    along the page axis the way the engine's gather pads."""
+    rng = np.random.default_rng(0)
+    return {
+        "k_pages": rng.standard_normal((pad_to, 8, 2, 4)).astype(np.float32),
+        "k_scale": rng.standard_normal((pad_to, 8)).astype(np.float32),
+    }
+
+
+def test_host_tier_roundtrip():
+    tier = HostKVTier()
+    data = _fake_pages()
+    entry = tier.put(7, data, n_pages=3, length=20)
+    assert 7 in tier and len(tier) == 1
+    assert tier.bytes_out == entry.nbytes and tier.bytes_held == entry.nbytes
+    got, ok = tier.get(7)
+    assert ok and got is entry and got.length == 20
+    assert tier.bytes_in == entry.nbytes
+    tier.pop(7)
+    assert 7 not in tier and tier.bytes_held == 0
+
+
+def test_host_tier_padding_pages_not_checksummed():
+    tier = HostKVTier()
+    entry = tier.put(1, _fake_pages(), n_pages=3, length=20)
+    # mutate a padding page (index 3 >= n_pages): checksum must not care —
+    # the engine's null-page padding legitimately changes between put/get
+    entry.data["k_pages"][3] += 1.0
+    _, ok = tier.get(1)
+    assert ok
+
+
+def test_host_tier_detects_corruption():
+    tier = HostKVTier()
+    entry = tier.put(1, _fake_pages(), n_pages=3, length=20)
+    assert tier.corrupt(1)
+    got, ok = tier.get(1)
+    assert not ok and got is entry          # entry retained until popped
+    assert tier.bytes_in == 0               # failed gets move no bytes
+    assert not tier.corrupt(99)             # unknown rid: no-op
+
+
+def test_checksum_covers_exactly_real_pages():
+    data = _fake_pages()
+    c3 = checksum_pages(data, 3)
+    data["k_pages"][2, 0, 0, 0] += 1.0      # inside the span
+    assert checksum_pages(data, 3) != c3
+    c2 = checksum_pages(data, 2)
+    data["k_pages"][2, 0, 0, 0] += 1.0      # outside a 2-page span
+    assert checksum_pages(data, 2) == c2
+
+
+def test_page_axis_rejects_non_pool_leaves():
+    tree = {"kpos": np.zeros((4, 8))}
+    with pytest.raises(ValueError, match="not a page-pool leaf"):
+        jax.tree_util.tree_map_with_path(
+            lambda p, x: page_axis(p, x), tree)
+
+
+# ---------------------------------------------------------------------------
+# engine integration
+# ---------------------------------------------------------------------------
+
+FLAGS = RuntimeFlags(attn_impl="chunked", attn_bq=16, attn_bkv=16,
+                     moe_impl="dense", loss_chunk=16)
+
+_STATE = {}
+
+
+def _bundle():
+    if "bundle" not in _STATE:
+        cfg = smoke_config(ARCHS["gemma-2b"])
+        bundle = build(cfg, FLAGS)
+        _STATE["bundle"] = (cfg, bundle, bundle.init(jax.random.PRNGKey(7)),
+                            bundle.init(jax.random.PRNGKey(11)))
+    return _STATE["bundle"]
+
+
+def _engine(key, **kw):
+    if key not in _STATE:
+        cfg, bundle, params, _ = _bundle()
+        _STATE[key] = ServeEngine(bundle, params, batch_size=2, max_len=64,
+                                  window=4, prefill_chunk=8, **kw)
+    eng = _STATE[key]
+    eng.reset()
+    return eng
+
+
+def _mk_requests(seed=1, n=4, plen=20, new=8, priority=None):
+    cfg = _bundle()[0]
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(1, cfg.vocab_size,
+                                        size=plen).astype(np.int32),
+                    max_new_tokens=new,
+                    priority=0 if priority is None else priority(i))
+            for i in range(n)]
+
+
+def _drain(eng, reqs):
+    for r in reqs:
+        eng.add_request(r)
+    eng.run_to_completion(max_ticks=5_000)
+    assert all(r.done for r in reqs)
+    return {r.rid: list(r.out_tokens) for r in reqs}
+
+
+def _reference():
+    if "ref" not in _STATE:
+        _STATE["ref"] = _drain(_engine("eng"), _mk_requests())
+    return _STATE["ref"]
+
+
+def test_recompute_resume_is_lossless():
+    ref = _reference()
+    eng = _engine("eng")
+    reqs = _mk_requests()
+    for r in reqs:
+        eng.add_request(r)
+    for _ in range(3):
+        eng.step()
+    victim = next(i for i, r in enumerate(eng.slots) if r is not None)
+    assert eng.preempt(victim, mode="recompute") == "recompute"
+    eng.run_to_completion(max_ticks=5_000)
+    assert {r.rid: list(r.out_tokens) for r in reqs} == ref
+    assert eng.stats.preemptions >= 1
+    assert eng.stats.recompute_resumes + eng.stats.preempt_restarts >= 1
+
+
+def test_swap_resume_is_lossless_and_counts_bytes():
+    ref = _reference()
+    eng = _engine("eng")
+    reqs = _mk_requests()
+    for r in reqs:
+        eng.add_request(r)
+    # past all prefills so the victim is mid-decode (swap-eligible state)
+    while not any(r is not None and r.out_tokens for r in eng.slots):
+        eng.step()
+    victim = next(i for i, r in enumerate(eng.slots)
+                  if r is not None and r.out_tokens)
+    assert eng.preempt(victim, mode="swap") == "swap"
+    assert eng.stats.swap_outs == 1 and len(eng.host_tier) == 1
+    eng.run_to_completion(max_ticks=5_000)
+    assert {r.rid: list(r.out_tokens) for r in reqs} == ref
+    assert eng.stats.swap_ins == 1 and eng.stats.swap_fallbacks == 0
+    assert eng.stats.swap_bytes > 0
+    assert len(eng.host_tier) == 0          # entry consumed by the resume
+
+
+def test_corrupted_swap_falls_back_to_recompute():
+    ref = _reference()
+    eng = _engine("eng")
+    reqs = _mk_requests()
+    for r in reqs:
+        eng.add_request(r)
+    while not any(r is not None and r.out_tokens for r in eng.slots):
+        eng.step()
+    victim = next(i for i, r in enumerate(eng.slots)
+                  if r is not None and r.out_tokens)
+    rid = eng.slots[victim].rid
+    eng.preempt(victim, mode="swap")
+    assert eng.host_tier.corrupt(rid)
+    eng.run_to_completion(max_ticks=5_000)
+    assert {r.rid: list(r.out_tokens) for r in reqs} == ref
+    assert eng.stats.swap_fallbacks == 1    # checksum caught the rot
+    assert eng.stats.swap_ins == 0
+    assert eng.stats.recompute_resumes >= 1
+
+
+def test_dense_backend_preempts_and_resumes():
+    cfg, bundle, params, _ = _bundle()
+    if "dense" not in _STATE:
+        _STATE["dense"] = ServeEngine(bundle, params, batch_size=2,
+                                      max_len=64, window=4,
+                                      cache_backend="dense")
+    eng = _STATE["dense"]
+    eng.reset()
+    reqs = _mk_requests()
+    for r in reqs:
+        eng.add_request(r)
+    eng.run_to_completion(max_ticks=5_000)
+    ref = {r.rid: list(r.out_tokens) for r in reqs}
+    eng.reset()
+    reqs = _mk_requests()
+    for r in reqs:
+        eng.add_request(r)
+    for _ in range(2):
+        eng.step()
+    victim = next(i for i, r in enumerate(eng.slots) if r is not None)
+    # dense engines have no page pools: swap silently degrades
+    assert eng.preempt(victim, mode="swap") == "recompute"
+    eng.run_to_completion(max_ticks=5_000)
+    assert {r.rid: list(r.out_tokens) for r in reqs} == ref
+
+
+def test_high_priority_preempts_low_under_pool_pressure():
+    cfg, bundle, params, _ = _bundle()
+    # pool sized so two 20-token prompts fit but a third does not
+    eng = ServeEngine(bundle, params, batch_size=2, max_len=64, window=4,
+                      prefill_chunk=8, num_pages=2 * 3 + 3)
+    rng = np.random.default_rng(2)
+
+    def prompt():
+        return rng.integers(1, cfg.vocab_size, size=20).astype(np.int32)
+
+    low = [Request(rid=i, prompt=prompt(), max_new_tokens=24, priority=0)
+           for i in range(2)]
+    hi = Request(rid=99, prompt=prompt(), max_new_tokens=4, priority=1)
+    for r in low:
+        eng.add_request(r)
+    for _ in range(4):
+        eng.step()
+    eng.add_request(hi)
+    eng.run_to_completion(max_ticks=5_000)
+    assert hi.done and all(r.done for r in low)   # nobody starves
+    assert eng.stats.preemptions >= 1
+
+
+def test_uniform_priorities_never_preempt():
+    eng = _engine("eng")
+    _drain(eng, _mk_requests())
+    assert eng.stats.preemptions == 0       # legacy behavior preserved
+
+
+def test_admission_orders_by_priority():
+    eng = _engine("eng")
+    reqs = _mk_requests(n=4, priority=lambda i: i % 2)
+    for r in reqs:
+        eng.add_request(r)
+    eng._admit()
+    admitted = {r.rid for r in eng.slots if r is not None}
+    assert admitted == {1, 3}               # both high-priority rids first
+
+
+def test_prefill_chunk_cap_bounds_decode_gap():
+    cfg, bundle, params, _ = _bundle()
+
+    def burst(scheduler):
+        eng = ServeEngine(bundle, params, batch_size=3, max_len=64, window=4,
+                          prefill_chunk=8, scheduler=scheduler)
+        rng = np.random.default_rng(5)
+        # the decode request must outlive both prefills: while any slot is
+        # actively decoding, every round ends in a decode dispatch and the
+        # chunks-between-windows counter is a true per-window burst
+        decode = Request(rid=0, prompt=rng.integers(
+            1, cfg.vocab_size, size=8).astype(np.int32), max_new_tokens=40)
+        eng.add_request(decode)
+        while eng._pending:                 # rid 0 fully prefilled, decoding
+            eng.step()
+        for rid in (1, 2):
+            eng.add_request(Request(rid=rid, prompt=rng.integers(
+                1, cfg.vocab_size, size=32).astype(np.int32),
+                max_new_tokens=2))
+        eng.run_to_completion(max_ticks=5_000)
+        return eng.stats.prefill_burst_max
+
+    free = burst(None)
+    capped = burst(Scheduler(SchedulerConfig(prefill_chunks_per_tick=1)))
+    assert free >= 2                        # two pending slots advance/round
+    assert capped == 1                      # SLO bound honored
+
+
+def test_reset_clears_scheduler_and_spec_state():
+    """Satellite: a warm benchmark drain after a preempted speculative
+    drain must start with zeroed accept-rate stats, virgin PRNG keys, no
+    resume records, and an empty host tier."""
+    cfg, bundle, params, draft_params = _bundle()
+    if "spec" not in _STATE:
+        _STATE["spec"] = ServeEngine(
+            bundle, params, batch_size=2, max_len=64, window=4,
+            prefill_chunk=8, sampling=SamplingParams(temperature=0.9),
+            seed=3, draft_bundle=bundle, draft_params=draft_params, spec_k=3)
+    eng = _STATE["spec"]
+    eng.reset()
+    reqs = _mk_requests()
+    for r in reqs:
+        eng.add_request(r)
+    while not any(r is not None and r.out_tokens for r in eng.slots):
+        eng.step()
+    victim = next(i for i, r in enumerate(eng.slots)
+                  if r is not None and r.out_tokens)
+    eng.preempt(victim, mode="swap")
+    eng.run_to_completion(max_ticks=5_000)
+    s = eng.stats
+    assert s.spec_steps > 0 and s.draft_tokens > 0
+    assert s.preemptions == 1 and s.swap_outs == 1
+
+    eng.reset()
+    s = eng.stats
+    assert (s.spec_steps, s.draft_tokens, s.draft_accepted) == (0, 0, 0)
+    assert (s.preemptions, s.swap_outs, s.swap_ins, s.swap_bytes) == (0,) * 4
+    assert s.accept_rate == 0.0
+    assert not eng._resume and len(eng.host_tier) == 0
+    assert not np.asarray(eng.keys).any()   # per-slot key state wiped
+    # and the warm drain still matches a cold one token-for-token
+    got = _drain(eng, _mk_requests())
+    eng.reset()
+    again = _drain(eng, _mk_requests())
+    assert got == again
+
+
+# ---------------------------------------------------------------------------
+# seeded chaos twins (hypothesis-free; also exercised by `-m chaos` in CI)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.chaos
+@pytest.mark.parametrize("mode", [None, "swap", "recompute"])
+def test_chaos_drain_token_identical(mode):
+    ref = _reference()
+    eng = _engine("eng")
+    reqs = _mk_requests()
+    ch = ChaosEngine(eng, ChaosConfig(seed=5, preempt_prob=0.5,
+                                      exhaust_prob=0.3, corrupt_prob=0.4,
+                                      mode=mode))
+    for r in reqs:
+        ch.add_request(r)
+    ch.run_to_completion()
+    assert {r.rid: list(r.out_tokens) for r in reqs} == ref
+    assert eng.stats.preemptions > 0        # the storm actually hit
+
+
+@pytest.mark.chaos
+def test_chaos_sampled_drain_token_identical():
+    eng = _engine("sampled", sampling=SamplingParams(temperature=0.9,
+                                                     top_p=0.95), seed=3)
+    ref = _drain(eng, _mk_requests())
+    eng.reset()
+    reqs = _mk_requests()
+    ch = ChaosEngine(eng, ChaosConfig(seed=9, preempt_prob=0.5,
+                                      exhaust_prob=0.3, corrupt_prob=0.3))
+    for r in reqs:
+        ch.add_request(r)
+    ch.run_to_completion()
+    assert {r.rid: list(r.out_tokens) for r in reqs} == ref
+    assert eng.stats.preemptions > 0
+
+
+@pytest.mark.chaos
+def test_chaos_swap_latency_injection():
+    ref = _reference()
+    eng = _engine("eng")
+    reqs = _mk_requests()
+    ch = ChaosEngine(eng, ChaosConfig(seed=11, preempt_prob=0.5,
+                                      mode="swap", swap_latency_s=0.002))
+    for r in reqs:
+        ch.add_request(r)
+    ch.run_to_completion()
+    assert {r.rid: list(r.out_tokens) for r in reqs} == ref
+    eng.host_tier.latency_s = 0.0           # don't slow later tests

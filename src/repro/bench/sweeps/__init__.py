@@ -1,9 +1,10 @@
-"""The sixteen registered sweeps — one module per paper table/figure, plus
-the PR 3 tune->execute proof sweeps (``serve`` + ``kernel_plan``), the
-PR 4 paged-KV serving sweep (``paged_serve``), the PR 6 speculative
+"""The seventeen registered sweeps — one module per paper table/figure,
+plus the PR 3 tune->execute proof sweeps (``serve`` + ``kernel_plan``),
+the PR 4 paged-KV serving sweep (``paged_serve``), the PR 6 speculative
 draft->verify sweep (``spec_serve``), the PR 7 sharded-serving sweep
-(``dist_serve``), and the PR 8 preemptive-scheduling sweep
-(``preempt_serve``).
+(``dist_serve``), the PR 8 preemptive-scheduling sweep
+(``preempt_serve``), and the PR 9 fault-tolerant cluster front-end sweep
+(``cluster_serve``).
 
 Importing this package populates :data:`repro.bench.registry.REGISTRY` in
 the paper's presentation order.  ``benchmarks/bench_*.py`` are thin shims
@@ -13,11 +14,11 @@ any sweep programmatically via :func:`repro.bench.run_sweeps`.
 from repro.bench.sweeps import (  # noqa: F401  (import order == run order)
     latency, outstanding, unit_size, stride, burst, num_kernels,
     random_access, database, conv, roofline, serve, paged_serve, spec_serve,
-    dist_serve, preempt_serve,
+    dist_serve, preempt_serve, cluster_serve,
 )
 
 __all__ = [
     "latency", "outstanding", "unit_size", "stride", "burst", "num_kernels",
     "random_access", "database", "conv", "roofline", "serve", "paged_serve",
-    "spec_serve", "dist_serve", "preempt_serve",
+    "spec_serve", "dist_serve", "preempt_serve", "cluster_serve",
 ]

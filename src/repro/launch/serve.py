@@ -18,7 +18,6 @@ TP adds memory channels behind one request stream while DP adds whole
 ports, and the admission queue is the host-side arbiter between them.
 """
 import argparse
-import dataclasses
 import sys
 import time
 from typing import List, Optional, Sequence
@@ -28,8 +27,13 @@ import numpy as np
 
 from repro.configs import ARCHS, smoke_config
 from repro.models import RuntimeFlags, build
-from repro.serve import Request, ServeEngine, ServeStats
+from repro.serve import Request, ServeEngine, ServeStats, aggregate_stats
 from repro.train import CheckpointManager
+
+# request i's scheduler class under each --priority mix (matches
+# examples/serve_lm.py)
+_PRIORITY_MIX = {"off": lambda i: 0, "low": lambda i: 0,
+                 "high": lambda i: 1, "mixed": lambda i: i % 2}
 
 
 def device_groups(tp: int, dp: int,
@@ -56,6 +60,7 @@ class ReplicaPool:
         if not engines:
             raise ValueError("ReplicaPool needs at least one engine")
         self.engines = list(engines)
+        self.routed = [0] * len(self.engines)   # per-replica request counts
 
     @staticmethod
     def _load(eng: ServeEngine) -> int:
@@ -66,32 +71,36 @@ class ReplicaPool:
         i = min(range(len(self.engines)),
                 key=lambda j: self._load(self.engines[j]))
         self.engines[i].add_request(req)
+        self.routed[i] += 1
         return i
 
-    def drain(self, max_ticks: int = 100_000) -> ServeStats:
-        """Tick every replica that still has work until all are idle."""
-        ticks = 0
-        while True:
+    def drain(self, max_rounds: int = 100_000) -> ServeStats:
+        """Tick every replica that still has work until all are idle.
+        The budget counts drain *rounds* — one step of every busy replica
+        — so the effective per-replica budget no longer shrinks as ``dp``
+        grows."""
+        for _ in range(max_rounds):
             busy = [e for e in self.engines
                     if e.queue or any(s is not None for s in e.slots)]
             if not busy:
                 return self.stats()
             for eng in busy:
                 eng.step()
-                ticks += 1
-                if ticks > max_ticks:
-                    raise RuntimeError(
-                        f"replica pool failed to drain in {max_ticks} ticks")
+        busy = [e for e in self.engines
+                if e.queue or any(s is not None for s in e.slots)]
+        agg = self.stats()
+        raise RuntimeError(
+            f"replica pool failed to drain in {max_rounds} rounds: "
+            f"{len(busy)}/{len(self.engines)} replicas busy, "
+            f"{sum(len(e.queue) for e in self.engines)} queued; partial "
+            f"aggregate: tokens_out={agg.tokens_out}, "
+            f"prefills={agg.prefills}, decode_steps={agg.decode_steps}, "
+            f"pool_stalls={agg.pool_stalls}")
 
     def stats(self) -> ServeStats:
         """Aggregate counters across replicas (sums every ServeStats
         field — peaks sum too: the pool's total live-page commitment)."""
-        agg = ServeStats()
-        for eng in self.engines:
-            for f in dataclasses.fields(ServeStats):
-                setattr(agg, f.name,
-                        getattr(agg, f.name) + getattr(eng.stats, f.name))
-        return agg
+        return aggregate_stats(self.engines)
 
 
 def build_pool(bundle, params, *, tp: int = 1, dp: int = 1,
@@ -129,6 +138,16 @@ def main(argv=None):
                     help="tensor-parallel width per engine replica")
     ap.add_argument("--dp", type=int, default=1,
                     help="independent engine replicas (device groups)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="traffic + sampling PRNG seed")
+    ap.add_argument("--priority", default="off",
+                    choices=sorted(_PRIORITY_MIX),
+                    help="scheduler priority classes for the request mix "
+                         "(matches examples/serve_lm.py)")
+    ap.add_argument("--cache", default="auto",
+                    choices=("auto", "dense", "paged"),
+                    help="KV backend; auto lets the engine pick (paged is "
+                         "forced whenever tp*dp > 1)")
     args = ap.parse_args(argv)
 
     cfg = smoke_config(ARCHS[args.arch]) if args.smoke else ARCHS[args.arch]
@@ -143,15 +162,19 @@ def main(argv=None):
     else:
         params = bundle.init(jax.random.PRNGKey(0))
 
-    pool = build_pool(bundle, params, tp=args.tp, dp=args.dp,
-                      batch_size=args.batch, max_len=args.max_len,
-                      window=args.window)
-    rng = np.random.default_rng(0)
+    engine_kw = dict(batch_size=args.batch, max_len=args.max_len,
+                     window=args.window, seed=args.seed)
+    if args.cache != "auto":
+        engine_kw["cache_backend"] = args.cache
+    pool = build_pool(bundle, params, tp=args.tp, dp=args.dp, **engine_kw)
+    rng = np.random.default_rng(args.seed)
+    mix = _PRIORITY_MIX[args.priority]
     for i in range(args.requests):
         prompt = rng.integers(0, cfg.vocab_size,
                               size=int(rng.integers(4, 24))).astype(np.int32)
         pool.submit(Request(rid=i, prompt=prompt,
-                            max_new_tokens=args.max_new))
+                            max_new_tokens=args.max_new,
+                            priority=mix(i)))
     t0 = time.perf_counter()
     stats = pool.drain()
     dt = time.perf_counter() - t0
@@ -160,6 +183,8 @@ def main(argv=None):
           f"{len(pool.engines)} replica(s) x tp={args.tp}, "
           f"prefills={stats.prefills}, decode_steps={stats.decode_steps}, "
           f"decode_dispatches={stats.decode_dispatches}")
+    print("per-replica requests: "
+          + ", ".join(f"r{i}={n}" for i, n in enumerate(pool.routed)))
     return 0
 
 

@@ -1,4 +1,8 @@
-from repro.serve.chaos import ChaosConfig, ChaosEngine  # noqa: F401
+from repro.serve.chaos import (ChaosConfig, ChaosEngine,  # noqa: F401
+                               ClusterChaos, ClusterChaosConfig, fault_rng)
+from repro.serve.cluster import (ClusterConfig, ClusterFrontEnd,  # noqa: F401
+                                 ClusterStats, Replica, TransientAdmitError,
+                                 aggregate_stats)
 from repro.serve.engine import Request, ServeEngine, ServeStats  # noqa: F401
 from repro.serve.hosttier import HostKVTier  # noqa: F401
 from repro.serve.kvcache import (PageAllocator, PagedKVCache,  # noqa: F401
@@ -7,3 +11,4 @@ from repro.serve.sampling import (GREEDY, SamplingParams,  # noqa: F401
                                   mask_logits, sample_token, sample_tokens)
 from repro.serve.scheduler import (PRIORITY_HIGH, PRIORITY_LOW,  # noqa: F401
                                    Scheduler, SchedulerConfig, SwapCostModel)
+from repro.serve.traffic import TrafficConfig, generate_traffic  # noqa: F401

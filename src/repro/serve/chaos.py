@@ -21,15 +21,43 @@ hypothesis), injects per round:
 After every round the wrapper asserts allocator conservation (live +
 free == pool, every refcount >= 1, every table page live) — faults may
 slow the drain, never leak a page.
+
+:class:`ClusterChaos` is the replica-scale sibling: whole-replica
+crashes, brownouts (stalled rounds + slow health probes), and transient
+admission refusals, injected into a
+:class:`~repro.serve.cluster.ClusterFrontEnd` per virtual-clock round.
+Every fault kind — engine-level and cluster-level — draws from its own
+seed-derived sub-stream (:func:`fault_rng`), so kinds compose without
+perturbing each other's schedules.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Optional
+from typing import List, Optional, Tuple
 
 import numpy as np
 
 from repro.serve.kvcache import PoolExhausted
+
+# Stable fault-kind ids: each kind draws from its own seed-derived
+# sub-stream keyed (seed, kind-id) through a SeedSequence, so adding a new
+# fault kind (the cluster faults below) can NEVER perturb an existing
+# kind's schedule — the PR 8 chaos expectations survive unchanged.  Only
+# append here; renumbering an existing kind reshuffles its schedule.
+_FAULT_KIND_IDS = {
+    "storm": 0,       # per-slot preemption storms   (ChaosEngine)
+    "exhaust": 1,     # phantom free-list grabs      (ChaosEngine)
+    "corrupt": 2,     # host-tier byte flips         (ChaosEngine)
+    "crash": 3,       # whole-replica crash          (ClusterChaos)
+    "brownout": 4,    # replica stall / slow probes  (ClusterChaos)
+    "admit": 5,       # transient admission refusals (ClusterChaos)
+}
+
+
+def fault_rng(seed: int, kind: str) -> np.random.Generator:
+    """The sub-generator for one fault kind under one chaos seed."""
+    return np.random.default_rng(
+        np.random.SeedSequence((seed, _FAULT_KIND_IDS[kind])))
 
 
 @dataclass(frozen=True)
@@ -50,7 +78,8 @@ class ChaosEngine:
     def __init__(self, eng, cfg: ChaosConfig = ChaosConfig()):
         self.eng = eng
         self.cfg = cfg
-        self.rng = np.random.default_rng(cfg.seed)
+        self.rngs = {k: fault_rng(cfg.seed, k)
+                     for k in ("storm", "exhaust", "corrupt")}
         self.faults = 0               # injected preemptions
         self.exhausts = 0             # phantom grabs
         self.corruptions = 0          # host-tier bytes flipped
@@ -87,7 +116,7 @@ class ChaosEngine:
                    else min(free, alloc.ring_slots))
             if cap < 1:
                 continue
-            k = int(self.rng.integers(1, cap + 1))
+            k = int(self.rngs["exhaust"].integers(1, cap + 1))
             rid = self._next_phantom
             self._next_phantom -= 1
             alloc.alloc(rid)
@@ -100,7 +129,7 @@ class ChaosEngine:
         for i, req in enumerate(eng.slots):
             if req is None or req.done:
                 continue
-            if self.rng.random() < self.cfg.preempt_prob:
+            if self.rngs["storm"].random() < self.cfg.preempt_prob:
                 eng.preempt(i, mode=self.cfg.mode)
                 self.faults += 1
 
@@ -109,7 +138,7 @@ class ChaosEngine:
         if tier is None or self.cfg.corrupt_prob <= 0:
             return
         for rid in tier.rids():
-            if self.rng.random() < self.cfg.corrupt_prob:
+            if self.rngs["corrupt"].random() < self.cfg.corrupt_prob:
                 tier.corrupt(rid)
                 self.corruptions += 1
 
@@ -141,7 +170,7 @@ class ChaosEngine:
         self._release_phantoms()
         self._storm()
         self._corrupt()
-        if self.rng.random() < self.cfg.exhaust_prob:
+        if self.rngs["exhaust"].random() < self.cfg.exhaust_prob:
             self._grab_phantom()
         eng._admit()
         if not any(s is not None for s in eng.slots):
@@ -170,3 +199,88 @@ class ChaosEngine:
             f"chaos drain did not converge in {max_rounds} rounds "
             f"(faults={self.faults}, exhausts={self.exhausts}, "
             f"queue={len(self.eng.queue)})")
+
+
+# ----------------------------------------------------------------------
+# cluster-scale faults
+# ----------------------------------------------------------------------
+@dataclass(frozen=True)
+class ClusterChaosConfig:
+    """Cluster fault mix for :class:`ClusterChaos`.  Probabilities are
+    per replica, per round; ``kill_at`` pins explicit faults to rounds —
+    ``(round, replica_index, kind)`` with kind one of ``"crash"`` /
+    ``"brownout"`` / ``"admit"`` — for reproducible kill schedules the
+    bench gates replay."""
+    seed: int = 0
+    crash_prob: float = 0.0        # replica goes dark (device state lost)
+    crash_rounds: int = 6          # rounds a crashed replica stays dark
+    brownout_prob: float = 0.0     # replica stalls, probes turn slow
+    brownout_rounds: int = 4
+    brownout_latency_s: float = 1.0   # what the health probe observes
+    admit_prob: float = 0.0        # transient admission refusal queued
+    kill_at: Tuple[Tuple[int, int, str], ...] = ()
+    max_down: Optional[int] = None    # fault budget; default n_replicas - 1
+
+
+class ClusterChaos:
+    """Seeded replica-scale fault injector for a cluster front end.
+
+    Pass as ``chaos=`` to :meth:`ClusterFrontEnd.run` — :meth:`inject`
+    fires at the top of every virtual-clock round and arms faults on the
+    :class:`~repro.serve.cluster.Replica` wrappers (crash/stall timers,
+    queued admission refusals).  Each fault kind draws from its own
+    ``(seed, kind)`` sub-stream (see :func:`fault_rng`), and every
+    per-replica draw happens whether or not the fault fires, so a fault
+    schedule is a pure function of the config — independent of cluster
+    state.  ``max_down`` keeps at least one replica standing (liveness:
+    chaos may slow the drain, never wedge it)."""
+
+    def __init__(self, cfg: ClusterChaosConfig = ClusterChaosConfig()):
+        self.cfg = cfg
+        self.rngs = {k: fault_rng(cfg.seed, k)
+                     for k in ("crash", "brownout", "admit")}
+        self.crashes = 0
+        self.brownouts = 0
+        self.admit_faults = 0
+
+    def _down(self, front) -> int:
+        return sum(1 for r in front.replicas
+                   if r.crash_rounds > 0 or r.stall_rounds > 0
+                   or r.state == "quarantined")
+
+    def _budget(self, front) -> int:
+        cap = self.cfg.max_down
+        if cap is None:
+            cap = len(front.replicas) - 1
+        return cap - self._down(front)
+
+    def fire(self, rep, kind: str) -> None:
+        if kind == "crash":
+            rep.crash_rounds = self.cfg.crash_rounds
+            self.crashes += 1
+        elif kind == "brownout":
+            rep.stall_rounds = self.cfg.brownout_rounds
+            rep.probe_latency_s = self.cfg.brownout_latency_s
+            self.brownouts += 1
+        elif kind == "admit":
+            rep.admit_faults += 1
+            self.admit_faults += 1
+        else:
+            raise ValueError(f"unknown cluster fault kind {kind!r}")
+
+    def inject(self, front) -> None:
+        now = front.round
+        for rnd, idx, kind in self.cfg.kill_at:
+            if rnd == now:
+                self.fire(front.replicas[idx], kind)
+        for rep in front.replicas:
+            # draw-before-gate: streams advance identically whatever fires
+            if (self.rngs["crash"].random() < self.cfg.crash_prob
+                    and rep.crash_rounds == 0 and self._budget(front) > 0):
+                self.fire(rep, "crash")
+            if (self.rngs["brownout"].random() < self.cfg.brownout_prob
+                    and rep.stall_rounds == 0 and rep.crash_rounds == 0
+                    and self._budget(front) > 0):
+                self.fire(rep, "brownout")
+            if self.rngs["admit"].random() < self.cfg.admit_prob:
+                self.fire(rep, "admit")

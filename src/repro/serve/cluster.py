@@ -1,0 +1,471 @@
+"""Fault-tolerant cluster front end: the host-side arbiter over engine
+replicas.
+
+In the paper's framing TP adds memory channels behind one request stream
+while DP adds whole *ports*, and sustained throughput is set by how the
+arbitration layer behaves under contention and pathological mixes — not
+by peak per-port bandwidth.  :class:`ClusterFrontEnd` is that arbiter,
+promoted from the bare least-loaded loop in ``launch/serve.py`` to a
+router that survives the ports themselves failing:
+
+- **health probes + circuit breaker** — every round each replica is
+  probed; consecutive failures (crash) or slow probes (brownout) trip
+  the replica into ``QUARANTINED``, its queued AND in-flight requests
+  are evacuated and re-routed to survivors, and consecutive healthy
+  probes close the circuit again.
+- **lossless failover** — evacuation reuses the PR 8 preemption
+  machinery (`ServeEngine.evacuate` / `ServeEngine.adopt`): a failed-over
+  request resumes on a survivor via recompute-resume, and because the
+  per-``(seed, rid)`` PRNG streams depend only on the request, the
+  failed-over drain is **bitwise identical** to the undisturbed run.
+- **cache-aware routing** — replicas are scored by predicted
+  prefix-cache hit (``PrefixIndex.match_len`` over the request's chain
+  hashes — rtp-llm's flexlb KV-status map is the exemplar) minus a
+  committed-load term, with suspect replicas penalized.
+- **deadline-aware admission** — requests carry a ``deadline`` (virtual
+  rounds) and an SLO class (``priority``); when the predicted queue
+  delay blows the deadline the router degrades (`max_new_tokens` shrunk
+  to fit, floor-guarded) or sheds low-priority requests instead of
+  wedging the pool.  High-priority requests are never shed — they route
+  at risk and are counted in ``slo_risk``.
+- **virtual clock** — one round = probe, route, one admit+decode window
+  per healthy replica.  Scheduling depends only on request lengths and
+  budgets, never on token *values*, so TTFT/TPOT percentiles measured
+  in rounds are deterministic bench rows on any host.
+
+Transient admission refusals (:class:`TransientAdmitError`) get bounded
+retry with per-replica exponential backoff; a request that exhausts its
+retries is shed, never silently dropped.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from dataclasses import dataclass
+from typing import Deque, Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.serve.engine import Request, ServeEngine, ServeStats
+from repro.serve.kvcache import page_hashes
+from repro.serve.scheduler import PRIORITY_HIGH
+
+# replica health states (circuit breaker)
+HEALTHY = "healthy"
+SUSPECT = "suspect"          # strikes accumulating; routed only as last resort
+QUARANTINED = "quarantined"  # circuit open: evacuated, probing for recovery
+
+
+class TransientAdmitError(RuntimeError):
+    """A replica refused an admission transiently (RPC blip, admission
+    hiccup).  The router retries with bounded backoff — never an outage,
+    never a silent drop."""
+
+
+def aggregate_stats(engines: Iterable[ServeEngine]) -> ServeStats:
+    """Sum every ServeStats field across engines (peaks sum too: the
+    total live-page commitment across the pool)."""
+    agg = ServeStats()
+    for eng in engines:
+        for f in dataclasses.fields(ServeStats):
+            setattr(agg, f.name,
+                    getattr(agg, f.name) + getattr(eng.stats, f.name))
+    return agg
+
+
+@dataclass(frozen=True)
+class ProbeResult:
+    ok: bool
+    latency_s: float = 0.0
+
+
+@dataclass(frozen=True)
+class ClusterConfig:
+    # -- health / circuit breaker ---------------------------------------
+    fail_threshold: int = 2      # consecutive failed probes -> quarantine
+    slow_threshold: int = 3      # consecutive slow probes   -> quarantine
+    slow_probe_s: float = 0.1    # probe latency beyond this is a strike
+    recovery_probes: int = 2     # consecutive clean probes close the circuit
+    # -- cache-aware routing --------------------------------------------
+    cache_weight: float = 4.0    # per predicted prefix-hit token
+    load_weight: float = 1.0     # per committed pending token-unit
+    suspect_penalty: float = 1e5  # added cost while a replica is SUSPECT
+    max_replica_queue: int = 4   # routed-but-unadmitted requests per replica
+    # -- transient-admission retry policy -------------------------------
+    max_retries: int = 8         # per request, across replicas
+    backoff_base: int = 1        # rounds; doubles per consecutive refusal
+    backoff_cap: int = 8
+    # -- deadline admission ---------------------------------------------
+    degrade: bool = True         # shrink max_new_tokens to fit a deadline
+    degrade_floor: int = 1       # never degrade below this many tokens
+
+
+@dataclass
+class ClusterStats:
+    """Router-level counters (engine-level counters stay in ServeStats)."""
+    submitted: int = 0
+    routed: int = 0           # successful dispatches (failovers re-count)
+    completed: int = 0
+    shed: int = 0             # deadline- or retry-shed, never served
+    degraded: int = 0         # max_new_tokens shrunk to fit a deadline
+    slo_risk: int = 0         # high-priority routed despite predicted miss
+    failovers: int = 0        # requests moved off a quarantined replica
+    quarantines: int = 0
+    recoveries: int = 0
+    probe_failures: int = 0
+    slow_probes: int = 0
+    retries: int = 0          # transient-admission refusals absorbed
+    rounds: int = 0           # virtual clock at drain
+
+
+@dataclass
+class _Lat:
+    """Per-request latency record in virtual rounds."""
+    arrival: int
+    first: Optional[int] = None    # round the first token appeared (TTFT)
+    finish: Optional[int] = None
+    tokens: int = 0
+
+
+class Replica:
+    """One engine port behind the router: health/backoff bookkeeping plus
+    the fault-injection surface :class:`~repro.serve.chaos.ClusterChaos`
+    arms (crash/stall timers, queued admission refusals).  A crashed
+    replica loses device state but keeps host bookkeeping — exactly the
+    split that makes recompute-based failover lossless."""
+
+    def __init__(self, index: int, engine: ServeEngine):
+        self.index = index
+        self.engine = engine
+        self.reset()
+
+    def reset(self) -> None:
+        self.state = HEALTHY
+        self.failed_probes = 0
+        self.slow_streak = 0
+        self.ok_probes = 0
+        self.admit_streak = 0       # consecutive transient refusals
+        self.backoff_until = 0      # router round before which no routing
+        self.routed = 0             # requests dispatched here (DP balance)
+        # fault-injection surface (ClusterChaos writes these)
+        self.crash_rounds = 0
+        self.stall_rounds = 0
+        self.probe_latency_s = 0.0
+        self.admit_faults = 0
+
+    # -- fault surface --------------------------------------------------
+    @property
+    def crashed(self) -> bool:
+        return self.crash_rounds > 0
+
+    def tick_faults(self) -> None:
+        if self.crash_rounds > 0:
+            self.crash_rounds -= 1
+        if self.stall_rounds > 0:
+            self.stall_rounds -= 1
+            if self.stall_rounds == 0:
+                self.probe_latency_s = 0.0
+
+    # -- the router's view ----------------------------------------------
+    def probe(self) -> ProbeResult:
+        if self.crashed:
+            return ProbeResult(False, float("inf"))
+        return ProbeResult(True, self.probe_latency_s)
+
+    def submit(self, req: Request) -> None:
+        if self.admit_faults > 0:
+            self.admit_faults -= 1
+            raise TransientAdmitError(
+                f"replica {self.index} refused rid {req.rid}")
+        self.engine.adopt(req)
+        self.routed += 1
+
+    def step_round(self) -> None:
+        """One admit + decode-window round, unless dark or stalled."""
+        if self.crashed or self.stall_rounds > 0:
+            return
+        eng = self.engine
+        eng._admit()
+        if any(s is not None for s in eng.slots):
+            eng.decode_many(eng.window)
+
+    def load(self) -> int:
+        eng = self.engine
+        return len(eng.queue) + sum(s is not None for s in eng.slots)
+
+    def pending_units(self) -> int:
+        """Token-units of work already committed here: remaining new
+        tokens plus the prefill chunks still owed, over queue + slots.
+        This is the router's queue-delay currency — it depends only on
+        lengths and budgets, never on token values."""
+        eng = self.engine
+        chunk = getattr(eng, "prefill_chunk", None) or eng.max_len
+        units = 0
+        for req in list(eng.queue) + [s for s in eng.slots if s is not None]:
+            units += max(0, req.max_new_tokens - len(req.out_tokens))
+            units += -(-len(req.prompt) // chunk)
+        return units
+
+    def predicted_hit_tokens(self, prompt: np.ndarray) -> int:
+        """Prefix-cache tokens this replica would serve for ``prompt`` —
+        the flexlb-style KV-status peek, priced from the same chain
+        hashes admission uses (full pages only, and never the final
+        page: the engine re-feeds the last prompt token)."""
+        eng = self.engine
+        prefix = getattr(eng, "prefix", None)
+        if prefix is None:
+            return 0
+        usable = (len(prompt) - 1) // eng.page
+        if usable < 1:
+            return 0
+        hashes = page_hashes(np.asarray(prompt, np.int32), eng.page)
+        return prefix.match_len(hashes[:usable], eng.alloc) * eng.page
+
+
+class ClusterFrontEnd:
+    """The DP arbiter: submit requests (or an open-loop arrival
+    schedule), :meth:`run` the virtual clock until drained, read
+    :meth:`stats` / :meth:`percentiles`.  All replicas must share the
+    sampling seed — per-``(seed, rid)`` streams are what make
+    cross-replica failover lossless."""
+
+    def __init__(self, engines: Sequence[ServeEngine],
+                 config: Optional[ClusterConfig] = None):
+        if not engines:
+            raise ValueError("ClusterFrontEnd needs at least one engine")
+        if len({e.seed for e in engines}) > 1:
+            raise ValueError(
+                "replicas must share the sampling seed: per-(seed, rid) "
+                "PRNG streams are what make failover lossless")
+        self.cfg = config or ClusterConfig()
+        self.replicas = [Replica(i, e) for i, e in enumerate(engines)]
+        self._init_state()
+
+    def _init_state(self) -> None:
+        self.round = 0
+        self.backlog: Deque[Request] = deque()
+        self.cstats = ClusterStats()
+        self.owner: Dict[int, int] = {}      # rid -> replica index (last)
+        self.shed_requests: List[Request] = []
+        self._live: Dict[int, Request] = {}  # rid -> unfinished, tracked
+        self._lat: Dict[int, _Lat] = {}
+        self._retries: Dict[int, int] = {}
+
+    def reset(self) -> None:
+        """Fresh run over the same engines (jit caches survive)."""
+        for rep in self.replicas:
+            rep.engine.reset()
+            rep.reset()
+        self._init_state()
+
+    @property
+    def engines(self) -> List[ServeEngine]:
+        return [rep.engine for rep in self.replicas]
+
+    def stats(self) -> ServeStats:
+        return aggregate_stats(self.engines)
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.cstats.submitted += 1
+        self._lat[req.rid] = _Lat(arrival=self.round)
+        self._live[req.rid] = req
+        self.backlog.append(req)
+
+    # -- health ---------------------------------------------------------
+    def _quarantine(self, rep: Replica, *, crash: bool) -> None:
+        """Open the circuit: evacuate everything (queued + in-flight) for
+        re-routing.  On a *crash* the HBM contents are gone — drop the
+        prefix index's pins too, so recovery never serves ghost pages."""
+        rep.state = QUARANTINED
+        rep.ok_probes = 0
+        self.cstats.quarantines += 1
+        moved = rep.engine.evacuate()
+        prefix = getattr(rep.engine, "prefix", None)
+        if crash and prefix is not None and rep.engine.alloc is not None:
+            prefix.evict_unused(rep.engine.alloc)
+        live = [r for r in moved if not r.done and r.rid in self._live]
+        self.cstats.failovers += len(live)
+        for r in reversed(live):      # failovers re-route ahead of backlog
+            self.backlog.appendleft(r)
+
+    def _probe_round(self) -> None:
+        cfg = self.cfg
+        for rep in self.replicas:
+            pr = rep.probe()
+            if not pr.ok:
+                self.cstats.probe_failures += 1
+                rep.slow_streak = rep.ok_probes = 0
+                rep.failed_probes += 1
+                if rep.state == QUARANTINED:
+                    continue
+                if rep.failed_probes >= cfg.fail_threshold:
+                    self._quarantine(rep, crash=True)
+                else:
+                    rep.state = SUSPECT
+            elif pr.latency_s > cfg.slow_probe_s:
+                self.cstats.slow_probes += 1
+                rep.failed_probes = rep.ok_probes = 0
+                rep.slow_streak += 1
+                if rep.state == QUARANTINED:
+                    continue
+                if rep.slow_streak >= cfg.slow_threshold:
+                    self._quarantine(rep, crash=False)
+                else:
+                    rep.state = SUSPECT
+            else:
+                rep.failed_probes = rep.slow_streak = 0
+                if rep.state == QUARANTINED:
+                    rep.ok_probes += 1
+                    if rep.ok_probes >= cfg.recovery_probes:
+                        rep.state = HEALTHY
+                        self.cstats.recoveries += 1
+                elif rep.state == SUSPECT:
+                    rep.state = HEALTHY
+
+    # -- routing --------------------------------------------------------
+    def _routable(self, rep: Replica) -> bool:
+        return (rep.state != QUARANTINED
+                and self.round >= rep.backoff_until
+                and rep.load() < rep.engine.bsz + self.cfg.max_replica_queue)
+
+    def _score(self, rep: Replica, req: Request) -> float:
+        s = (self.cfg.cache_weight * rep.predicted_hit_tokens(req.prompt)
+             - self.cfg.load_weight * rep.pending_units())
+        if rep.state == SUSPECT:
+            s -= self.cfg.suspect_penalty
+        return s
+
+    def _shed(self, req: Request) -> None:
+        self.cstats.shed += 1
+        self.shed_requests.append(req)
+        self._live.pop(req.rid, None)
+
+    def _admit_deadline(self, req: Request, rep: Replica) -> bool:
+        """Deadline check against the chosen replica's predicted queue
+        delay.  Returns False when the request was shed instead."""
+        if req.deadline is None:
+            return True
+        if req.out_tokens:
+            return True   # mid-flight failover holds delivered tokens:
+                          # re-routing must never shed it
+        eng = rep.engine
+        cap = max(1, eng.bsz * eng.window)       # token-units per round
+        chunk = getattr(eng, "prefill_chunk", None) or eng.max_len
+        prompt_cost = -(-len(req.prompt) // chunk)
+        slack = ((req.deadline - self.round) * cap
+                 - rep.pending_units() - prompt_cost)
+        if slack >= req.max_new_tokens:
+            return True
+        if self.cfg.degrade and slack >= self.cfg.degrade_floor:
+            req.max_new_tokens = int(slack)      # graceful degradation
+            self.cstats.degraded += 1
+            return True
+        if req.priority >= PRIORITY_HIGH:
+            self.cstats.slo_risk += 1            # never shed the high class
+            return True
+        self._shed(req)
+        return False
+
+    def _route_round(self) -> None:
+        deferred: Deque[Request] = deque()
+        while self.backlog:
+            req = self.backlog.popleft()
+            cands = [r for r in self.replicas if self._routable(r)]
+            if not cands:
+                deferred.append(req)
+                deferred.extend(self.backlog)
+                self.backlog.clear()
+                break
+            rep = max(cands, key=lambda r: (self._score(r, req), -r.index))
+            if not self._admit_deadline(req, rep):
+                continue
+            try:
+                rep.submit(req)
+            except TransientAdmitError:
+                self.cstats.retries += 1
+                rep.admit_streak += 1
+                rep.backoff_until = self.round + min(
+                    self.cfg.backoff_base * (2 ** (rep.admit_streak - 1)),
+                    self.cfg.backoff_cap)
+                n = self._retries.get(req.rid, 0) + 1
+                self._retries[req.rid] = n
+                if n > self.cfg.max_retries:
+                    self._shed(req)
+                else:
+                    deferred.append(req)
+                continue
+            rep.admit_streak = 0
+            self.owner[req.rid] = rep.index
+            self.cstats.routed += 1
+        self.backlog = deferred
+
+    # -- latency accounting ---------------------------------------------
+    def _harvest(self) -> None:
+        for rid in list(self._live):
+            req = self._live[rid]
+            lat = self._lat[rid]
+            if lat.first is None and req.out_tokens:
+                lat.first = self.round
+            if req.done:
+                lat.finish = self.round
+                lat.tokens = len(req.out_tokens)
+                self.cstats.completed += 1
+                del self._live[rid]
+
+    # ------------------------------------------------------------------
+    def step(self, arrivals: Optional[Deque[Tuple[int, Request]]] = None
+             ) -> bool:
+        """One virtual-clock round.  Returns False once fully drained."""
+        if arrivals is not None:
+            while arrivals and arrivals[0][0] <= self.round:
+                self.submit(arrivals.popleft()[1])
+        self._probe_round()
+        self._route_round()
+        for rep in self.replicas:
+            if rep.state != QUARANTINED:
+                rep.step_round()
+        self._harvest()
+        for rep in self.replicas:
+            rep.tick_faults()
+        self.round += 1
+        self.cstats.rounds = self.round
+        return bool(self.backlog or self._live or arrivals)
+
+    def run(self, schedule: Sequence[Tuple[int, Request]] = (),
+            chaos=None, max_rounds: int = 100_000) -> ServeStats:
+        """Drain an open-loop arrival schedule (``(round, request)``
+        pairs) under optional :class:`ClusterChaos` injection."""
+        arrivals = deque(sorted(schedule, key=lambda t: (t[0], t[1].rid)))
+        for _ in range(max_rounds):
+            if chaos is not None:
+                chaos.inject(self)
+            if not self.step(arrivals):
+                return self.stats()
+        agg = self.stats()
+        raise RuntimeError(
+            f"cluster failed to drain in {max_rounds} rounds: "
+            f"{len(self._live)} live, {len(self.backlog)} backlogged, "
+            f"states={[r.state for r in self.replicas]}, "
+            f"aggregate tokens_out={agg.tokens_out}, "
+            f"prefills={agg.prefills}")
+
+    def percentiles(self) -> Dict[str, float]:
+        """TTFT / TPOT p50/p99 in virtual rounds over completed requests
+        — deterministic on any host (the clock never sees token values).
+        TTFT is 1-based: a request whose first token lands in its arrival
+        round scores 1, so the gated rows are always positive.  Shed
+        requests are excluded; their rate is ``cstats.shed /
+        cstats.submitted``."""
+        ttft = [lat.first - lat.arrival + 1 for lat in self._lat.values()
+                if lat.first is not None]
+        done = [lat for lat in self._lat.values() if lat.finish is not None]
+        tpot = [(lat.finish - lat.first) / max(1, lat.tokens - 1)
+                for lat in done]
+
+        def pct(xs: List[float], q: float) -> float:
+            return float(np.percentile(np.asarray(xs, np.float64), q)) \
+                if xs else 0.0
+
+        return dict(ttft_p50=pct(ttft, 50), ttft_p99=pct(ttft, 99),
+                    tpot_p50=pct(tpot, 50), tpot_p99=pct(tpot, 99))

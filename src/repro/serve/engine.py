@@ -76,6 +76,8 @@ class Request:
     prompt: np.ndarray               # (S,) int32
     max_new_tokens: int = 16
     priority: int = 0                # scheduler class: higher admits first
+    deadline: Optional[int] = None   # cluster virtual-clock round to finish
+                                     # by; None = no SLO (never shed)
     out_tokens: List[int] = field(default_factory=list)
 
     @property
@@ -543,6 +545,55 @@ class ServeEngine:
             self._arrival[req.rid] = self._arrival_seq
             self._arrival_seq += 1
         self.queue.append(req)
+
+    def adopt(self, req: Request) -> None:
+        """Admit a request that may already be mid-stream — the cluster
+        failover path.  A request evacuated from another replica carries
+        its emitted tokens on the host-side :class:`Request`; adoption
+        installs the recompute-resume record an in-engine preemption
+        would have left (re-prefill ``prompt ++ emitted[:-1]``, re-feed
+        — never re-sample — the pending last token, replay the
+        ``(seed, rid)`` PRNG chain past the emitted prefix).  Because
+        that chain depends only on the request and the engine seed, a
+        drain finished *here* is bitwise the one the failed replica
+        would have produced.  Fresh requests fall through to plain
+        :meth:`add_request`."""
+        if req.out_tokens:
+            ctx = np.concatenate(
+                [np.asarray(req.prompt, np.int32),
+                 np.asarray(req.out_tokens[:-1], np.int32)])
+            self._resume[req.rid] = _Resume("recompute", ctx,
+                                            int(req.out_tokens[-1]))
+        self.add_request(req)
+
+    def evacuate(self) -> List[Request]:
+        """Pull every unfinished request off this engine — queued AND
+        in-flight — for adoption by another replica (cluster failover
+        after a crash or quarantine).  In-flight slots preempt in
+        ``recompute`` mode; the resume records and host-tier entries this
+        engine held are *dropped*, because no device or host-tier state
+        can follow a request across replicas — :meth:`adopt` re-derives
+        resume state from the request alone.  Finished slots retire
+        normally.  The engine is left idle with every per-request page
+        released (prefix-pinned pages persist until the router decides
+        the HBM itself is gone)."""
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            if req.done:
+                self._release_finished(i)
+            else:
+                self.preempt(i, mode="recompute")
+        moved = list(self.queue)
+        self.queue.clear()
+        for r in moved:
+            res = self._resume.pop(r.rid, None)
+            if (res is not None and res.kind == "swap"
+                    and self.host_tier is not None
+                    and r.rid in self.host_tier):
+                self.host_tier.pop(r.rid)
+            self._arrival.pop(r.rid, None)
+        return moved
 
     def _free_slot(self) -> Optional[int]:
         for i, s in enumerate(self.slots):

@@ -385,6 +385,23 @@ class PrefixIndex:
             pages.append(pid)
         return pages
 
+    def match_len(self, hashes: Sequence[str],
+                  alloc: Optional[PageAllocator] = None) -> int:
+        """Longest run of leading hashes this index would serve — a pure
+        *peek* for routing decisions: unlike :meth:`lookup` it never bumps
+        the hit/miss counters and never drops stale entries, so scoring a
+        request against many replicas' indexes perturbs none of them.
+        With ``alloc`` an entry whose page lost its pin counts as a miss
+        (it could not be attached), but is left in place for ``lookup`` /
+        ``evict_unused`` to reap on the owning engine's own schedule."""
+        n = 0
+        for h in hashes:
+            pid = self._by_hash.get(h)
+            if pid is None or (alloc is not None and pid not in alloc.pinned):
+                break
+            n += 1
+        return n
+
     def register(self, h: str, pid: int) -> bool:
         """Idempotent: the first page registered for a hash wins (identical
         content by construction)."""

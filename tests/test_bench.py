@@ -190,12 +190,12 @@ def test_structural_gate_ignores_wallclock_noise(tmp_path, capsys):
 # registry smoke (the BENCH_FAST=1 campaign)
 # ---------------------------------------------------------------------------
 
-def test_registry_lists_sixteen_sweeps():
-    assert len(REGISTRY) == 16
+def test_registry_lists_seventeen_sweeps():
+    assert len(REGISTRY) == 17
     assert ORDER == ["latency", "outstanding", "unit_size", "stride", "burst",
                      "num_kernels", "random", "database", "conv", "roofline",
                      "serve", "kernel_plan", "paged_serve", "spec_serve",
-                     "dist_serve", "preempt_serve"]
+                     "dist_serve", "preempt_serve", "cluster_serve"]
 
 
 def test_registry_rejects_unknown_sweep():

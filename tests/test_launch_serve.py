@@ -1,0 +1,104 @@
+"""ReplicaPool / launcher satellites: least-loaded tie-breaking,
+full-field stats aggregation, device-overcommit rejection, and the
+round-counted drain budget (the old per-replica-step budget shrank as
+``dp`` grew)."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.launch.serve import ReplicaPool, build_pool, device_groups
+from repro.serve import Request, ServeStats
+
+
+class _Stub:
+    """Duck-typed replica: one slot, one token per step — enough surface
+    (queue / slots / stats / add_request / step) for the pool's
+    scheduling logic without a model."""
+
+    def __init__(self):
+        self.queue = []
+        self.slots = [None]
+        self.stats = ServeStats()
+
+    def add_request(self, req):
+        self.queue.append(req)
+
+    def step(self):
+        if self.slots[0] is None and self.queue:
+            self.slots[0] = self.queue.pop(0)
+        req = self.slots[0]
+        if req is None:
+            return False
+        req.out_tokens.append(0)
+        self.stats.tokens_out += 1
+        if req.done:
+            self.slots[0] = None
+        return True
+
+
+def _req(rid, new=10):
+    return Request(rid=rid, prompt=np.zeros(4, np.int32),
+                   max_new_tokens=new)
+
+
+def test_least_loaded_ties_round_robin():
+    pool = ReplicaPool([_Stub() for _ in range(3)])
+    owners = [pool.submit(_req(i)) for i in range(6)]
+    # every submit bumps that replica's load, so an idle pool round-robins
+    assert owners == [0, 1, 2, 0, 1, 2]
+    assert pool.routed == [2, 2, 2]
+
+
+def test_least_loaded_counts_in_flight_slots():
+    pool = ReplicaPool([_Stub(), _Stub()])
+    pool.engines[0].slots[0] = _req(99)      # busy slot, empty queue
+    assert pool.submit(_req(0)) == 1         # queue empty on both; 0 is busier
+
+
+def test_stats_aggregates_every_field():
+    pool = ReplicaPool([_Stub(), _Stub()])
+    for k, f in enumerate(dataclasses.fields(ServeStats)):
+        setattr(pool.engines[0].stats, f.name, k + 1)
+        setattr(pool.engines[1].stats, f.name, 2 * (k + 1))
+    agg = pool.stats()
+    for k, f in enumerate(dataclasses.fields(ServeStats)):
+        assert getattr(agg, f.name) == 3 * (k + 1), f.name
+
+
+def test_build_pool_rejects_device_overcommit():
+    n = len(jax.devices())
+    with pytest.raises(ValueError, match=f"needs {2 * n + 2} devices"):
+        device_groups(n + 1, 2)
+    # build_pool validates the layout before touching bundle/params
+    with pytest.raises(ValueError,
+                       match=f"needs {2 * n + 2} devices, have {n}"):
+        build_pool(None, None, tp=n + 1, dp=2)
+    with pytest.raises(ValueError, match="must be >= 1"):
+        device_groups(0, 1)
+
+
+def test_drain_budget_counts_rounds_not_replica_steps():
+    # 4 replicas x 10-step requests: 10 rounds of work.  The old budget
+    # counted per-replica steps (40), so max=12 would have spuriously
+    # timed out on the wider pool.
+    pool = ReplicaPool([_Stub() for _ in range(4)])
+    reqs = [_req(i) for i in range(4)]
+    for r in reqs:
+        pool.submit(r)
+    pool.drain(max_rounds=12)
+    assert all(r.done for r in reqs)
+    assert pool.stats().tokens_out == 40
+
+
+def test_drain_timeout_reports_partial_aggregate():
+    pool = ReplicaPool([_Stub(), _Stub()])
+    for i in range(2):
+        pool.submit(_req(i, new=50))
+    with pytest.raises(RuntimeError) as ei:
+        pool.drain(max_rounds=5)
+    msg = str(ei.value)
+    assert "5 rounds" in msg
+    assert "2/2 replicas busy" in msg
+    assert "tokens_out=10" in msg            # partial stats, not just a count

@@ -1,0 +1,370 @@
+"""Cluster front-end tests: traffic harness, cache-aware routing,
+deadline shedding, and lossless replica failover.
+
+Three layers:
+
+1. pure units — the open-loop traffic generator is a pure function of
+   its config, ``PrefixIndex.match_len`` is a non-mutating peek, and
+   the per-fault-kind chaos sub-RNGs are stable and independent;
+2. engine integration — ``evacuate``/``adopt`` move mid-stream requests
+   across replicas bitwise-losslessly, the router prefers the replica
+   with the predicted prefix hit, blown deadlines shed low-priority
+   requests (high degrade or route at risk), transient admission
+   refusals retry bounded;
+3. seeded cluster chaos (``-m chaos``) — replica-kill + brownout +
+   admission-fault schedules over 2-replica fronts must drain bitwise
+   identical to the undisturbed run across paged / int8 / sampled / TP
+   backends.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, override, smoke_config
+from repro.models import RuntimeFlags, build
+from repro.serve import (ClusterChaos, ClusterChaosConfig, ClusterFrontEnd,
+                         PageAllocator, PrefixIndex, Request, SamplingParams,
+                         ServeEngine, TrafficConfig, TransientAdmitError,
+                         fault_rng, generate_traffic)
+from repro.serve.scheduler import PRIORITY_HIGH
+
+# ---------------------------------------------------------------------------
+# pure units
+# ---------------------------------------------------------------------------
+
+
+def test_traffic_schedule_is_pure_and_shaped():
+    cfg = TrafficConfig(seed=3, n_requests=12, rate=1.5,
+                        burst_rate_mult=2.5, n_prefixes=2, prefix_len=8,
+                        deadline_rounds=(3, 9), high_priority_frac=0.5)
+
+    def flat(sched):
+        return [(t, r.rid, r.max_new_tokens, r.priority, r.deadline,
+                 r.prompt.tolist()) for t, r in sched]
+
+    a = generate_traffic(cfg, vocab_size=101)
+    b = generate_traffic(cfg, vocab_size=101)
+    assert flat(a) == flat(b)                # same config, same schedule
+    assert a[0][1] is not b[0][1]            # ...but fresh Request objects
+    arrivals = [t for t, _ in a]
+    assert arrivals == sorted(arrivals)
+    # Zipf sharing: fewer distinct prefix heads than requests
+    heads = {tuple(r.prompt[:cfg.prefix_len].tolist()) for _, r in a}
+    assert len(heads) <= cfg.n_prefixes < len(a)
+    for t, r in a:
+        assert 3 <= r.deadline - t <= 9      # deadline window is relative
+    prios = {r.priority for _, r in a}
+    assert prios == {0, 1}                   # both SLO classes present
+    # a different seed reshuffles the schedule
+    c = generate_traffic(TrafficConfig(**{**cfg.__dict__, "seed": 4}), 101)
+    assert flat(c) != flat(a)
+
+
+def test_prefix_match_len_is_a_pure_peek():
+    idx = PrefixIndex()
+    alloc = PageAllocator(8, 4, reserved=1)
+    alloc.alloc(1)
+    alloc.reserve(1, 8)                      # two pages
+    p0, p1 = alloc.tables[1]
+    alloc.pin(p0)
+    alloc.pin(p1)
+    idx.register("h0", p0)
+    idx.register("h1", p1)
+    assert idx.match_len(["h0", "h1"], alloc) == 2
+    assert idx.match_len(["h0", "hX", "h1"], alloc) == 1
+    assert idx.match_len(["hX"], alloc) == 0
+    assert (idx.hits, idx.misses) == (0, 0)  # counters untouched
+    alloc.unpin(p1)
+    # an unpinned page is a miss for routing purposes...
+    assert idx.match_len(["h0", "h1"], alloc) == 1
+    # ...but the stale entry is NOT reaped (that is lookup's job, on the
+    # owning engine's schedule)
+    assert len(idx) == 2
+    assert idx.match_len(["h0", "h1"]) == 2  # no alloc: trust the index
+
+
+def test_fault_rng_streams_stable_and_independent():
+    seq = [fault_rng(0, "storm").random() for _ in range(1)]
+    a = fault_rng(0, "storm")
+    b = fault_rng(0, "storm")
+    sa = [a.random() for _ in range(8)]
+    assert [b.random() for _ in range(8)] == sa   # stable per (seed, kind)
+    # adding/drawing other kinds can never perturb an existing kind
+    assert [fault_rng(0, "crash").random() for _ in range(8)] != sa
+    assert [fault_rng(0, "brownout").random() for _ in range(8)] != sa
+    assert [fault_rng(1, "storm").random() for _ in range(8)] != sa
+    assert sa[:1] == seq
+
+
+def test_fault_rng_rejects_unknown_kind():
+    with pytest.raises(KeyError):
+        fault_rng(0, "gremlin")
+
+
+# ---------------------------------------------------------------------------
+# engine integration (smoke-scale gemma-2b, cached like the scheduler tests)
+# ---------------------------------------------------------------------------
+
+FLAGS = RuntimeFlags(attn_impl="chunked", attn_bq=16, attn_bkv=16,
+                     moe_impl="dense", loss_chunk=16)
+
+_STATE = {}
+
+
+def _bundle(kv_dtype="native"):
+    key = ("bundle", kv_dtype)
+    if key not in _STATE:
+        cfg = smoke_config(ARCHS["gemma-2b"])
+        flags = (FLAGS if kv_dtype == "native"
+                 else RuntimeFlags(**{**FLAGS.__dict__,
+                                      "kv_dtype": kv_dtype}))
+        bundle = build(cfg, flags)
+        _STATE[key] = (cfg, bundle, bundle.init(jax.random.PRNGKey(7)))
+    return _STATE[key]
+
+
+_KW = dict(batch_size=2, max_len=64, window=4, prefill_chunk=8,
+           cache_backend="paged", seed=0)
+
+
+def _front(key, n=2, kv_dtype="native", config=None, **kw):
+    if key not in _STATE:
+        _, bundle, params = _bundle(kv_dtype)
+        engines = [ServeEngine(bundle, params, **{**_KW, **kw})
+                   for _ in range(n)]
+        _STATE[key] = ClusterFrontEnd(engines, config)
+    front = _STATE[key]
+    front.reset()
+    return front
+
+
+_TCFG = TrafficConfig(seed=23, n_requests=8, rate=1.2, burst_rate_mult=3.0,
+                      phase_rounds=4.0, n_prefixes=3, prefix_len=16,
+                      tail_lo=3, tail_hi=9, out_lo=6, out_hi=12)
+
+
+def _drain(front, tcfg=_TCFG, chaos=None):
+    front.reset()
+    sched = generate_traffic(tcfg, _bundle()[0].vocab_size)
+    front.run(sched, chaos=chaos)
+    assert not front.backlog and not front._live
+    return {r.rid: list(r.out_tokens) for _, r in sched}
+
+
+def test_front_end_rejects_bad_pools():
+    with pytest.raises(ValueError, match="at least one"):
+        ClusterFrontEnd([])
+    _, bundle, params = _bundle()
+    with pytest.raises(ValueError, match="share the sampling seed"):
+        ClusterFrontEnd([ServeEngine(bundle, params, **{**_KW, "seed": 0}),
+                         ServeEngine(bundle, params, **{**_KW, "seed": 1})])
+
+
+def test_evacuate_adopt_midstream_is_bitwise():
+    """The failover mechanism in isolation: march one engine mid-drain,
+    evacuate everything, adopt on a second engine sharing params+seed —
+    the finished streams must be bitwise the single-engine ones."""
+    front = _front("pair")
+    e1, e2 = front.engines
+    cfg = _bundle()[0]
+    rng = np.random.default_rng(13)
+    mk = lambda: [Request(rid=i,
+                          prompt=rng.integers(1, cfg.vocab_size, size=20)
+                          .astype(np.int32),
+                          max_new_tokens=8) for i in range(4)]
+    ref_reqs = mk()
+    for r in ref_reqs:
+        e1.add_request(r)
+    e1.run_to_completion()
+    ref = {r.rid: list(r.out_tokens) for r in ref_reqs}
+
+    front.reset()
+    rng = np.random.default_rng(13)          # regenerate identical prompts
+    reqs = mk()
+    for r in reqs:
+        e1.add_request(r)
+    for _ in range(3):                       # mid-stream: some tokens out
+        e1.step()
+    assert any(r.out_tokens for r in reqs)
+    moved = e1.evacuate()
+    assert not e1.queue and all(s is None for s in e1.slots)
+    assert {r.rid for r in moved} == {r.rid for r in reqs if not r.done}
+    for r in moved:
+        e2.adopt(r)
+    e2.run_to_completion()
+    assert {r.rid: list(r.out_tokens) for r in reqs} == ref
+    # mid-stream adoptions resumed through the PR 8 recompute path
+    assert e2.stats.recompute_resumes >= 1
+
+
+def test_router_prefers_predicted_prefix_hit():
+    front = _front("pair")
+    cfg = _bundle()[0]
+    rng = np.random.default_rng(11)
+    common = rng.integers(1, cfg.vocab_size, size=32).astype(np.int32)
+    # warm replica 1's prefix cache off-router
+    front.replicas[1].engine.add_request(
+        Request(rid=100, prompt=common.copy(), max_new_tokens=4))
+    front.replicas[1].engine.run_to_completion()
+    tail = rng.integers(1, cfg.vocab_size, size=5).astype(np.int32)
+    req = Request(rid=101, prompt=np.concatenate([common, tail]),
+                  max_new_tokens=4)
+    assert front.replicas[1].predicted_hit_tokens(req.prompt) > 0
+    assert front.replicas[0].predicted_hit_tokens(req.prompt) == 0
+    front.submit(req)
+    front.run()
+    # ties break to the LOWER index, so landing on 1 proves the cache term
+    assert front.owner[101] == 1
+    assert front.stats().prefix_hit_tokens > 0
+
+
+def test_deadline_sheds_low_priority_keeps_high():
+    front = _front("pair")
+    cfg = _bundle()[0]
+    rng = np.random.default_rng(17)
+    mk_prompt = lambda: rng.integers(1, cfg.vocab_size,
+                                     size=20).astype(np.int32)
+    for i in range(4):                       # congest both replicas
+        front.submit(Request(rid=i, prompt=mk_prompt(), max_new_tokens=24))
+    low = Request(rid=50, prompt=mk_prompt(), max_new_tokens=8, deadline=1)
+    high = Request(rid=51, prompt=mk_prompt(), max_new_tokens=8, deadline=1,
+                   priority=PRIORITY_HIGH)
+    front.submit(low)
+    front.submit(high)
+    front.run()
+    assert low in front.shed_requests and low.out_tokens == []
+    assert high.done                         # never shed, routed at risk
+    c = front.cstats
+    assert c.shed == 1 and c.slo_risk == 1
+    assert c.completed + c.shed == c.submitted
+
+
+def test_deadline_degrades_max_new_tokens_to_fit():
+    front = _front("solo", n=1)
+    cfg = _bundle()[0]
+    prompt = np.arange(1, 21, dtype=np.int32) % cfg.vocab_size
+    req = Request(rid=7, prompt=prompt, max_new_tokens=12, deadline=1)
+    # slack = 1 round * (bsz*window = 8 units) - 3 prefill chunks = 5
+    front.submit(req)
+    front.run()
+    assert front.cstats.degraded == 1 and front.cstats.shed == 0
+    assert req.max_new_tokens == 5 and req.done
+
+
+def test_transient_admit_faults_retry_bitwise():
+    front = _front("pair")
+    want = _drain(front)
+    chaos = ClusterChaos(ClusterChaosConfig(seed=2, admit_prob=0.5))
+    got = _drain(front, chaos=chaos)
+    assert got == want
+    assert chaos.admit_faults > 0 and front.cstats.retries > 0
+    assert front.cstats.shed == 0            # bounded retry, not a drop
+
+
+def test_replica_submit_raises_when_fault_armed():
+    front = _front("pair")
+    rep = front.replicas[0]
+    rep.admit_faults = 1
+    with pytest.raises(TransientAdmitError):
+        rep.submit(Request(rid=9, prompt=np.ones(4, np.int32)))
+    # the fault is consumed: the retry lands
+    rep.submit(Request(rid=9, prompt=np.ones(4, np.int32)))
+    assert rep.routed == 1
+
+
+def test_crash_failover_drains_bitwise():
+    front = _front("pair")
+    want = _drain(front)
+    chaos = ClusterChaos(ClusterChaosConfig(
+        seed=1, crash_rounds=4, kill_at=((2, 1, "crash"),)))
+    got = _drain(front, chaos=chaos)
+    assert got == want
+    c = front.cstats
+    assert chaos.crashes == 1
+    assert c.quarantines >= 1 and c.failovers >= 1
+    assert c.probe_failures >= 1 and c.recoveries >= 1
+    # PR 8 eviction machinery reused: the crashed replica's in-flight
+    # work was preempted off (recompute-resume when tokens were already
+    # out, restart when still mid-prefill)
+    s = front.stats()
+    assert s.preemptions >= 1
+    assert s.recompute_resumes + s.preempt_restarts >= 1
+
+
+def test_brownout_quarantine_drains_bitwise():
+    front = _front("pair")
+    want = _drain(front)
+    chaos = ClusterChaos(ClusterChaosConfig(
+        seed=1, brownout_rounds=5, brownout_latency_s=1.0,
+        kill_at=((1, 0, "brownout"),)))
+    got = _drain(front, chaos=chaos)
+    assert got == want
+    c = front.cstats
+    assert chaos.brownouts == 1
+    assert c.slow_probes >= 3 and c.quarantines >= 1
+
+
+def test_percentiles_are_deterministic_and_positive():
+    front = _front("pair")
+    _drain(front)
+    a = front.percentiles()
+    _drain(front)
+    assert front.percentiles() == a
+    assert all(v > 0 for v in a.values())
+    assert front.cstats.rounds > 0
+
+
+# ---------------------------------------------------------------------------
+# seeded cluster chaos across backends (-m chaos)
+# ---------------------------------------------------------------------------
+
+_RANDOM_CHAOS = ClusterChaosConfig(seed=12, crash_prob=0.05, crash_rounds=3,
+                                   brownout_prob=0.05, brownout_rounds=3,
+                                   brownout_latency_s=1.0, admit_prob=0.1)
+
+
+@pytest.mark.chaos
+@pytest.mark.parametrize("key,kv_dtype,kw", [
+    ("pair", "native", {}),
+    ("int8", "int8", {}),
+    ("sampled", "native", dict(sampling=SamplingParams(temperature=0.9,
+                                                       top_p=0.95), seed=3)),
+])
+def test_cluster_chaos_random_bitwise(key, kv_dtype, kw):
+    front = _front(key, kv_dtype=kv_dtype, **kw)
+    want = _drain(front)
+    chaos = ClusterChaos(_RANDOM_CHAOS)
+    got = _drain(front, chaos=chaos)
+    assert got == want
+    assert chaos.crashes + chaos.brownouts + chaos.admit_faults > 0
+
+
+@pytest.mark.chaos
+@pytest.mark.skipif(len(jax.devices()) < 4,
+                    reason="2 replicas x TP=2 needs 4 devices")
+def test_cluster_chaos_tp_bitwise():
+    """Replica kill over TP-sharded replicas: failover re-prefills on a
+    different 2-device mesh and must still replay the streams bitwise."""
+    key = ("front", "tp")
+    if key not in _STATE:
+        from repro.launch.serve import build_pool
+        cfg = override(smoke_config(ARCHS["gemma-2b"]), num_kv_heads=2)
+        bundle = build(cfg, FLAGS)
+        params = bundle.init(jax.random.PRNGKey(7))
+        pool = build_pool(bundle, params, tp=2, dp=2, **_KW)
+        _STATE[key] = (cfg, ClusterFrontEnd(pool.engines))
+    cfg, front = _STATE[key]
+    tcfg = TrafficConfig(**{**_TCFG.__dict__, "n_requests": 6})
+
+    def drain(chaos=None):
+        front.reset()
+        sched = generate_traffic(tcfg, cfg.vocab_size)
+        front.run(sched, chaos=chaos)
+        return {r.rid: list(r.out_tokens) for _, r in sched}
+
+    want = drain()
+    chaos = ClusterChaos(ClusterChaosConfig(
+        seed=4, crash_rounds=4, kill_at=((2, 0, "crash"),)))
+    got = drain(chaos=chaos)
+    assert got == want
+    assert front.cstats.failovers >= 1 and front.cstats.quarantines >= 1

@@ -136,7 +136,7 @@ def run_sweeps(names: Optional[Sequence[str]] = None,
     mid-campaign.  With ``out_dir`` the run is persisted as
     ``BENCH_<timestamp>.json`` and the path stored in ``run.env["path"]``.
     """
-    import repro.bench.sweeps  # noqa: F401  (registers the seventeen sweeps)
+    import repro.bench.sweeps  # noqa: F401  (registers every sweep)
 
     fast = _fast_from_env() if fast is None else fast
     selected = list(names) if names else list(ORDER)

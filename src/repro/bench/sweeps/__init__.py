@@ -1,10 +1,11 @@
-"""The seventeen registered sweeps — one module per paper table/figure,
+"""The eighteen registered sweeps — one module per paper table/figure,
 plus the PR 3 tune->execute proof sweeps (``serve`` + ``kernel_plan``),
 the PR 4 paged-KV serving sweep (``paged_serve``), the PR 6 speculative
 draft->verify sweep (``spec_serve``), the PR 7 sharded-serving sweep
 (``dist_serve``), the PR 8 preemptive-scheduling sweep
-(``preempt_serve``), and the PR 9 fault-tolerant cluster front-end sweep
-(``cluster_serve``).
+(``preempt_serve``), the PR 9 fault-tolerant cluster front-end sweep
+(``cluster_serve``), and the PR 10 disaggregated prefill/decode sweep
+(``disagg_serve``).
 
 Importing this package populates :data:`repro.bench.registry.REGISTRY` in
 the paper's presentation order.  ``benchmarks/bench_*.py`` are thin shims
@@ -14,11 +15,12 @@ any sweep programmatically via :func:`repro.bench.run_sweeps`.
 from repro.bench.sweeps import (  # noqa: F401  (import order == run order)
     latency, outstanding, unit_size, stride, burst, num_kernels,
     random_access, database, conv, roofline, serve, paged_serve, spec_serve,
-    dist_serve, preempt_serve, cluster_serve,
+    dist_serve, preempt_serve, cluster_serve, disagg_serve,
 )
 
 __all__ = [
     "latency", "outstanding", "unit_size", "stride", "burst", "num_kernels",
     "random_access", "database", "conv", "roofline", "serve", "paged_serve",
     "spec_serve", "dist_serve", "preempt_serve", "cluster_serve",
+    "disagg_serve",
 ]

@@ -27,7 +27,8 @@ import numpy as np
 
 from repro.configs import ARCHS, smoke_config
 from repro.models import RuntimeFlags, build
-from repro.serve import Request, ServeEngine, ServeStats, aggregate_stats
+from repro.serve import (DisaggConfig, DisaggPool, Request, ServeEngine,
+                         ServeStats, aggregate_stats)
 from repro.train import CheckpointManager
 
 # request i's scheduler class under each --priority mix (matches
@@ -122,6 +123,49 @@ def build_pool(bundle, params, *, tp: int = 1, dp: int = 1,
     return ReplicaPool(engines)
 
 
+def build_disagg_pool(bundle, params, *, tp: int = 1,
+                      prefill_replicas: int = 1, decode_replicas: int = 1,
+                      devices: Optional[Sequence] = None,
+                      disagg_config: Optional[DisaggConfig] = None,
+                      **engine_kw) -> DisaggPool:
+    """The ``disagg`` topology: a prefill pool that ships every finished
+    prompt's pages to a decode pool as a checksummed transfer buffer
+    (:class:`~repro.serve.cluster.DisaggPool`).  Requires the paged
+    backend with the host swap tier on both sides.  Disaggregation is a
+    scheduling topology, so pools may share devices: with ``tp == 1``
+    every engine runs undistributed (single-device smoke runs both pools
+    on one chip); with ``tp > 1`` each engine gets its own disjoint
+    ``tp``-device group when enough devices exist (prefill groups first),
+    and otherwise all engines TP-shard over the *same* ``tp`` devices —
+    the hand-off is still a real gather/scatter across meshes."""
+    import jax
+
+    from repro.dist import ServeMesh
+
+    if prefill_replicas < 1 or decode_replicas < 1:
+        raise ValueError("disagg topology needs >= 1 prefill and >= 1 "
+                         "decode replica")
+    engine_kw.setdefault("cache_backend", "paged")
+    n = prefill_replicas + decode_replicas
+    if tp == 1:
+        engines = [ServeEngine(bundle, params, **engine_kw)
+                   for _ in range(n)]
+    else:
+        pool = list(devices) if devices is not None else list(jax.devices())
+        if len(pool) >= tp * n:
+            groups = device_groups(tp, n, devices)
+        else:
+            if len(pool) < tp:
+                raise ValueError(f"tp={tp} needs {tp} devices, have "
+                                 f"{len(pool)}")
+            groups = [pool[:tp]] * n
+        engines = [ServeEngine(bundle, params, **engine_kw,
+                               dist=ServeMesh.tp(tp, devices=g))
+                   for g in groups]
+    return DisaggPool(engines[:prefill_replicas],
+                      engines[prefill_replicas:], config=disagg_config)
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True, choices=sorted(ARCHS))
@@ -148,6 +192,21 @@ def main(argv=None):
                     choices=("auto", "dense", "paged"),
                     help="KV backend; auto lets the engine pick (paged is "
                          "forced whenever tp*dp > 1)")
+    ap.add_argument("--topology", default="colocated",
+                    choices=("colocated", "disagg"),
+                    help="colocated: every replica prefills and decodes "
+                         "(ReplicaPool).  disagg: a prefill pool ships "
+                         "finished prompts' pages to a decode pool "
+                         "(DisaggPool); --dp counts decode replicas")
+    ap.add_argument("--prefill-replicas", type=int, default=1,
+                    help="prefill-pool replicas under --topology disagg")
+    ap.add_argument("--link-bw", type=float, default=32e9,
+                    help="prefill->decode transfer link bandwidth (prices "
+                         "the disagg-vs-colocated routing break-even)")
+    ap.add_argument("--route", default="auto",
+                    choices=("auto", "disagg", "colocated"),
+                    help="pin the disagg router's per-request decision "
+                         "(auto defers to the swap cost model)")
     args = ap.parse_args(argv)
 
     cfg = smoke_config(ARCHS[args.arch]) if args.smoke else ARCHS[args.arch]
@@ -166,7 +225,16 @@ def main(argv=None):
                      window=args.window, seed=args.seed)
     if args.cache != "auto":
         engine_kw["cache_backend"] = args.cache
-    pool = build_pool(bundle, params, tp=args.tp, dp=args.dp, **engine_kw)
+    if args.topology == "disagg":
+        pool = build_disagg_pool(
+            bundle, params, tp=args.tp,
+            prefill_replicas=args.prefill_replicas, decode_replicas=args.dp,
+            disagg_config=DisaggConfig(
+                link_bw=args.link_bw,
+                force=None if args.route == "auto" else args.route),
+            **engine_kw)
+    else:
+        pool = build_pool(bundle, params, tp=args.tp, dp=args.dp, **engine_kw)
     rng = np.random.default_rng(args.seed)
     mix = _PRIORITY_MIX[args.priority]
     for i in range(args.requests):
@@ -176,15 +244,23 @@ def main(argv=None):
                             max_new_tokens=args.max_new,
                             priority=mix(i)))
     t0 = time.perf_counter()
-    stats = pool.drain()
+    stats = pool.drain() if args.topology == "colocated" else pool.run()
     dt = time.perf_counter() - t0
     print(f"{stats.tokens_out} tokens in {dt:.2f}s "
           f"({stats.tokens_out/dt:.1f} tok/s) across "
           f"{len(pool.engines)} replica(s) x tp={args.tp}, "
           f"prefills={stats.prefills}, decode_steps={stats.decode_steps}, "
           f"decode_dispatches={stats.decode_dispatches}")
-    print("per-replica requests: "
-          + ", ".join(f"r{i}={n}" for i, n in enumerate(pool.routed)))
+    if args.topology == "disagg":
+        d = pool.dstats
+        print(f"disagg: {d.disagg_routed} shipped / {d.colocated_routed} "
+              f"colocated, {d.transfers} transfers "
+              f"({stats.transfer_bytes} bytes), "
+              f"{stats.transfer_fallbacks} recompute fallbacks, "
+              f"{d.rounds} rounds")
+    else:
+        print("per-replica requests: "
+              + ", ".join(f"r{i}={n}" for i, n in enumerate(pool.routed)))
     return 0
 
 

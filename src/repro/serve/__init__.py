@@ -1,10 +1,13 @@
 from repro.serve.chaos import (ChaosConfig, ChaosEngine,  # noqa: F401
-                               ClusterChaos, ClusterChaosConfig, fault_rng)
+                               ClusterChaos, ClusterChaosConfig, DisaggChaos,
+                               DisaggChaosConfig, fault_rng)
 from repro.serve.cluster import (ClusterConfig, ClusterFrontEnd,  # noqa: F401
-                                 ClusterStats, Replica, TransientAdmitError,
+                                 ClusterStats, DisaggConfig, DisaggPool,
+                                 DisaggStats, Replica, TransientAdmitError,
                                  aggregate_stats)
 from repro.serve.engine import Request, ServeEngine, ServeStats  # noqa: F401
-from repro.serve.hosttier import HostKVTier  # noqa: F401
+from repro.serve.hosttier import (HostKVEntry, HostKVTier,  # noqa: F401
+                                  corrupt_entry, make_transfer_entry)
 from repro.serve.kvcache import (PageAllocator, PagedKVCache,  # noqa: F401
                                  PoolExhausted, PrefixIndex, page_hashes)
 from repro.serve.sampling import (GREEDY, SamplingParams,  # noqa: F401

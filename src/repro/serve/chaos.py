@@ -37,6 +37,7 @@ from typing import List, Optional, Tuple
 
 import numpy as np
 
+from repro.serve.hosttier import corrupt_entry
 from repro.serve.kvcache import PoolExhausted
 
 # Stable fault-kind ids: each kind draws from its own seed-derived
@@ -51,6 +52,7 @@ _FAULT_KIND_IDS = {
     "crash": 3,       # whole-replica crash          (ClusterChaos)
     "brownout": 4,    # replica stall / slow probes  (ClusterChaos)
     "admit": 5,       # transient admission refusals (ClusterChaos)
+    "transfer": 6,    # in-transit buffer corruption (DisaggChaos)
 }
 
 
@@ -284,3 +286,41 @@ class ClusterChaos:
                 self.fire(rep, "brownout")
             if self.rngs["admit"].random() < self.cfg.admit_prob:
                 self.fire(rep, "admit")
+
+
+# ----------------------------------------------------------------------
+# disaggregated-transfer faults
+# ----------------------------------------------------------------------
+@dataclass(frozen=True)
+class DisaggChaosConfig:
+    """Fault mix for :class:`DisaggChaos`: per in-transit transfer
+    buffer, per round, flip a byte inside the checksummed span.  The
+    decode pool's import path must catch every hit at swap-in (checksum
+    verify) and recover by recompute-resume — the drained tokens may
+    never diverge from the clean run."""
+    seed: int = 0
+    corrupt_prob: float = 0.0
+
+
+class DisaggChaos:
+    """Seeded fault injector for a :class:`~repro.serve.cluster.DisaggPool`.
+
+    Pass as ``chaos=`` to :meth:`DisaggPool.run` — :meth:`inject` fires
+    at the top of every virtual-clock round, while shipped prefill pages
+    are still in flight between the pools.  Draws come from the
+    ``(seed, "transfer")`` sub-stream (one draw per in-transit buffer per
+    round, fired or not), so the schedule composes with every other
+    chaos kind without perturbing it."""
+
+    def __init__(self, cfg: DisaggChaosConfig = DisaggChaosConfig()):
+        self.cfg = cfg
+        self.rng = fault_rng(cfg.seed, "transfer")
+        self.corruptions = 0
+
+    def inject(self, pool) -> None:
+        if self.cfg.corrupt_prob <= 0:
+            return
+        for t in pool._transit:
+            if self.rng.random() < self.cfg.corrupt_prob:
+                corrupt_entry(t.entry)
+                self.corruptions += 1

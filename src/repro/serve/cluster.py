@@ -44,11 +44,13 @@ from collections import deque
 from dataclasses import dataclass
 from typing import Deque, Dict, Iterable, List, Optional, Sequence, Tuple
 
+import jax
 import numpy as np
 
 from repro.serve.engine import Request, ServeEngine, ServeStats
+from repro.serve.hosttier import HostKVEntry
 from repro.serve.kvcache import page_hashes
-from repro.serve.scheduler import PRIORITY_HIGH
+from repro.serve.scheduler import PRIORITY_HIGH, SwapCostModel
 
 # replica health states (circuit breaker)
 HEALTHY = "healthy"
@@ -457,15 +459,246 @@ class ClusterFrontEnd:
         round scores 1, so the gated rows are always positive.  Shed
         requests are excluded; their rate is ``cstats.shed /
         cstats.submitted``."""
-        ttft = [lat.first - lat.arrival + 1 for lat in self._lat.values()
-                if lat.first is not None]
-        done = [lat for lat in self._lat.values() if lat.finish is not None]
-        tpot = [(lat.finish - lat.first) / max(1, lat.tokens - 1)
-                for lat in done]
+        return latency_percentiles(self._lat.values())
 
-        def pct(xs: List[float], q: float) -> float:
-            return float(np.percentile(np.asarray(xs, np.float64), q)) \
-                if xs else 0.0
 
-        return dict(ttft_p50=pct(ttft, 50), ttft_p99=pct(ttft, 99),
-                    tpot_p50=pct(tpot, 50), tpot_p99=pct(tpot, 99))
+def latency_percentiles(lats: Iterable[_Lat]) -> Dict[str, float]:
+    """TTFT/TPOT p50/p99 in virtual rounds (1-based TTFT; see
+    :meth:`ClusterFrontEnd.percentiles`) — shared by every pool topology."""
+    lats = list(lats)
+    ttft = [lat.first - lat.arrival + 1 for lat in lats
+            if lat.first is not None]
+    done = [lat for lat in lats if lat.finish is not None]
+    tpot = [(lat.finish - lat.first) / max(1, lat.tokens - 1)
+            for lat in done]
+
+    def pct(xs: List[float], q: float) -> float:
+        return float(np.percentile(np.asarray(xs, np.float64), q)) \
+            if xs else 0.0
+
+    return dict(ttft_p50=pct(ttft, 50), ttft_p99=pct(ttft, 99),
+                tpot_p50=pct(tpot, 50), tpot_p99=pct(tpot, 99))
+
+
+# ----------------------------------------------------------------------
+# disaggregated prefill/decode topology
+# ----------------------------------------------------------------------
+@dataclass(frozen=True)
+class DisaggConfig:
+    """Knobs for :class:`DisaggPool`.
+
+    ``link_bw`` prices the prefill->decode page shipment in the (fixed)
+    :class:`~repro.serve.scheduler.SwapCostModel`: a transfer costs one
+    gather off the prefill mesh plus one scatter into the decode mesh —
+    the same two link traversals a local swap round-trip makes, so
+    ``choose(prompt_len, swappable=True)`` is exactly the router's
+    disagg-vs-colocated break-even.  ``transit_rounds`` is how many
+    virtual-clock rounds a transfer spends in flight (the chaos harness
+    corrupts buffers only while they are in transit)."""
+
+    link_bw: float = 32e9
+    transit_rounds: int = 1
+    # force "disagg" / "colocated" routing for every request (tests and
+    # bench gates); None defers to the cost model per prompt length
+    force: Optional[str] = None
+
+
+@dataclass
+class DisaggStats:
+    """Router-level counters for the disaggregated topology (engine-level
+    counters — exports, imports, transfer bytes/fallbacks — stay in the
+    aggregated :class:`~repro.serve.engine.ServeStats`)."""
+    submitted: int = 0
+    disagg_routed: int = 0       # sent to the prefill pool (will transfer)
+    colocated_routed: int = 0    # cost model kept prefill+decode together
+    transfers: int = 0           # buffers delivered to the decode pool
+    completed: int = 0
+    rounds: int = 0
+
+
+@dataclass
+class _Transfer:
+    """One finished prefill in flight between the pools."""
+    req: Request
+    entry: HostKVEntry
+    due: int                     # round at which it lands
+
+
+class DisaggPool:
+    """Disaggregated prefill/decode serving over two engine pools.
+
+    The prefill pool runs chunked prefill only: the moment a request's
+    prompt completes (seed token emitted), its pages — k/v plus int8
+    scale lanes, gathered per-shard under TP — leave the mesh as a
+    checksummed transfer buffer (:meth:`ServeEngine.export_finished_prefill`)
+    and travel ``transit_rounds`` of the virtual clock.  The decode pool
+    lands each buffer (:meth:`ServeEngine.import_prefill`) and drains it
+    through the ordinary swap-in path: reserve pages, scatter through the
+    page table, replay the ``(seed, rid)`` PRNG chain, re-feed the pending
+    token.  Because every piece of carried state is either shipped exactly
+    (pages, by checksum) or re-derived from ``(seed, rid)`` (PRNG), the
+    disaggregated drain is **bitwise identical** to a colocated drain of
+    the same requests — and a corrupted transfer merely downgrades to
+    decode-side recompute of the prompt, which is the same stream again.
+
+    Routing: the shared :class:`SwapCostModel` (with the staging link at
+    ``link_bw`` — never rescaled by an HBM calibration) prices the
+    shipment against re-prefilling on the decode side; when the link is
+    the bottleneck the request is routed *colocated* onto the decode pool,
+    which runs its own prefill.  ``force`` pins the decision for tests.
+    """
+
+    def __init__(self, prefill_engines: Sequence[ServeEngine],
+                 decode_engines: Sequence[ServeEngine],
+                 config: Optional[DisaggConfig] = None):
+        if not prefill_engines or not decode_engines:
+            raise ValueError("DisaggPool needs >= 1 prefill and >= 1 decode "
+                             "engine")
+        self.cfg = config or DisaggConfig()
+        if self.cfg.force not in (None, "disagg", "colocated"):
+            raise ValueError(f"unknown force policy {self.cfg.force!r}")
+        engines = list(prefill_engines) + list(decode_engines)
+        if len({e.seed for e in engines}) > 1:
+            raise ValueError(
+                "pools must share the sampling seed: per-(seed, rid) PRNG "
+                "streams are what make the hand-off lossless")
+        if len({e.max_len for e in engines}) > 1:
+            raise ValueError("pools must share max_len")
+        for eng in engines:
+            if eng.backend != "paged" or eng.host_tier is None:
+                raise ValueError(
+                    "disaggregation requires paged engines with the host "
+                    "swap tier (pure full-attention stack, swap enabled) "
+                    "on both pools")
+        if len({e.page for e in engines}) > 1:
+            raise ValueError(
+                "pools must share the page size: the transfer buffer is "
+                "scattered page-for-page into the decode pool's table")
+        self.prefill_engines = list(prefill_engines)
+        self.decode_engines = list(decode_engines)
+        # the shipment pricer, derived from decode-pool geometry: each
+        # re-prefill chunk on the decode side re-streams the weights; each
+        # shipped context row crosses the link twice (gather + scatter)
+        eng = self.decode_engines[0]
+        wb = sum(x.size * x.dtype.itemsize
+                 for x in jax.tree_util.tree_leaves(eng.params))
+        self.cost_model = SwapCostModel(
+            weight_bytes=wb, kv_bytes_per_token=eng.bytes_per_page / eng.page,
+            prefill_chunk=eng.prefill_chunk, host_link_bw=self.cfg.link_bw)
+        self._init_state()
+
+    def _init_state(self) -> None:
+        self.round = 0
+        self.dstats = DisaggStats()
+        self._transit: List[_Transfer] = []
+        self._live: Dict[int, Request] = {}
+        self._lat: Dict[int, _Lat] = {}
+
+    def reset(self) -> None:
+        """Fresh run over the same engines (jit caches survive)."""
+        for eng in self.engines:
+            eng.reset()
+        self._init_state()
+
+    @property
+    def engines(self) -> List[ServeEngine]:
+        return self.prefill_engines + self.decode_engines
+
+    def stats(self) -> ServeStats:
+        return aggregate_stats(self.engines)
+
+    def percentiles(self) -> Dict[str, float]:
+        return latency_percentiles(self._lat.values())
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _least_loaded(engines: List[ServeEngine]) -> ServeEngine:
+        return min(engines, key=lambda e: (
+            len(e.queue) + sum(s is not None for s in e.slots)))
+
+    def route(self, req: Request) -> str:
+        """``"disagg"`` or ``"colocated"`` for this request."""
+        if self.cfg.force is not None:
+            return self.cfg.force
+        choice = self.cost_model.choose(len(req.prompt), swappable=True)
+        return "disagg" if choice == "swap" else "colocated"
+
+    def submit(self, req: Request) -> None:
+        self.dstats.submitted += 1
+        self._lat[req.rid] = _Lat(arrival=self.round)
+        self._live[req.rid] = req
+        if self.route(req) == "disagg":
+            self._least_loaded(self.prefill_engines).add_request(req)
+            self.dstats.disagg_routed += 1
+        else:
+            self._least_loaded(self.decode_engines).add_request(req)
+            self.dstats.colocated_routed += 1
+
+    # ------------------------------------------------------------------
+    def _deliver(self) -> None:
+        landed = [t for t in self._transit if t.due <= self.round]
+        if not landed:
+            return
+        self._transit = [t for t in self._transit if t.due > self.round]
+        for t in landed:
+            self._least_loaded(self.decode_engines).import_prefill(
+                t.req, t.entry)
+            self.dstats.transfers += 1
+
+    def _prefill_round(self) -> None:
+        for eng in self.prefill_engines:
+            eng._admit()
+            for i, req in enumerate(eng.slots):
+                if req is None or i in eng._pending:
+                    continue
+                if req.done:
+                    # satisfied by prefill alone (max_new_tokens == 1):
+                    # retire in place, nothing to ship
+                    eng._release_finished(i)
+                    continue
+                shipped, entry = eng.export_finished_prefill(i)
+                self._transit.append(_Transfer(
+                    shipped, entry, due=self.round + self.cfg.transit_rounds))
+
+    def _decode_round(self) -> None:
+        for eng in self.decode_engines:
+            eng._admit()
+            if any(s is not None for s in eng.slots):
+                eng.decode_many(eng.window)
+
+    def _harvest(self) -> None:
+        for rid in list(self._live):
+            req = self._live[rid]
+            lat = self._lat[rid]
+            if lat.first is None and req.out_tokens:
+                lat.first = self.round
+            if req.done:
+                lat.finish = self.round
+                lat.tokens = len(req.out_tokens)
+                self.dstats.completed += 1
+                del self._live[rid]
+
+    def step(self, chaos=None) -> bool:
+        """One virtual-clock round: chaos fires on in-transit buffers,
+        due transfers land on the decode pool, the prefill pool advances
+        one admit round and exports whatever finished, the decode pool
+        runs one admit + decode window.  Returns False once drained."""
+        if chaos is not None:
+            chaos.inject(self)
+        self._deliver()
+        self._prefill_round()
+        self._decode_round()
+        self._harvest()
+        self.round += 1
+        self.dstats.rounds = self.round
+        return bool(self._live or self._transit)
+
+    def run(self, chaos=None, max_rounds: int = 10_000) -> ServeStats:
+        """Drain everything submitted (under optional
+        :class:`~repro.serve.chaos.DisaggChaos` injection)."""
+        for _ in range(max_rounds):
+            if not self.step(chaos=chaos):
+                return self.stats()
+        raise RuntimeError(
+            f"disagg pool failed to drain in {max_rounds} rounds: "
+            f"{len(self._live)} live, {len(self._transit)} in transit")

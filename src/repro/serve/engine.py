@@ -62,7 +62,8 @@ import numpy as np
 from repro.configs.base import ATTN
 from repro.core.memmodel import next_pow2
 from repro.models.registry import ModelBundle
-from repro.serve.hosttier import HostKVTier, page_axis
+from repro.serve.hosttier import (HostKVEntry, HostKVTier, make_transfer_entry,
+                                  page_axis)
 from repro.serve.kvcache import (PageAllocator, PoolExhausted, PrefixIndex,
                                  page_hashes)
 from repro.serve.sampling import (GREEDY, SamplingParams, sample_token,
@@ -127,6 +128,11 @@ class ServeStats:
     recompute_resumes: int = 0       # resumes that re-prefilled their context
     swap_fallbacks: int = 0          # checksum-failed swaps recovered by recompute
     prefill_burst_max: int = 0       # max prefill chunks between decode windows
+    # -- disaggregated prefill/decode ---------------------------------------
+    prefill_exports: int = 0         # finished prefills shipped off this engine
+    prefill_imports: int = 0         # shipped prefills landed into decode slots
+    transfer_bytes: int = 0          # bytes crossing the prefill->decode link
+    transfer_fallbacks: int = 0      # corrupted transfers recovered by recompute
 
     @property
     def accept_rate(self) -> float:
@@ -413,6 +419,9 @@ class ServeEngine:
         self._arrival: Dict[int, int] = {}
         self._arrival_seq = 0
         self._chunks_since_decode = 0
+        # rids whose pending swap-resume is a cross-mesh prefill import
+        # (counts against the transfer stats, not the local swap stats)
+        self._transfer_rids: set = set()
         if self.host_tier is not None:
             self.host_tier.clear()
         if self.backend == "paged":
@@ -558,6 +567,11 @@ class ServeEngine:
         drain finished *here* is bitwise the one the failed replica
         would have produced.  Fresh requests fall through to plain
         :meth:`add_request`."""
+        if req.done:
+            # already at its token budget: there is nothing left to run —
+            # adopting it into a slot would re-prefill a finished request.
+            # The caller keeps the (complete) Request object; no-op here.
+            return
         if req.out_tokens:
             ctx = np.concatenate(
                 [np.asarray(req.prompt, np.int32),
@@ -592,8 +606,89 @@ class ServeEngine:
                     and self.host_tier is not None
                     and r.rid in self.host_tier):
                 self.host_tier.pop(r.rid)
+            self._transfer_rids.discard(r.rid)
             self._arrival.pop(r.rid, None)
         return moved
+
+    # ------------------------------------------------------------------
+    # disaggregated prefill/decode: finished-prefill hand-off
+    # ------------------------------------------------------------------
+    def export_finished_prefill(self, slot: int):
+        """Ship a freshly prefilled request off this engine: gather its
+        pages (k/v + int8 scale lanes; per-shard stripes assembled on host
+        under TP) into a checksummed transfer buffer, release every local
+        resource, and return ``(request, entry)`` for a decode mesh to
+        :meth:`import_prefill`.
+
+        Mechanically this is a swap-out of a request that has emitted
+        exactly its seed token — the prefill side's last act.  The pending
+        token rides on ``request.out_tokens``; the PRNG chain needs no
+        shipping because it is a pure function of ``(seed, rid)`` and the
+        emitted count.  Requires the host swap tier (paged, pure
+        full-attention stack) and a completed prefill."""
+        req = self.slots[slot]
+        if req is None:
+            raise ValueError(f"export of empty slot {slot}")
+        if not self._swap_ok():
+            raise ValueError(
+                "export requires the host swap tier (paged backend, pure "
+                "full-attention stack, scheduler swap enabled)")
+        if slot in self._pending:
+            raise ValueError(
+                f"slot {slot} is mid-prefill: only a completed prefill "
+                "(seed token emitted) can be exported")
+        if len(req.out_tokens) != 1:
+            raise ValueError(
+                f"rid {req.rid} has emitted {len(req.out_tokens)} tokens; "
+                "export is a prefill hand-off — decode must not have begun")
+        hpos = int(self._hpos[slot])
+        # drop any reservation past the live rows, then gather the table
+        # (shared prefix pages are read-only; gathering them is safe)
+        self.alloc.truncate(req.rid, hpos)
+        pids = list(self.alloc.tables[req.rid])
+        data = self._gather_to_host(pids)
+        entry = make_transfer_entry(req.rid, data, len(pids), length=hpos)
+        self.stats.prefill_exports += 1
+        self.stats.transfer_bytes += entry.nbytes
+        self.alloc.release(req.rid)
+        if self.ralloc is not None:
+            self.ralloc.release(req.rid)
+        self._hashes.pop(req.rid, None)
+        self._htable[slot, :] = 0
+        self._hrtable[slot, :] = 0
+        self._table_dirty = True
+        self.slots[slot] = None
+        self._arrival.pop(req.rid, None)
+        return req, entry
+
+    def import_prefill(self, req: Request, entry: HostKVEntry) -> None:
+        """Land a shipped prefill on this (decode) engine: install the
+        transfer buffer in the local host tier VERBATIM — original
+        checksum and all — and queue the request behind a swap-kind resume
+        record.  Admission then walks the ordinary swap-in path: reserve
+        pages, scatter the buffer through the page table, restore
+        pos/pending-token, replay the ``(seed, rid)`` PRNG chain.  A
+        checksum mismatch (corruption anywhere in transit) degrades to
+        recompute-resume: the prompt re-prefills *here*, chunked, which is
+        bitwise the same stream — the transfer is an optimization, never a
+        correctness dependency."""
+        if not self._swap_ok():
+            raise ValueError(
+                "import requires the host swap tier on the decode engine "
+                "(paged backend, pure full-attention stack, swap enabled)")
+        if len(req.out_tokens) != 1:
+            raise ValueError(
+                f"rid {req.rid} has emitted {len(req.out_tokens)} tokens; "
+                "import expects a prefill hand-off (exactly the seed token)")
+        ctx = np.asarray(req.prompt, np.int32)
+        if int(entry.length) != len(ctx):
+            raise ValueError(
+                f"transfer entry covers {entry.length} rows but rid "
+                f"{req.rid}'s prompt holds {len(ctx)} tokens")
+        self.host_tier.put_entry(entry)
+        self._transfer_rids.add(req.rid)
+        self._resume[req.rid] = _Resume("swap", ctx, int(req.out_tokens[-1]))
+        self.add_request(req)
 
     def _free_slot(self) -> Optional[int]:
         for i, s in enumerate(self.slots):
@@ -681,13 +776,17 @@ class ServeEngine:
                        else int(self._hpos[i]))
             else:
                 ctx = int(self._hpos[i])
+            # swappability is per victim: the engine must hold a host tier
+            # (paged, pure full attention — ring/hybrid stacks never do),
+            # and a mid-prefill slot can only restart, never swap
             cands.append(VictimInfo(slot=i, rid=req.rid, priority=req.priority,
-                                    ctx_tokens=ctx, pages=pages))
+                                    ctx_tokens=ctx, pages=pages,
+                                    swappable=(self._swap_ok()
+                                               and i not in self._pending)))
         return cands
 
     def _pick_victim(self, below: Optional[int] = None) -> Optional[int]:
-        v = self.sched.pick_victim(self._victims(), below=below,
-                                   swappable=self._swap_ok())
+        v = self.sched.pick_victim(self._victims(), below=below)
         if v is None:
             return None
         self._cost_model()  # materialize before preempt() prices the resume
@@ -783,7 +882,11 @@ class ServeEngine:
         entry, ok = self.host_tier.get(req.rid)
         if not ok:
             self.host_tier.pop(req.rid)
-            self.stats.swap_fallbacks += 1
+            if req.rid in self._transfer_rids:
+                self._transfer_rids.discard(req.rid)
+                self.stats.transfer_fallbacks += 1
+            else:
+                self.stats.swap_fallbacks += 1
             res.kind = "recompute"
             return False
         s = len(res.ctx)
@@ -820,8 +923,13 @@ class ServeEngine:
             # a prefill over the context rebuilds it, and coupled sampling
             # means draft differences can never change emitted tokens)
             self._draft_prefill_slot(slot, req, tokens=res.ctx)
-        self.stats.swap_ins += 1
-        self.stats.swap_bytes += entry.nbytes
+        if req.rid in self._transfer_rids:
+            self._transfer_rids.discard(req.rid)
+            self.stats.prefill_imports += 1
+            self.stats.transfer_bytes += entry.nbytes
+        else:
+            self.stats.swap_ins += 1
+            self.stats.swap_bytes += entry.nbytes
         self._track_peaks()
         return True
 

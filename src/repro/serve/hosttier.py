@@ -77,6 +77,32 @@ class HostKVEntry:
     nbytes: int
 
 
+def make_transfer_entry(rid: int, data, n_pages: int,
+                        length: int) -> HostKVEntry:
+    """Package gathered pages into a self-validating transfer buffer.
+
+    The same wire format a swap-out parks in the local tier, but built
+    free-standing: the disaggregated hand-off ships these entries from a
+    prefill mesh to a decode mesh, and the checksum travels with the
+    bytes — whoever installs the entry (see :meth:`HostKVTier.put_entry`)
+    verifies on readback, so corruption anywhere in transit surfaces as a
+    failed ``get`` on the receiving side.
+    """
+    host = jax.tree_util.tree_map(lambda x: np.array(x), data)
+    nbytes = int(sum(x.nbytes for x in jax.tree_util.tree_leaves(host)))
+    return HostKVEntry(rid=rid, n_pages=n_pages, length=length,
+                       data=host, checksum=checksum_pages(host, n_pages),
+                       nbytes=nbytes)
+
+
+def corrupt_entry(entry: HostKVEntry) -> None:
+    """Flip one byte inside the checksummed span (bit-rot model).  Byte 0
+    is element [0, ..., 0] — page index 0 of the gathered data, i.e. the
+    first real page: always checksummed."""
+    leaf = jax.tree_util.tree_leaves(entry.data)[0]
+    leaf.view(np.uint8).flat[0] ^= 0xFF
+
+
 @dataclass
 class HostKVTier:
     """rid -> swapped page data, with checksum-verified readback.
@@ -100,14 +126,20 @@ class HostKVTier:
         harness corrupts entries in place) and checksum the real-page
         span."""
         self._stall()
-        host = jax.tree_util.tree_map(lambda x: np.array(x), data)
-        nbytes = int(sum(x.nbytes for x in jax.tree_util.tree_leaves(host)))
-        entry = HostKVEntry(rid=rid, n_pages=n_pages, length=length,
-                            data=host, checksum=checksum_pages(host, n_pages),
-                            nbytes=nbytes)
+        entry = make_transfer_entry(rid, data, n_pages, length)
         self._entries[rid] = entry
-        self.bytes_out += nbytes
+        self.bytes_out += entry.nbytes
         return entry
+
+    def put_entry(self, entry: HostKVEntry) -> None:
+        """Install a pre-built transfer entry verbatim — checksum and all.
+        The disaggregated import path lands prefill pages shipped from
+        another mesh here; deliberately NO re-checksum, so damage the
+        buffer took in transit is caught by the next :meth:`get` exactly
+        like local tier bit-rot."""
+        self._stall()
+        self._entries[entry.rid] = entry
+        self.bytes_out += entry.nbytes
 
     def get(self, rid: int) -> Tuple[Optional[HostKVEntry], bool]:
         """(entry, ok).  ``ok`` is False when the stored checksum no longer
@@ -152,8 +184,5 @@ class HostKVTier:
         entry = self._entries.get(rid)
         if entry is None:
             return False
-        leaf = jax.tree_util.tree_leaves(entry.data)[0]
-        # byte 0 is element [0, ..., 0] — page index 0 of the gathered
-        # data, i.e. the victim's first real page: always checksummed
-        leaf.view(np.uint8).flat[0] ^= 0xFF
+        corrupt_entry(entry)
         return True

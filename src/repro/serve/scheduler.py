@@ -56,6 +56,15 @@ class SchedulerConfig:
     # the HBM spec comes from the — possibly calibrated — TPUSpec).
     host_link_bw: float = 32e9
 
+    def __post_init__(self) -> None:
+        cap = self.prefill_chunks_per_tick
+        if cap is not None and cap < 1:
+            raise ValueError(
+                f"prefill_chunks_per_tick={cap}: the cap must be >= 1 (every "
+                "admit round must be able to advance at least one pending "
+                "prefill chunk, or pending prompts would stall forever) — "
+                "use None for the unbounded legacy behavior")
+
 
 @dataclass(frozen=True)
 class VictimInfo:
@@ -66,6 +75,12 @@ class VictimInfo:
     priority: int
     ctx_tokens: int        # live KV rows a resume must restore
     pages: int             # page footprint across pools (freed on evict)
+    # Whether THIS victim can take the swap-resume path.  Per victim, not
+    # per pool: a mixed pool holds full-attention slots that can swap next
+    # to mid-prefill (and, engine-wide, ring/hybrid) slots that can only
+    # recompute, and pricing the latter at min(recompute, swap) evicts the
+    # wrong slot.
+    swappable: bool = False
 
 
 class SwapCostModel:
@@ -82,12 +97,19 @@ class SwapCostModel:
 
     def __init__(self, *, weight_bytes: float, kv_bytes_per_token: float,
                  prefill_chunk: int, spec: TPUSpec = V5E,
-                 host_link_bw: float = 32e9, calibration=None):
+                 host_link_bw: float = 32e9, calibration=None,
+                 link_scale: Optional[float] = None):
         if calibration is not None:
-            # a bench CalibrationResult: adopt its fitted spec and scale
-            # the staging link by the same measured/modeled bandwidth ratio
+            # a bench CalibrationResult: adopt its fitted spec for the HBM
+            # side only.  bandwidth_scale is a ratio fitted against HBM
+            # curves; the PCIe-class staging link is a different interface
+            # with its own controller geometry, and rescaling it by an HBM
+            # fit moves the swap/recompute break-even for the wrong reason.
             spec = calibration.spec
-            host_link_bw *= calibration.bandwidth_scale
+        if link_scale is not None:
+            # a separately-measured staging-link ratio, when the caller
+            # actually calibrated the host link
+            host_link_bw *= link_scale
         self.weight_bytes = float(weight_bytes)
         self.kv_bytes_per_token = float(kv_bytes_per_token)
         self.prefill_chunk = max(1, int(prefill_chunk))
@@ -143,11 +165,10 @@ class Scheduler:
         so decode windows keep their cadence under prefill load."""
         order = sorted(slots, key=lambda i: (-priorities(i), i))
         cap = self.config.prefill_chunks_per_tick
-        return order if cap is None else order[:max(1, cap)]
+        return order if cap is None else order[:cap]
 
     def pick_victim(self, cands: Sequence[VictimInfo], *,
-                    below: Optional[int] = None,
-                    swappable: bool = False) -> Optional[VictimInfo]:
+                    below: Optional[int] = None) -> Optional[VictimInfo]:
         """The ISSUE's ordering: lowest priority class first, then the
         cheapest modeled resume, then the largest page footprint (free the
         most pool per eviction).  ``below`` restricts to victims strictly
@@ -162,7 +183,7 @@ class Scheduler:
         cm = self.cost_model
 
         def key(v: VictimInfo):
-            cost = (cm.resume_s(v.ctx_tokens, swappable)
+            cost = (cm.resume_s(v.ctx_tokens, v.swappable)
                     if cm is not None else v.ctx_tokens)
             return (v.priority, cost, -v.pages, v.slot)
 

@@ -190,12 +190,13 @@ def test_structural_gate_ignores_wallclock_noise(tmp_path, capsys):
 # registry smoke (the BENCH_FAST=1 campaign)
 # ---------------------------------------------------------------------------
 
-def test_registry_lists_seventeen_sweeps():
-    assert len(REGISTRY) == 17
+def test_registry_lists_every_sweep_in_paper_order():
+    assert len(REGISTRY) == len(ORDER)
     assert ORDER == ["latency", "outstanding", "unit_size", "stride", "burst",
                      "num_kernels", "random", "database", "conv", "roofline",
                      "serve", "kernel_plan", "paged_serve", "spec_serve",
-                     "dist_serve", "preempt_serve", "cluster_serve"]
+                     "dist_serve", "preempt_serve", "cluster_serve",
+                     "disagg_serve"]
 
 
 def test_registry_rejects_unknown_sweep():

@@ -1,0 +1,405 @@
+"""Disaggregated prefill/decode tests: the finished-prefill hand-off
+(:meth:`ServeEngine.export_finished_prefill` /
+:meth:`ServeEngine.import_prefill`) and the :class:`DisaggPool` router.
+
+Three layers:
+
+1. pool drains — a prefill-pool -> decode-pool drain must be **bitwise
+   identical** to a colocated drain of the same requests, across greedy /
+   sampled / int8-KV backends (and TP=2 meshes when devices allow),
+   because every piece of carried state is either shipped exactly
+   (pages, by checksum) or re-derived from ``(seed, rid)`` (PRNG);
+2. hand-off mechanics — export/import precondition errors, pool
+   construction validation, routing through the (fixed) SwapCostModel,
+   and the transfer-byte ledger;
+3. failure paths — chaos-corrupted transfers degrade to decode-side
+   recompute without token divergence, ``evacuate`` survives a
+   swap-kind resume whose host tier is gone, and ``adopt`` of an
+   already-finished request is a no-op.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, override, smoke_config
+from repro.models import RuntimeFlags, build
+from repro.serve import (DisaggChaos, DisaggChaosConfig, DisaggConfig,
+                         DisaggPool, Request, SamplingParams, Scheduler,
+                         SchedulerConfig, ServeEngine, make_transfer_entry)
+from repro.serve.engine import _Resume
+
+FLAGS = RuntimeFlags(attn_impl="chunked", attn_bq=16, attn_bkv=16,
+                     moe_impl="dense", loss_chunk=16)
+
+_STATE = {}
+
+
+def _bundle(kv_dtype="native"):
+    key = ("bundle", kv_dtype)
+    if key not in _STATE:
+        cfg = smoke_config(ARCHS["gemma-2b"])
+        flags = (FLAGS if kv_dtype == "native"
+                 else RuntimeFlags(**{**FLAGS.__dict__,
+                                      "kv_dtype": kv_dtype}))
+        bundle = build(cfg, flags)
+        _STATE[key] = (cfg, bundle, bundle.init(jax.random.PRNGKey(7)))
+    return _STATE[key]
+
+
+_KW = dict(batch_size=2, max_len=64, window=4, prefill_chunk=8,
+           cache_backend="paged", seed=0)
+
+
+def _engine(kv_dtype="native", **kw):
+    _, bundle, params = _bundle(kv_dtype)
+    return ServeEngine(bundle, params, **{**_KW, **kw})
+
+
+def _pool(key, kv_dtype="native", config=None, n_decode=1, **kw):
+    """One prefill + ``n_decode`` decode engines, cached per key the way
+    the cluster tests cache fronts (jit caches survive reset)."""
+    if key not in _STATE:
+        _STATE[key] = DisaggPool(
+            [_engine(kv_dtype, **kw)],
+            [_engine(kv_dtype, **kw) for _ in range(n_decode)],
+            config or DisaggConfig(force="disagg"))
+    pool = _STATE[key]
+    pool.reset()
+    return pool
+
+
+def _mk_reqs(n=4, max_new=8, seed=13):
+    cfg = _bundle()[0]
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(1, cfg.vocab_size,
+                                        size=int(rng.integers(12, 28)))
+                    .astype(np.int32),
+                    max_new_tokens=max_new) for i in range(n)]
+
+
+def _drain(target, reqs, chaos=None):
+    submit = getattr(target, "submit", None) or target.add_request
+    for r in reqs:
+        submit(r)
+    if isinstance(target, DisaggPool):
+        target.run(chaos=chaos)
+    else:
+        target.run_to_completion()
+    return {r.rid: list(r.out_tokens) for r in reqs}
+
+
+def _reference(key, kv_dtype="native", **kw):
+    """Colocated single-engine streams for the standard mix, cached."""
+    if key not in _STATE:
+        eng = _engine(kv_dtype, **kw)
+        _STATE[key] = (_drain(eng, _mk_reqs()), eng)
+    return _STATE[key][0]
+
+
+# ---------------------------------------------------------------------------
+# pool drains: disaggregated == colocated, bitwise
+# ---------------------------------------------------------------------------
+
+
+def test_disagg_drain_bitwise_greedy():
+    want = _reference("ref")
+    pool = _pool("pool")
+    got = _drain(pool, _mk_reqs())
+    assert got == want
+    s = pool.stats()
+    assert s.prefill_exports == s.prefill_imports == len(want)
+    assert s.transfer_bytes > 0 and s.transfer_fallbacks == 0
+    # the prefill pool never decoded; the decode pool never exported
+    assert pool.prefill_engines[0].stats.tokens_out == len(want)  # seed toks
+    assert pool.decode_engines[0].stats.prefill_exports == 0
+    d = pool.dstats
+    assert d.transfers == len(want) and d.completed == d.submitted
+
+
+def test_disagg_drain_bitwise_sampled():
+    samp = SamplingParams(temperature=0.9, top_k=11)
+    want = _reference("ref_samp", sampling=samp)
+    pool = _pool("pool_samp", sampling=samp)
+    got = _drain(pool, _mk_reqs())
+    assert got == want                       # (seed, rid) chain replayed
+    assert pool.stats().prefill_imports == len(want)
+
+
+def test_disagg_drain_bitwise_int8():
+    want = _reference("ref8", kv_dtype="int8")
+    pool = _pool("pool8", kv_dtype="int8")
+    got = _drain(pool, _mk_reqs())
+    assert got == want                       # scale lanes rode the buffer
+    assert pool.stats().prefill_imports == len(want)
+
+
+def test_disagg_two_decode_replicas_bitwise():
+    want = _reference("ref")
+    pool = _pool("pool2", n_decode=2)
+    got = _drain(pool, _mk_reqs())
+    assert got == want
+    loads = [e.stats.prefill_imports for e in pool.decode_engines]
+    assert sum(loads) == len(want)
+    assert all(n > 0 for n in loads)         # least-loaded spread the lands
+
+
+def test_force_colocated_never_ships():
+    want = _reference("ref")
+    pool = _pool("pool_colo", config=DisaggConfig(force="colocated"))
+    got = _drain(pool, _mk_reqs())
+    assert got == want                       # decode pool runs its own prefill
+    s = pool.stats()
+    assert s.prefill_exports == 0 and s.transfer_bytes == 0
+    assert pool.dstats.colocated_routed == len(want)
+    assert pool.prefill_engines[0].stats.tokens_out == 0
+
+
+def test_percentiles_deterministic_and_positive():
+    pool = _pool("pool")
+    _drain(pool, _mk_reqs())
+    a = pool.percentiles()
+    pool.reset()
+    _drain(pool, _mk_reqs())
+    assert pool.percentiles() == a
+    assert all(v > 0 for v in a.values())
+    assert pool.dstats.rounds > 0
+
+
+# ---------------------------------------------------------------------------
+# hand-off mechanics
+# ---------------------------------------------------------------------------
+
+
+def test_pool_construction_validation():
+    eng = _engine()
+    with pytest.raises(ValueError, match=">= 1 prefill"):
+        DisaggPool([], [eng])
+    with pytest.raises(ValueError, match="unknown force"):
+        DisaggPool([eng], [eng], DisaggConfig(force="sideways"))
+    with pytest.raises(ValueError, match="share the sampling seed"):
+        DisaggPool([eng], [_engine(seed=1)])
+    with pytest.raises(ValueError, match="share max_len"):
+        DisaggPool([eng], [_engine(max_len=32)])
+    with pytest.raises(ValueError, match="share the page size"):
+        DisaggPool([eng], [_engine(page_size=16)])
+    _, bundle, params = _bundle()
+    dense = ServeEngine(bundle, params, **{**_KW, "cache_backend": "dense"})
+    with pytest.raises(ValueError, match="requires paged engines"):
+        DisaggPool([eng], [dense])
+    noswap = _engine(scheduler=Scheduler(SchedulerConfig(swap=False)))
+    with pytest.raises(ValueError, match="host swap tier"):
+        DisaggPool([noswap], [eng])
+
+
+def test_route_follows_link_bandwidth():
+    # auto routing (force=None) is the fixed cost model's break-even: a
+    # glacial link prices the shipment above a decode-side re-prefill
+    fast = DisaggPool([_engine()], [_engine()],
+                      DisaggConfig(link_bw=1e15, force=None))
+    slow = DisaggPool([_engine()], [_engine()],
+                      DisaggConfig(link_bw=1.0, force=None))
+    req = _mk_reqs(n=1)[0]
+    assert fast.route(req) == "disagg"
+    assert slow.route(req) == "colocated"
+    # the configured link is adopted verbatim — never rescaled
+    assert fast.cost_model.host_link_bw == 1e15
+    slow.submit(req)
+    assert slow.dstats.colocated_routed == 1 and slow.dstats.disagg_routed == 0
+
+
+def test_transfer_byte_ledger_matches_geometry():
+    from repro.core.memmodel import next_pow2
+
+    pool = _pool("pool")
+    reqs = _mk_reqs()
+    _drain(pool, reqs)
+    eng = pool.decode_engines[0]
+    predicted = 2 * sum(
+        next_pow2(max(1, -(-len(r.prompt) // eng.page))) * eng.bytes_per_page
+        for r in reqs)
+    assert pool.stats().transfer_bytes == predicted
+
+
+def test_export_preconditions():
+    eng = _engine()
+    with pytest.raises(ValueError, match="empty slot"):
+        eng.export_finished_prefill(0)
+    req = _mk_reqs(n=1)[0]                   # prompt > prefill_chunk
+    eng.add_request(req)
+    eng._admit()                             # first chunk only
+    assert 0 in eng._pending
+    with pytest.raises(ValueError, match="mid-prefill"):
+        eng.export_finished_prefill(0)
+    while 0 in eng._pending:                 # finish the chunked prefill
+        eng._admit()
+    assert len(req.out_tokens) == 1          # seed token: exportable now
+    eng.decode_many(1)
+    with pytest.raises(ValueError, match="decode must not have begun"):
+        eng.export_finished_prefill(0)
+
+    noswap = _engine(scheduler=Scheduler(SchedulerConfig(swap=False)))
+    noswap.add_request(_mk_reqs(n=1)[0])
+    while 0 in noswap._pending or noswap.slots[0] is None:
+        noswap._admit()
+    with pytest.raises(ValueError, match="host swap tier"):
+        noswap.export_finished_prefill(0)
+
+
+def test_import_preconditions():
+    src = _engine()
+    req = _mk_reqs(n=1)[0]
+    src.add_request(req)
+    while 0 in src._pending or src.slots[0] is None:
+        src._admit()
+    shipped, entry = src.export_finished_prefill(0)
+    assert shipped is req and int(entry.length) == len(req.prompt)
+
+    noswap = _engine(scheduler=Scheduler(SchedulerConfig(swap=False)))
+    with pytest.raises(ValueError, match="host swap tier"):
+        noswap.import_prefill(req, entry)
+    dst = _engine()
+    short = Request(rid=req.rid, prompt=req.prompt[:4].copy(),
+                    max_new_tokens=4)
+    short.out_tokens.append(req.out_tokens[0])
+    with pytest.raises(ValueError, match="prompt holds"):
+        dst.import_prefill(short, entry)
+    decoded = Request(rid=req.rid, prompt=req.prompt.copy(),
+                      max_new_tokens=8)
+    decoded.out_tokens.extend([1, 2])
+    with pytest.raises(ValueError, match="exactly the seed token"):
+        dst.import_prefill(decoded, entry)
+    # the happy path drains to the colocated stream
+    dst.import_prefill(req, entry)
+    dst.run_to_completion()
+    colo = _engine()
+    ref = _mk_reqs(n=1)[0]
+    colo.add_request(ref)
+    colo.run_to_completion()
+    assert list(req.out_tokens) == list(ref.out_tokens)
+    assert dst.stats.prefill_imports == 1 and dst.stats.swap_ins == 0
+
+
+# ---------------------------------------------------------------------------
+# failure paths
+# ---------------------------------------------------------------------------
+
+
+def test_transfer_corruption_recovers_by_recompute():
+    want = _reference("ref")
+    pool = _pool("pool")
+    chaos = DisaggChaos(DisaggChaosConfig(seed=5, corrupt_prob=1.0))
+    got = _drain(pool, _mk_reqs(), chaos=chaos)
+    assert got == want                       # recompute is the same stream
+    s = pool.stats()
+    assert chaos.corruptions == len(want)
+    assert s.transfer_fallbacks == len(want) and s.recompute_resumes >= 1
+    assert s.prefill_imports == 0            # no corrupted buffer landed
+
+
+def test_transfer_corruption_partial_seeded():
+    want = _reference("ref")
+    pool = _pool("pool")
+    chaos = DisaggChaos(DisaggChaosConfig(seed=9, corrupt_prob=0.5))
+    got = _drain(pool, _mk_reqs(), chaos=chaos)
+    assert got == want
+    s = pool.stats()
+    assert s.prefill_imports + s.transfer_fallbacks == len(want)
+
+
+def test_evacuate_survives_lost_host_tier():
+    """A swap-kind resume whose host tier vanished (engine built with
+    swap disabled, or the tier dropped with the replica) must not crash
+    ``evacuate`` — the record is discarded and ``adopt`` re-derives a
+    recompute resume from the request alone."""
+    e1 = _engine(scheduler=Scheduler(SchedulerConfig(swap=False)))
+    assert e1.host_tier is None
+    e2 = _engine()
+    want = _drain(_engine(), _mk_reqs(seed=13))
+
+    reqs = _mk_reqs(seed=13)
+    for r in reqs:
+        e1.add_request(r)
+    for _ in range(3):
+        e1.step()
+    mid = [i for i, r in enumerate(e1.slots)
+           if r is not None and r.out_tokens and not r.done]
+    assert mid
+    e1.preempt(mid[0], mode="recompute")
+    rid = e1.queue[-1].rid
+    res = e1._resume[rid]
+    # simulate the lost tier: the resume claims swapped pages that no
+    # host tier holds anymore
+    e1._resume[rid] = _Resume("swap", res.ctx, res.pending)
+    moved = e1.evacuate()
+    assert not e1.queue and all(s is None for s in e1.slots)
+    for r in moved:
+        e2.adopt(r)
+    e2.run_to_completion()
+    assert {r.rid: list(r.out_tokens) for r in reqs} == want
+    assert e2.stats.recompute_resumes >= 1
+
+
+def test_adopt_finished_request_is_noop():
+    eng = _engine()
+    req = _mk_reqs(n=1, max_new=4)[0]
+    eng.add_request(req)
+    eng.run_to_completion()
+    assert req.done and len(req.out_tokens) == 4
+    tokens = list(req.out_tokens)
+    other = _engine()
+    other.adopt(req)
+    assert not other.queue                   # nothing admitted
+    other.run_to_completion()
+    assert list(req.out_tokens) == tokens    # stream untouched
+    assert other.stats.tokens_out == 0
+
+
+# ---------------------------------------------------------------------------
+# launch path + TP
+# ---------------------------------------------------------------------------
+
+
+def test_build_disagg_pool_smoke():
+    from repro.launch.serve import build_disagg_pool
+
+    _, bundle, params = _bundle()
+    pool = build_disagg_pool(bundle, params, prefill_replicas=1,
+                             decode_replicas=2,
+                             disagg_config=DisaggConfig(force="disagg"),
+                             **_KW)
+    assert isinstance(pool, DisaggPool) and len(pool.engines) == 3
+    want = _reference("ref")
+    got = _drain(pool, _mk_reqs())
+    assert got == want
+    with pytest.raises(ValueError, match=">= 1 prefill"):
+        build_disagg_pool(bundle, params, prefill_replicas=0, **_KW)
+
+
+@pytest.mark.skipif(len(jax.devices()) < 2,
+                    reason="TP=2 hand-off needs 2 devices")
+def test_disagg_tp2_bitwise():
+    """Prefill TP=2 mesh -> decode TP=2 mesh: per-shard gathers must
+    assemble full pages, and the drain must match the TP=2 colocated
+    engine bitwise."""
+    from repro.dist import ServeMesh
+
+    key = ("tp2",)
+    if key not in _STATE:
+        cfg2 = override(smoke_config(ARCHS["gemma-2b"]), num_kv_heads=2)
+        bundle2 = build(cfg2, FLAGS)
+        params2 = bundle2.init(jax.random.PRNGKey(7))
+        _STATE[key] = (
+            ServeEngine(bundle2, params2, **_KW, dist=ServeMesh.tp(2)),
+            DisaggPool(
+                [ServeEngine(bundle2, params2, **_KW, dist=ServeMesh.tp(2))],
+                [ServeEngine(bundle2, params2, **_KW, dist=ServeMesh.tp(2))],
+                DisaggConfig(force="disagg")))
+    single, pool = _STATE[key]
+    single.reset()
+    pool.reset()
+    reqs = _mk_reqs(n=3, max_new=6)
+    want = _drain(single, reqs)
+    got = _drain(pool, _mk_reqs(n=3, max_new=6))
+    assert got == want
+    assert pool.stats().prefill_imports >= 1

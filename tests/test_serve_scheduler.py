@@ -80,6 +80,57 @@ def test_cost_model_adopts_spec():
     assert fast.swap_s(4096) == slow.swap_s(4096)  # link, not HBM
 
 
+def _calibration(base, hbm_scale):
+    """A bench CalibrationResult whose fitted spec scales base HBM bw."""
+    import dataclasses
+
+    from repro.bench.calibrate import CalibrationResult
+
+    fitted = dataclasses.replace(base, hbm_bw=base.hbm_bw * hbm_scale)
+    return CalibrationResult(spec=fitted, base_spec=base,
+                             rms_log_error=0.0, n_samples=8)
+
+
+def test_calibration_does_not_rescale_host_link():
+    # regression: an HBM-fitted bandwidth_scale used to leak into the
+    # PCIe staging link, silently doubling swap bandwidth under a 2x fit
+    base = TPUSpec()
+    cal = _calibration(base, 2.0)
+    assert cal.bandwidth_scale == 2.0
+    plain = SwapCostModel(**PROD, spec=base)
+    cald = SwapCostModel(**PROD, spec=base, calibration=cal)
+    # HBM side adopts the fit...
+    assert cald.spec.hbm_bw == 2 * base.hbm_bw
+    assert cald.recompute_s(4096) == pytest.approx(plain.recompute_s(4096) / 2)
+    # ...but the staging link stays at its configured value
+    assert cald.host_link_bw == plain.host_link_bw
+    assert cald.swap_s(4096) == plain.swap_s(4096)
+
+
+def test_calibrated_break_even_pinned_under_nonunity_scale():
+    # parameters sitting between the fixed and buggy break-evens: with the
+    # fitted (2x) HBM, recompute costs 1.5e-7 s/token; shipping costs
+    # 2e-7 s/token on the TRUE link but 1e-7 on the wrongly-rescaled one —
+    # the old code flipped this decision to "swap"
+    base = TPUSpec(hbm_bw=100e9)
+    cm = SwapCostModel(weight_bytes=1.28e6, kv_bytes_per_token=1e4,
+                       prefill_chunk=64, spec=base, host_link_bw=1e11,
+                       calibration=_calibration(base, 2.0))
+    assert cm.host_link_bw == 1e11
+    assert cm.choose(4096, swappable=True) == "recompute"
+
+
+def test_cost_model_explicit_link_scale():
+    # a separately-measured link ratio IS honored — only the implicit
+    # HBM-fit leak is gone
+    base = TPUSpec()
+    cm = SwapCostModel(**PROD, spec=base,
+                       calibration=_calibration(base, 2.0), link_scale=0.5)
+    assert cm.host_link_bw == pytest.approx(0.5 * 32e9)
+    plain = SwapCostModel(**PROD, spec=base)
+    assert cm.swap_s(1024) == pytest.approx(2 * plain.swap_s(1024))
+
+
 # ---------------------------------------------------------------------------
 # Scheduler policy
 # ---------------------------------------------------------------------------
@@ -115,6 +166,18 @@ def test_prefill_order_priority_first_and_capped():
     assert uncapped == [1, 3, 0, 2]
 
 
+def test_prefill_chunks_per_tick_zero_rejected():
+    # regression: prefill_order silently clamped a 0 cap to 1 — now the
+    # config refuses values that could never advance a pending prefill
+    with pytest.raises(ValueError, match="prefill_chunks_per_tick=0"):
+        SchedulerConfig(prefill_chunks_per_tick=0)
+    with pytest.raises(ValueError, match="must be >= 1"):
+        SchedulerConfig(prefill_chunks_per_tick=-3)
+    assert SchedulerConfig(prefill_chunks_per_tick=1).prefill_chunks_per_tick \
+        == 1
+    assert SchedulerConfig().prefill_chunks_per_tick is None
+
+
 def test_pick_victim_ordering():
     sched = Scheduler()
     # no cost model: resume cost falls back to ctx tokens
@@ -140,9 +203,28 @@ def test_pick_victim_uses_cost_model():
     cm = SwapCostModel(**PROD)
     sched = Scheduler(cost_model=cm)
     # with the model, a short-ctx victim resumes cheaper than a long one
-    short = VictimInfo(slot=0, rid=0, priority=0, ctx_tokens=8, pages=1)
-    long_ = VictimInfo(slot=1, rid=1, priority=0, ctx_tokens=4096, pages=99)
-    assert sched.pick_victim([short, long_], swappable=True) == short
+    short = VictimInfo(slot=0, rid=0, priority=0, ctx_tokens=8, pages=1,
+                       swappable=True)
+    long_ = VictimInfo(slot=1, rid=1, priority=0, ctx_tokens=4096, pages=99,
+                       swappable=True)
+    assert sched.pick_victim([short, long_]) == short
+
+
+def test_pick_victim_mixed_swappable_prices_ring_as_recompute():
+    # regression: one global swappable flag priced an unswappable
+    # (ring/hybrid or mid-prefill) victim's resume at min(recompute, swap)
+    # and evicted the wrong slot in a mixed pool.  Under PROD numbers swap
+    # is far cheaper than recompute, so the old code saw the 1000-token
+    # ring victim as the cheapest resume — but its TRUE resume is a
+    # recompute costing more than shipping the 4096-token full victim.
+    cm = SwapCostModel(**PROD)
+    sched = Scheduler(cost_model=cm)
+    ring = VictimInfo(slot=0, rid=0, priority=0, ctx_tokens=1000, pages=4,
+                      swappable=False)
+    full = VictimInfo(slot=1, rid=1, priority=0, ctx_tokens=4096, pages=4,
+                      swappable=True)
+    assert cm.swap_s(full.ctx_tokens) < cm.recompute_s(ring.ctx_tokens)
+    assert sched.pick_victim([ring, full]) == full
 
 
 # ---------------------------------------------------------------------------
@@ -227,6 +309,41 @@ def test_host_tier_detects_corruption():
     assert not ok and got is entry          # entry retained until popped
     assert tier.bytes_in == 0               # failed gets move no bytes
     assert not tier.corrupt(99)             # unknown rid: no-op
+
+
+def test_host_tier_put_entry_installs_verbatim():
+    from repro.serve import corrupt_entry, make_transfer_entry
+
+    # a transfer buffer built off-tier installs as-is: no re-checksum, so
+    # in-transit corruption surfaces at get() on the receiving side
+    entry = make_transfer_entry(3, _fake_pages(), n_pages=3, length=20)
+    tier = HostKVTier()
+    tier.put_entry(entry)
+    assert 3 in tier and tier.bytes_out == entry.nbytes
+    got, ok = tier.get(3)
+    assert ok and got is entry
+
+    damaged = make_transfer_entry(4, _fake_pages(), n_pages=3, length=20)
+    corrupt_entry(damaged)
+    tier.put_entry(damaged)
+    _, ok = tier.get(4)
+    assert not ok
+
+
+def test_host_tier_bytes_in_skips_failed_entries():
+    # byte accounting across a mixed good/corrupt sequence: bytes_in must
+    # advance only by entries whose checksum verified
+    tier = HostKVTier()
+    good = tier.put(1, _fake_pages(), n_pages=3, length=20)
+    bad = tier.put(2, _fake_pages(), n_pages=3, length=20)
+    assert tier.corrupt(2)
+    _, ok = tier.get(2)
+    assert not ok and tier.bytes_in == 0
+    _, ok = tier.get(1)
+    assert ok and tier.bytes_in == good.nbytes
+    _, ok = tier.get(2)                     # retrying the bad entry: still 0
+    assert not ok and tier.bytes_in == good.nbytes
+    assert tier.bytes_out == good.nbytes + bad.nbytes
 
 
 def test_checksum_covers_exactly_real_pages():
